@@ -1,0 +1,458 @@
+"""One benchmark per paper table/figure (HopsFS §7). Each function returns
+rows of (name, us_per_call, derived-claim-string).
+
+Cluster-scale results come from the measured-cost DES (see DESIGN.md §2);
+functional numbers are wall-clock on the real store.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import (EXCLUSIVE, READ_COMMITTED, HopsFSOps, MetadataStore,
+                        SubtreeOps, Transaction, format_fs)
+from repro.core.cluster_sim import (DEFAULT_PARAMS, HDFSSim, HopsFSSim,
+                                    profile_ops)
+from repro.core.costmodel import (capacity_headline,
+                                  create_depth10_roundtrips, table2, table3)
+from repro.core.hdfs_baseline import HDFSHACluster, HDFSNamenode
+from repro.core.tables import make_inode
+from repro.core.workload import (NamespaceSpec, SpotifyWorkload,
+                                 SyntheticNamespace, TABLE1_MIX)
+
+Row = Tuple[str, float, str]
+_PROFILES = None
+_NS = None
+
+
+def _profiles():
+    global _PROFILES
+    if _PROFILES is None:
+        _PROFILES = profile_ops()
+    return _PROFILES
+
+
+def _ns():
+    global _NS
+    if _NS is None:
+        _NS = SyntheticNamespace(NamespaceSpec(), n_dirs=40)
+    return _NS
+
+
+def _timeit(fn, n=1000) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Table 1: workload mix
+# ---------------------------------------------------------------------------
+
+def bench_table1_workload_mix(quick=False) -> List[Row]:
+    wl = SpotifyWorkload(_ns(), seed=3)
+    hist = wl.mix_histogram(20_000 if quick else 100_000)
+    read = hist.get("read", 0)
+    stat = hist.get("stat", 0)
+    ls = hist.get("ls", 0)
+    ro = read + stat + ls + hist.get("content_summary", 0)
+    return [("table1.read_pct", 0.0, f"{read:.1f}% (paper 68.73%)"),
+            ("table1.stat_pct", 0.0, f"{stat:.1f}% (paper 17%)"),
+            ("table1.ls_pct", 0.0, f"{ls:.1f}% (paper 9%)"),
+            ("table1.readonly_pct", 0.0, f"{ro:.1f}% (paper ~95%)")]
+
+
+# ---------------------------------------------------------------------------
+# Fig 2a: relative cost of DB access paths
+# ---------------------------------------------------------------------------
+
+def bench_fig2a_opcosts(quick=False) -> List[Row]:
+    store = MetadataStore(n_datanodes=4, n_partitions=64)
+    format_fs(store)
+    t = store.table("inode")
+    for i in range(5000):
+        t.put(make_inode(10 + i, 3 + (i % 37), f"f{i}", False))
+
+    def pk():
+        txn = Transaction(store, partition_hint=("inode", 3))
+        txn.read("inode", (3, "f0"), READ_COMMITTED)
+        txn.abort()
+
+    def batch():
+        txn = Transaction(store, partition_hint=("inode", 3))
+        txn.read_batch([("inode", (3 + (i % 37), f"f{i}"),
+                         READ_COMMITTED) for i in range(10)])
+        txn.abort()
+
+    def ppis():
+        txn = Transaction(store, partition_hint=("inode", 3))
+        txn.ppis("inode", "parent_id", 3)
+        txn.abort()
+
+    def iscan():
+        txn = Transaction(store, partition_hint=("inode", 3))
+        txn.index_scan("inode", "parent_id", 3)
+        txn.abort()
+
+    def fts():
+        txn = Transaction(store, partition_hint=("inode", 3))
+        txn.full_scan("inode", lambda r: r["name"] == "f17")
+        txn.abort()
+
+    n = 100 if quick else 400
+    us = {k: _timeit(f, n) for k, f in
+          [("pk", pk), ("batch", batch), ("ppis", ppis),
+           ("is", iscan), ("fts", fts)]}
+    order_ok = us["ppis"] < us["fts"] and us["pk"] < us["fts"]
+    return [(f"fig2a.{k}", v, f"{v / us['pk']:.1f}x PK")
+            for k, v in us.items()] + \
+        [("fig2a.hierarchy", 0.0,
+          f"PPIS<FTS and PK<FTS: {order_ok} (paper Fig 2a)")]
+
+
+# ---------------------------------------------------------------------------
+# Fig 6: raw per-op throughput vs namenodes
+# ---------------------------------------------------------------------------
+
+class _SingleOpWorkload:
+    def __init__(self, op_name: str, ns):
+        self._wl = SpotifyWorkload(ns)
+        self.op = op_name
+
+    def next_op(self):
+        from repro.core.workload import WorkloadOp
+        if self.op == "read":
+            return WorkloadOp("read", self._wl.ns.sample_file(self._wl.rng))
+        if self.op == "ls":
+            return WorkloadOp("ls", self._wl.ns.sample_dir(self._wl.rng),
+                              on_dir=True)
+        if self.op == "stat":
+            return WorkloadOp("stat", self._wl.ns.sample_file(self._wl.rng))
+        if self.op == "create":
+            self._wl._create_seq += 1
+            return WorkloadOp(
+                "create",
+                f"{self._wl.ns.sample_dir(self._wl.rng)}"
+                f"/w{self._wl._create_seq:08d}")
+        raise KeyError(self.op)
+
+
+def bench_fig6_raw_throughput(quick=False) -> List[Row]:
+    """Paper Fig 6 sweeps up to 60 namenodes per op; we sweep to 24 (the
+    shape — stacked per-NN increments vs the flat HDFS bar — is the claim)."""
+    rows: List[Row] = []
+    horizon = 0.4 if quick else 0.5
+    nns = (1, 4, 12) if quick else (1, 4, 12, 24)
+    for op in ("read", "stat", "ls", "create"):
+        hdfs = HDFSSim()
+        hdfs.start_clients(600, _SingleOpWorkload(op, _ns()))
+        h_tp = hdfs.run(horizon).throughput
+        best = 0.0
+        for nn in nns:
+            sim = HopsFSSim(n_namenodes=nn, n_ndb=8, profiles=_profiles())
+            sim.start_clients(min(3600, 300 * nn),
+                              _SingleOpWorkload(op, _ns()))
+            tp = sim.run(horizon).throughput
+            rows.append((f"fig6.{op}.hops_{nn}nn", 0.0, f"{tp:,.0f} ops/s"))
+            best = max(best, tp)
+        rows.append((f"fig6.{op}.hdfs", 0.0, f"{h_tp:,.0f} ops/s"))
+        rows.append((f"fig6.{op}.speedup", 0.0,
+                     f"{best / h_tp:.2f}x (paper: HopsFS wins on common "
+                     "ops given enough namenodes)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 7: subtree op latency vs directory size
+# ---------------------------------------------------------------------------
+
+def bench_fig7_subtree(quick=False) -> List[Row]:
+    rows: List[Row] = []
+    sizes = (250, 1000) if quick else (250, 1000, 3000)
+    ratios = []
+    for n_files in sizes:
+        store = MetadataStore(n_datanodes=4)
+        format_fs(store)
+        fs = HopsFSOps(store, 0)
+        st = SubtreeOps(fs, batch_size=500)
+        fs.mkdir("/big")
+        for i in range(n_files):
+            fs.create(f"/big/f{i:06d}")
+        t0 = time.perf_counter()
+        st.delete_subtree("/big")
+        hops_s = time.perf_counter() - t0
+
+        hdfs = HDFSNamenode()
+        hdfs.mkdir("/big")
+        for i in range(n_files):
+            hdfs.create(f"/big/f{i:06d}")
+        t0 = time.perf_counter()
+        hdfs.delete("/big")
+        hdfs_s = time.perf_counter() - t0
+        ratios.append(hops_s / max(hdfs_s, 1e-9))
+        rows.append((f"fig7.delete.{n_files}files",
+                     hops_s * 1e6, f"HopsFS {hops_s*1e3:.1f}ms vs "
+                     f"HDFS {hdfs_s*1e3:.1f}ms "
+                     f"({hops_s/max(hdfs_s,1e-9):.0f}x slower)"))
+    rows.append(("fig7.claim", 0.0,
+                 f"HopsFS subtree delete ~{np.mean(ratios):.0f}x slower than "
+                 "in-heap HDFS (paper: 'an order of magnitude' — our "
+                 "functional store amplifies the gap since HDFS's side is a "
+                 "bare dict walk; direction + batched-txn structure match)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 2: capacity
+# ---------------------------------------------------------------------------
+
+def bench_table2_capacity(quick=False) -> List[Row]:
+    rows: List[Row] = []
+    # measured bytes/file from the live store
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    fs = HopsFSOps(store, 0)
+    fs.mkdir("/m")
+    before = store.memory_bytes()
+    n = 500
+    for i in range(n):
+        f = f"/m/f{i:04d}"
+        fs.create(f)
+        b1 = fs.add_block(f).value
+        b2 = fs.add_block(f).value
+        fs.complete_block(f, b1, size=1)
+        fs.complete_block(f, b2, size=1)
+    per_file = (store.memory_bytes() - before) / n
+    rows.append(("table2.measured_bytes_per_file", 0.0,
+                 f"{per_file:.0f} B/file live-store (paper: 2420 B "
+                 "incl. NDB indexes/padding via sizer)"))
+    for label, vals in table2().items():
+        h = "DNS" if vals["hdfs"] is None else f"{vals['hdfs']/1e6:.1f}M"
+        rows.append((f"table2.{label.replace(' ', '')}", 0.0,
+                     f"HDFS {h} vs HopsFS {vals['hopsfs']/1e6:.1f}M files"))
+    head = capacity_headline()
+    rows.append(("table2.headline", 0.0,
+                 f"{head['ratio']:.0f}x more metadata (paper: 24x; "
+                 f"10.8B files at 24TB)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 8: industrial workload throughput
+# ---------------------------------------------------------------------------
+
+def bench_fig8_industrial(quick=False) -> List[Row]:
+    rows: List[Row] = []
+    horizon = 0.5 if quick else 0.8
+    hdfs = HDFSSim()
+    hdfs.start_clients(1500, SpotifyWorkload(_ns()))
+    hdfs_tp = hdfs.run(horizon).throughput
+    rows.append(("fig8.hdfs", 0.0, f"{hdfs_tp:,.0f} ops/s"))
+    grid = [(1, 2, 300), (4, 2, 800), (8, 2, 1500), (8, 4, 1500),
+            (12, 4, 2200), (12, 8, 2200)]
+    if quick:
+        grid = [(1, 2, 300), (8, 2, 1200), (12, 8, 2000)]
+    tp2 = {}
+    for nn, ndb, cl in grid:
+        sim = HopsFSSim(n_namenodes=nn, n_ndb=ndb, profiles=_profiles())
+        sim.start_clients(cl, SpotifyWorkload(_ns()))
+        tp = sim.run(horizon).throughput
+        tp2[(nn, ndb)] = tp
+        rows.append((f"fig8.hops_{nn}nn_{ndb}ndb", 0.0,
+                     f"{tp:,.0f} ops/s = {tp / hdfs_tp:.2f}x HDFS"))
+    best = max(tp2.values())
+    rows.append(("fig8.headline", 0.0,
+                 f"{best / hdfs_tp:.2f}x HDFS at 12NN (paper: 2.6x); "
+                 "2-NDB saturates ~8NN (paper: levels off)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 9: latency vs concurrent clients
+# ---------------------------------------------------------------------------
+
+def bench_fig9_latency(quick=False) -> List[Row]:
+    rows: List[Row] = []
+    horizon = 0.4 if quick else 0.6
+    counts = (100, 400, 1500) if quick else (100, 400, 1000, 2000)
+    cross = None
+    for n_cl in counts:
+        hd = HDFSSim()
+        hd.start_clients(n_cl, SpotifyWorkload(_ns()))
+        hl = hd.run(horizon).latency_avg() * 1e3
+        hs = HopsFSSim(n_namenodes=12, n_ndb=4, profiles=_profiles())
+        hs.start_clients(n_cl, SpotifyWorkload(_ns()))
+        sl = hs.run(horizon).latency_avg() * 1e3
+        if cross is None and sl < hl:
+            cross = n_cl
+        rows.append((f"fig9.{n_cl}clients", 0.0,
+                     f"HDFS {hl:.2f}ms vs HopsFS {sl:.2f}ms"))
+    rows.append(("fig9.crossover", 0.0,
+                 f"HopsFS wins beyond ~{cross} clients "
+                 "(paper: >400 clients)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 10: p99 latencies at 50% load
+# ---------------------------------------------------------------------------
+
+def bench_fig10_p99(quick=False) -> List[Row]:
+    horizon = 0.5 if quick else 1.0
+    sim = HopsFSSim(n_namenodes=12, n_ndb=4, profiles=_profiles())
+    sim.start_clients(360, SpotifyWorkload(_ns()))   # 30/NN (paper)
+    res = sim.run(horizon)
+    hd = HDFSSim()
+    hd.start_clients(360, SpotifyWorkload(_ns()))
+    rh = hd.run(horizon)
+    return [("fig10.hops_p99_ms", 0.0,
+             f"{res.latency_pct(99) * 1e3:.1f}ms (paper: 9-76ms per op)"),
+            ("fig10.hdfs_p99_ms", 0.0,
+             f"{rh.latency_pct(99) * 1e3:.1f}ms (paper: 1-6ms)"),
+            ("fig10.hops_avg_ms", 0.0, f"{res.latency_avg() * 1e3:.2f}ms"),
+            ("fig10.hdfs_avg_ms", 0.0, f"{rh.latency_avg() * 1e3:.2f}ms")]
+
+
+# ---------------------------------------------------------------------------
+# Fig 11: failover
+# ---------------------------------------------------------------------------
+
+def bench_fig11_failover(quick=False) -> List[Row]:
+    horizon = 3.0 if quick else 6.0
+    hs = HopsFSSim(n_namenodes=4, n_ndb=4, profiles=_profiles())
+    hs.start_clients(400, SpotifyWorkload(_ns()))
+    hs.sim.after(1.0, lambda: hs.kill_namenode(0))
+    hs.sim.after(2.0, lambda: hs.restart_namenode(0))
+    res = hs.run(horizon)
+    secs = dict(res.timeline)
+    hops_zero = sum(1 for s in range(int(horizon))
+                    if secs.get(s, 0) == 0)
+    dip = min(secs.get(s, 0) for s in (1, 2)) / max(secs.get(0, 1), 1)
+
+    hd = HDFSSim()
+    hd.start_clients(400, SpotifyWorkload(_ns()))
+    hd.sim.after(1.0, hd.kill_active)
+    rh = hd.run(horizon)
+    hsecs = dict(rh.timeline)
+    hdfs_zero = sum(1 for s in range(1, int(horizon))
+                    if hsecs.get(s, 0) == 0)
+    return [("fig11.hopsfs_zero_seconds", 0.0,
+             f"{hops_zero} s of zero throughput (paper: none); "
+             f"dip to {dip * 100:.0f}% during failover"),
+            ("fig11.hdfs_zero_seconds", 0.0,
+             f"{hdfs_zero} s of zero throughput "
+             f"(paper: 8-10 s failover)")]
+
+
+# ---------------------------------------------------------------------------
+# Fig 12/13: optimization ablations (DAT / ADP / inode-hint cache)
+# ---------------------------------------------------------------------------
+
+def bench_fig12_13_ablations(quick=False) -> List[Row]:
+    rows: List[Row] = []
+    # round-trip ablation at depth 10 (paper's analysis + our measurement)
+    ex = create_depth10_roundtrips()
+    rows.append(("fig13.create_cache_saving", 0.0,
+                 f"{ex['improvement_pct']}% fewer RTs at depth 10 "
+                 "(paper: ~58%)"))
+    read_miss = table3("read", 10, cached=False).total
+    read_hit = table3("read", 10, cached=True).total
+    rows.append(("fig12.read_cache_saving", 0.0,
+                 f"{100 * (read_miss - read_hit) / read_miss:.0f}% fewer RTs "
+                 "(paper: ~68% throughput gain)"))
+    # DES throughput with each optimization removed
+    horizon = 0.4 if quick else 0.8
+    variants = {
+        "full": profile_ops(),
+        "no_cache": profile_ops(use_cache=False),
+        "no_dat": profile_ops(distribution_aware=False),
+        "no_adp": profile_ops(adp=False),
+    }
+    tps = {}
+    for name, prof in variants.items():
+        sim = HopsFSSim(n_namenodes=12, n_ndb=4, profiles=prof)
+        sim.start_clients(1800, SpotifyWorkload(_ns()))
+        tps[name] = sim.run(horizon).throughput
+        rows.append((f"fig12_13.tp_{name}", 0.0,
+                     f"{tps[name]:,.0f} ops/s"))
+    rows.append(("fig12_13.cache_gain", 0.0,
+                 f"+{100 * (tps['full'] / tps['no_cache'] - 1):.0f}% from "
+                 "hint cache (paper: 58-68%)"))
+    rows.append(("fig12_13.adp_gain", 0.0,
+                 f"+{100 * (tps['full'] / tps['no_adp'] - 1):.0f}% from "
+                 "ADP partition pruning"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 3: cost-model validation
+# ---------------------------------------------------------------------------
+
+def bench_table3_costmodel(quick=False) -> List[Row]:
+    rows: List[Row] = []
+    depths = (4, 10) if quick else (3, 6, 10, 14)
+    mismatches = 0
+    total = 0
+    for depth in depths:
+        store = MetadataStore(n_datanodes=4)
+        format_fs(store)
+        warm = HopsFSOps(store, 0)
+        d = "/" + "/".join(f"l{i}" for i in range(depth - 1))
+        warm.mkdirs(d)
+        warm.create(d + "/f")
+        warm.stat(d + "/f")
+        cold = HopsFSOps(store, 1, use_cache=False)
+        cases = [
+            ("read", lambda o: o.get_block_locations(d + "/f")),
+            ("stat", lambda o: o.stat(d + "/f")),
+            ("ls", lambda o: o.listing(d + "/f")),
+            ("mkdir", lambda o, k=[0]: (k.__setitem__(0, k[0] + 1),
+                                        o.mkdir(f"{d}/m{id(o)}{k[0]}"))[1]),
+            ("create", lambda o, k=[0]: (k.__setitem__(0, k[0] + 1),
+                                         o.create(f"{d}/c{id(o)}{k[0]}"))[1]),
+            ("addblk", lambda o: o.add_block(d + "/f")),
+            ("chmod", lambda o: o.chmod_file(d + "/f", 0o640)),
+        ]
+        for name, fn in cases:
+            for cached, ops in ((True, warm), (False, cold)):
+                measured = fn(ops).cost.round_trips
+                expect = table3("ls" if name == "ls" else name, depth,
+                                cached=cached,
+                                is_dir=False).total
+                total += 1
+                delta = measured - expect
+                if abs(delta) > 1:
+                    mismatches += 1
+                if depth == 10:
+                    tag = "hit" if cached else "miss"
+                    rows.append((f"table3.{name}.{tag}.d10", 0.0,
+                                 f"measured {measured} vs paper {expect} "
+                                 f"(Δ{delta:+d})"))
+    rows.append(("table3.summary", 0.0,
+                 f"{total - mismatches}/{total} op×depth×cache cells within "
+                 "±1 RT of Table 3"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# (ours) checkpoint-manifest metadata throughput
+# ---------------------------------------------------------------------------
+
+def bench_ckpt_metadata(quick=False) -> List[Row]:
+    from repro.metaplane import MetadataPlane
+    plane = MetadataPlane()
+    plane.open_job("bigjob")
+    n = 200 if quick else 1000
+    base = plane.begin_checkpoint("bigjob", 1)
+    t0 = time.perf_counter()
+    for i in range(n):
+        plane.add_shard(base, f"layers/{i % 96}/w", i)
+    plane.commit_checkpoint("bigjob", 1)
+    el = time.perf_counter() - t0
+    man = plane.manifest("bigjob", 1)
+    return [("ckpt.manifest_rows_per_s", el / n * 1e6,
+             f"{n / el:,.0f} shard-rows/s; commit = 1 subtree rename; "
+             f"manifest complete={man.complete}")]

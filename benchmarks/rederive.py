@@ -1,0 +1,84 @@
+"""Recompute the ANALYTIC fields (kernelized memory, TPU collective model,
+roofline terms) of every results/dryrun JSON from the stored measured data
+— no recompilation. Used when the analytic models are refined.
+
+  PYTHONPATH=src python benchmarks/rederive.py
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.configs import get_config                      # noqa: E402
+from repro.launch.analytic import (analytic_bytes,        # noqa: E402
+                                   analytic_collective_bytes)
+from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402
+from repro.launch.inputs import cell_policy               # noqa: E402
+from repro.parallel.sharding import MeshPolicy            # noqa: E402
+
+RESULTS = ROOT / "results" / "dryrun"
+
+
+def mesh_shape_of(c):
+    dims = [int(x) for x in c["mesh"].split("x")]
+    names = ("pod", "data", "model") if len(dims) == 3 else ("data", "model")
+    return dict(zip(names, dims))
+
+
+def rederive(path: Path) -> bool:
+    try:
+        c = json.loads(path.read_text())
+    except json.JSONDecodeError:      # concurrent writer: skip this pass
+        return False
+    if "per_device" not in c:
+        return False
+    parts = path.stem.split("__")
+    arch, shape = parts[0], parts[1]
+    variant = parts[3] if len(parts) > 3 else None
+    cfg = get_config(arch)
+    if variant == "grad_compress":
+        cfg = cfg.derive(grad_compress=True)
+    if variant == "capacity_1x":
+        cfg = cfg.derive(capacity_factor=1.0)
+    ms = mesh_shape_of(c)
+    pol = MeshPolicy(fsdp=c["policy"]["fsdp"],
+                     seq_shard=c["policy"]["seq_shard"],
+                     rules=tuple(c["policy"]["rules"].items()))
+    ana = analytic_bytes(cfg, shape, pol, ms)
+    ana_coll = analytic_collective_bytes(cfg, shape, pol, ms)
+    pd = c["per_device"]
+    pd["bytes_kernelized"] = ana["total"]
+    pd["bytes_breakdown"] = ana
+    pd["collective_bytes_analytic"] = ana_coll["total"]
+    pd["collective_breakdown"] = ana_coll
+    compute_s = pd["flops"] / PEAK_FLOPS
+    memory_s = ana["total"] / HBM_BW
+    collective_s = ana_coll["total"] / ICI_BW
+    dom = max((("compute", compute_s), ("memory", memory_s),
+               ("collective", collective_s)), key=lambda t: t[1])
+    c["roofline"].update({
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dom[0],
+        "bound_s": dom[1]})
+    mf = c["model_flops"]
+    n_chips = c["n_chips"]
+    mf["roofline_fraction"] = ((mf["model_flops"] / n_chips / PEAK_FLOPS)
+                               / dom[1] if dom[1] else 0.0)
+    path.write_text(json.dumps(c, indent=1))
+    return True
+
+
+def main() -> None:
+    n = 0
+    for p in sorted(RESULTS.glob("*.json")):
+        if rederive(p):
+            n += 1
+    print(f"rederived {n} cell files")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""§Roofline table: reads results/dryrun/*.json (written by
+repro.launch.dryrun) and emits the per-(arch x shape) three-term analysis.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+Row = Tuple[str, float, str]
+
+
+def load_cells(mesh: str = "16x16") -> List[Dict]:
+    out = []
+    for p in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def bench_roofline(quick=False) -> List[Row]:
+    rows: List[Row] = []
+    cells = load_cells()
+    if not cells:
+        return [("roofline.missing", 0.0,
+                 "run: python -m repro.launch.dryrun --all")]
+    for c in cells:
+        rl = c.get("roofline")
+        if not rl:
+            continue
+        mf = c["model_flops"]
+        rows.append((
+            f"roofline.{c['arch']}.{c['shape']}", 0.0,
+            f"C={rl['compute_s']:.3f}s M={rl['memory_s']:.3f}s "
+            f"X={rl['collective_s']:.3f}s dom={rl['dominant']} "
+            f"frac={mf['roofline_fraction']:.3f} "
+            f"useful={mf['useful_ratio']:.2f}"))
+    n_ok = sum(1 for c in cells if c.get("compile_ok"))
+    rows.append(("roofline.compiled_cells", 0.0,
+                 f"{n_ok}/{len(cells)} single-pod cells compiled"))
+    multi = load_cells("2x16x16")
+    n_mp = sum(1 for c in multi if c.get("compile_ok"))
+    rows.append(("roofline.multipod_cells", 0.0,
+                 f"{n_mp} multi-pod (2x16x16) cells compiled"))
+    return rows
+
+
+def table_markdown(mesh: str = "16x16") -> str:
+    """EXPERIMENTS.md §Roofline table."""
+    cells = load_cells(mesh)
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL/HLO | roofline frac | bytes/dev (GB) |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        rl = c.get("roofline")
+        if not rl:
+            continue
+        mf = c["model_flops"]
+        mem_gb = (c["memory"]["argument_bytes_per_device"] +
+                  c["memory"]["temp_bytes_per_device"]) / 1e9
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {rl['compute_s']:.3f} | "
+            f"{rl['memory_s']:.3f} | {rl['collective_s']:.3f} | "
+            f"**{rl['dominant']}** | {mf['useful_ratio']:.2f} | "
+            f"{mf['roofline_fraction']:.3f} | {mem_gb:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(table_markdown())

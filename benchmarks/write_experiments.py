@@ -1,0 +1,129 @@
+"""Regenerate the generated sections of EXPERIMENTS.md from
+results/dryrun/*.json (dry-run summary, roofline table, observations,
+perf-variant diffs).
+
+  PYTHONPATH=src python benchmarks/write_experiments.py
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.roofline import load_cells, table_markdown   # noqa: E402
+from repro.configs import ARCHS, LONG_CONTEXT_OK, SHAPES, cells  # noqa: E402
+
+RESULTS = ROOT / "results" / "dryrun"
+
+
+def dryrun_summary() -> str:
+    single = {c["arch"] + "|" + c["shape"]: c for c in load_cells("16x16")}
+    multi = {c["arch"] + "|" + c["shape"]: c for c in load_cells("2x16x16")}
+    lines = ["| arch | shape | 16x16 (256 chips) | 2x16x16 (512 chips) | "
+             "args GB/dev | temp GB/dev |", "|---|---|---|---|---|---|"]
+    n_ok = n_mp = n_skip = 0
+    for a, s, skip in cells(include_skipped=True):
+        key = f"{a}|{s}"
+        if skip:
+            lines.append(f"| {a} | {s} | SKIP (full attention @500k; "
+                         "DESIGN.md §3.3) | SKIP | — | — |")
+            n_skip += 1
+            continue
+        c1, c2 = single.get(key), multi.get(key)
+        ok1 = "✅" if c1 and c1.get("compile_ok") else "❌"
+        ok2 = "✅" if c2 and c2.get("compile_ok") else "❌"
+        n_ok += bool(c1 and c1.get("compile_ok"))
+        n_mp += bool(c2 and c2.get("compile_ok"))
+        mem = c1["memory"] if c1 else None
+        arg = f"{mem['argument_bytes_per_device'] / 1e9:.2f}" if mem else "—"
+        tmp = f"{mem['temp_bytes_per_device'] / 1e9:.2f}" if mem else "—"
+        lines.append(f"| {a} | {s} | {ok1} | {ok2} | {arg} | {tmp} |")
+    lines.append("")
+    lines.append(f"**{n_ok}/34 single-pod cells, {n_mp}/34 multi-pod cells "
+                 f"compiled; {n_skip}/6 long_500k cells skipped by design "
+                 "(40 assigned cells total).**")
+    return "\n".join(lines)
+
+
+def observations() -> str:
+    cs = load_cells("16x16")
+    if not cs:
+        return "(pending)"
+    doms = {}
+    best = None
+    for c in cs:
+        rl = c.get("roofline")
+        if not rl:
+            continue
+        doms[rl["dominant"]] = doms.get(rl["dominant"], 0) + 1
+        f = c["model_flops"]["roofline_fraction"]
+        if c["kind"] == "train" and (best is None or f > best[1]):
+            best = (f"{c['arch']}/{c['shape']}", f)
+    out = [f"- dominant-term census: {doms} — the mesh is collective-bound "
+           "for most cells at 16-way TP; compute-bound only for the "
+           "largest dense matmuls (nemotron/command-r prefill+train).",
+           f"- best train roofline fraction: {best[0]} at {best[1]:.2f} — "
+           "big dense models amortize collectives best.",
+           "- decode cells: absolute per-step terms are milliseconds; "
+           "FSDP param-gathers dominate unless weights are replicated "
+           "over `data` (see §Perf serve_replicated).",
+           "- qwen1_5 (20 heads) and kv<16 GQA archs pay a replicated-"
+           "attention tax on the 16-way model axis (DESIGN.md §hardware)."]
+    return "\n".join(out)
+
+
+def perf_log() -> str:
+    rows = []
+    for p in sorted(RESULTS.glob("*__16x16__*.json")):
+        v = json.loads(p.read_text())
+        arch, shape, _, variant = p.stem.split("__")
+        base_p = RESULTS / f"{arch}__{shape}__16x16.json"
+        if not base_p.exists():
+            continue
+        b = json.loads(base_p.read_text())
+        br, vr = b["roofline"], v["roofline"]
+        rows.append(
+            f"| {arch}/{shape} | {variant} | "
+            f"{br['bound_s']:.4f}s ({br['dominant']}) | "
+            f"{vr['bound_s']:.4f}s ({vr['dominant']}) | "
+            f"{(vr['bound_s'] / br['bound_s'] - 1) * 100:+.1f}% | "
+            f"{b['model_flops']['roofline_fraction']:.4f} -> "
+            f"{v['model_flops']['roofline_fraction']:.4f} |")
+    if not rows:
+        return "(pending)"
+    return "\n".join(
+        ["| cell | variant | baseline bound | variant bound | Δ | "
+         "roofline frac |", "|---|---|---|---|---|---|"] + rows)
+
+
+def main() -> None:
+    exp = ROOT / "EXPERIMENTS.md"
+    text = exp.read_text()
+    text = _replace(text, "DRYRUN_SUMMARY", dryrun_summary())
+    text = _replace(text, "ROOFLINE_TABLE", table_markdown())
+    text = _replace(text, "ROOFLINE_OBSERVATIONS", observations())
+    text = _replace(text, "PERF_LOG", perf_log() + "\n\n" + PERF_NARRATIVE)
+    exp.write_text(text)
+    print("EXPERIMENTS.md updated")
+
+
+def _replace(text: str, marker: str, content: str) -> str:
+    tag = f"<!-- {marker} -->"
+    begin = f"<!-- BEGIN {marker} -->"
+    end = f"<!-- END {marker} -->"
+    block = f"{begin}\n{content}\n{end}"
+    if begin in text:
+        pre = text.split(begin)[0]
+        post = text.split(end)[1]
+        return pre + block + post
+    return text.replace(tag, block)
+
+
+PERF_NARRATIVE = "<!-- narrative is maintained by hand below -->"
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Quickstart: the paper's system in 60 seconds.
+
+Spins up a HopsFS metadata cluster (3 stateless namenodes over a 4-node
+partitioned store), runs file-system ops with Table-3 cost accounting,
+executes a subtree operation, survives a namenode failure, and shows the
+capacity headline.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import (Client, MetadataStore, NamenodeCluster, SubtreeOps,
+                        format_fs)
+from repro.core.costmodel import capacity_headline, create_depth10_roundtrips
+
+
+def main() -> None:
+    print("== HopsFS quickstart ==")
+    store = MetadataStore(n_datanodes=4, replication=2)
+    format_fs(store)
+    cluster = NamenodeCluster(store, n_namenodes=3)
+    client = Client(cluster, policy="round_robin")
+
+    # namespace ops through different namenodes, one shared store
+    client.execute("mkdirs", "/user/alice/project")
+    for i in range(5):
+        client.execute("create", f"/user/alice/project/part-{i:04d}")
+    ls = client.execute("ls", "/user/alice/project")
+    print(f"ls /user/alice/project -> {ls.value}")
+    print(f"   cost: {ls.cost.round_trips} DB round trips "
+          f"({ls.cost.ppis} partition-pruned scans)")
+
+    read = client.execute("read", "/user/alice/project/part-0000")
+    print(f"read part-0000 -> {read.cost.round_trips} round trips "
+          f"(cache hit: depth-independent)")
+
+    # subtree operation (paper §6): batched, isolated, crash-safe
+    nn = cluster.alive_namenodes()[0]
+    res = SubtreeOps(nn.ops).delete_subtree("/user/alice/project")
+    print(f"delete_subtree -> removed {res.value['deleted']} inodes in "
+          f"batched parallel transactions")
+
+    # kill a namenode: clients fail over transparently (paper §7.6.1)
+    client2 = Client(cluster, policy="sticky", seed=7)
+    client2.execute("mkdirs", "/tmp/x")
+    cluster.kill(client2._sticky)
+    cluster.tick(); cluster.tick(); cluster.tick()
+    client2.execute("create", "/tmp/x/after-failover")
+    print("namenode killed; client re-selected a live namenode "
+          "transparently (no downtime)")
+
+    # headline claims
+    ex = create_depth10_roundtrips()
+    print(f"inode hint cache: create@depth10 {ex['no_cache']}->"
+          f"{ex['cache']} round trips ({ex['improvement_pct']}% saved; "
+          f"paper: 58%)")
+    cap = capacity_headline()
+    print(f"capacity: {cap['ratio']:.0f}x more metadata than HDFS "
+          f"(paper: 24x)")
+
+
+if __name__ == "__main__":
+    main()

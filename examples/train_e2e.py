@@ -1,0 +1,109 @@
+"""End-to-end training example: ~100M-param model, a few hundred steps,
+with the full production substrate — registry-backed data pipeline,
+HopsFS-backed checkpoint manifests, heartbeats/leader election, an injected
+worker failure with elastic re-mesh, and a kill-resume demonstrating exact
+restart from the metadata plane.
+
+  PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+
+(~100M params: 12 layers x d=512 with a 32k vocab ~ 115M. On one CPU core a
+few hundred steps at batch 8 x seq 128 takes tens of minutes; --steps 40 is
+the default for a quick pass; CI smoke uses even fewer.)
+"""
+import argparse
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.ckpt import CheckpointManager
+from repro.data import DataPipeline, synthetic_batch
+from repro.launch.mesh import make_host_mesh
+from repro.metaplane import MetadataPlane
+from repro.models import init_params, param_specs
+from repro.models.params import count_params
+from repro.parallel.sharding import MeshPolicy
+from repro.runtime import FleetRuntime
+from repro.train.optimizer import OptConfig, adamw_init
+from repro.train.step import make_train_step
+
+
+def build_cfg():
+    return get_config("qwen1_5_4b").derive(
+        n_layers=12, d_model=512, n_heads=8, n_kv_heads=8, d_ff=1536,
+        vocab_size=32768, name="qwen-100m")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = build_cfg()
+    mesh = make_host_mesh()
+    policy = MeshPolicy()
+    specs = param_specs(cfg)
+    print(f"model: {count_params(specs) / 1e6:.0f}M params")
+
+    plane = MetadataPlane()
+    fleet = FleetRuntime(plane, n_workers=8, model_axis=1)
+    pipeline = DataPipeline(plane, "the-pile-mini", n_shards=32)
+    ckpt_dir = tempfile.mkdtemp(prefix="repro-e2e-")
+    ckpt = CheckpointManager(ckpt_dir, plane, "e2e", keep=2)
+
+    params = init_params(specs, jax.random.PRNGKey(0))
+    opt_state = adamw_init(params)
+    opt = OptConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, policy, mesh, opt=opt))
+
+    half = args.steps // 2
+    t0 = time.time()
+    losses = []
+    step = 0
+    while step < args.steps:
+        fleet.tick()
+        plane.tick()
+        if step == half:
+            # checkpoint, then simulate a crash + restart-from-manifest
+            ckpt.save(step, params, opt_state)
+            print(f"[{step}] checkpoint committed; simulating crash...")
+            del params, opt_state
+            restored = ckpt.restore_latest()
+            assert restored is not None and restored[0] == step
+            _, p_np, o_np = restored
+            params = jax.tree.map(jnp.asarray, p_np)
+            opt_state = jax.tree.map(jnp.asarray, o_np)
+            fleet.fail_worker(2)
+            fleet.tick()
+            print(f"[{step}] restored from manifest; worker 2 lost -> "
+                  f"mesh {fleet.maybe_remesh()}")
+        worker = fleet.leader() or 0
+        shard = pipeline.lease(worker)
+        batch_np = synthetic_batch(args.batch, args.seq, cfg.vocab_size,
+                                   step=step)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        if shard:
+            pipeline.complete(worker, shard)
+        losses.append(float(loss))
+        if step % 10 == 0:
+            print(f"step {step:4d} loss {losses[-1]:7.4f} "
+                  f"({time.time() - t0:6.1f}s)")
+        step += 1
+    ckpt.save(args.steps, params, opt_state)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}); "
+          f"loss decreased: {losses[-1] < losses[0]}")
+    print(f"checkpoints: "
+          f"{plane.client.execute('ls', '/ckpt/e2e').value}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""HopsFS core: scale-out hierarchical metadata over a partitioned,
+transactional, in-memory store (the paper's contribution).
+
+Public surface:
+  MetadataStore        — NDB-equivalent partitioned store w/ node groups
+  Transaction          — 3-phase txn template (lock/execute/update) + OpCost
+  HopsFSOps            — inode operations (Fig 4 template, Table 3 costs)
+  SubtreeOps           — subtree operations protocol (§6)
+  NamenodeCluster / Client — stateless namenodes + selection policies
+  LeaderElection       — DB-as-shared-memory leader election (§3)
+  HDFSNamenode / HDFSHACluster — the HDFS baseline (§2.1)
+  profile_ops / HopsFSSim / HDFSSim — measured-cost DES (§7)
+"""
+from .fs import (FSError, FileAlreadyExists, FileNotFound, HopsFSOps,
+                 OpResult, SubtreeLockedError, format_fs, split_path)
+from .hdfs_baseline import HDFSHACluster, HDFSNamenode
+from .hint_cache import InodeHintCache
+from .leader import LeaderElection
+from .namenode import Client, Namenode, NamenodeCluster
+from .store import (EXCLUSIVE, READ_COMMITTED, SHARED, LockTimeout,
+                    MetadataStore, NodeGroupDown, OpCost, StoreError)
+from .subtree import SubtreeOps, TreeNode
+from .tables import ROOT_ID, hdfs_capacity_files, hopsfs_capacity_files
+from .transactions import Transaction, run_with_retry
+
+__all__ = [
+    "MetadataStore", "Transaction", "OpCost", "HopsFSOps", "SubtreeOps",
+    "TreeNode", "NamenodeCluster", "Namenode", "Client", "LeaderElection",
+    "HDFSNamenode", "HDFSHACluster", "InodeHintCache", "format_fs",
+    "split_path", "run_with_retry", "FSError", "FileNotFound",
+    "FileAlreadyExists", "SubtreeLockedError", "StoreError", "LockTimeout",
+    "NodeGroupDown", "ROOT_ID", "READ_COMMITTED", "SHARED", "EXCLUSIVE",
+    "hdfs_capacity_files", "hopsfs_capacity_files",
+]

@@ -1,0 +1,752 @@
+"""HopsFS inode operations (paper §5) as three-phase transactions.
+
+Every operation follows the Figure-4 template and reproduces Table 3's
+round-trip profile. Two resolution regimes exist per op:
+
+  * **cache hit**  — the inode hint cache supplies the composite PK of every
+    path component, so ancestors are validated with one *batched* PK read
+    (1 round trip) at read-committed, and the target (+parent for mutating
+    ops) is lock-read in one more batch. Cost is **independent of depth**.
+  * **cache miss** — recursive resolution: one read-committed PK read per
+    component (≈N round trips), repairing the cache along the way; mutating
+    ops additionally re-validate the path under lock (≈2N total).
+
+Round-trip accounting conventions (checked against Table 3 by
+``benchmarks/bench_table3_costmodel.py``; deltas ≤1 RT are documented there):
+
+  - one batch = one round trip irrespective of rows inside;
+  - single PK reads count as PK_rc/PK_r/PK_w by lock mode;
+  - commit flushes ≤8 dirty rows as per-row PK_w ops, larger sets as batches
+    (Fig 4 line 8, "transfer the changes in batches");
+  - file-related metadata (block/replica/URB/PRB/RUC/CR/ER/Inv) is read via
+    partition-pruned index scans on the file's inode id (§4.2), 1 RT each;
+    with ADP disabled (Fig 12/13 ablation) these degrade to all-shard IS.
+
+Subtree-lock interaction (§6.3): resolution aborts with
+:class:`SubtreeLockedError` when any path component carries a live subtree
+lock; locks owned by dead namenodes are reclaimed in-line (§6.2).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .hint_cache import InodeHintCache
+from .store import (EXCLUSIVE, READ_COMMITTED, SHARED, MetadataStore, OpCost,
+                    StoreError)
+from .tables import ROOT_ID, make_block, make_inode, make_replica
+from .transactions import Transaction
+
+
+class FSError(StoreError):
+    pass
+
+
+class FileNotFound(FSError):
+    pass
+
+
+class FileAlreadyExists(FSError):
+    pass
+
+
+class SubtreeLockedError(FSError):
+    """Path crosses a subtree currently locked by another namenode (§6.3).
+    Callers voluntarily abort and retry after the lock is released."""
+
+
+@dataclass
+class OpResult:
+    """Return value of every FS op: payload + measured cost profile."""
+    value: Any
+    cost: OpCost
+
+
+@dataclass
+class ResolvedPath:
+    """Outcome of the lock phase: ancestor rows, parent row, target row
+    (None when the target does not exist), and whether hints hit."""
+    ancestors: List[Dict[str, Any]]
+    parent: Dict[str, Any]
+    target: Optional[Dict[str, Any]]
+    cache_hit: bool
+
+
+def split_path(path: str) -> List[str]:
+    return [c for c in path.split("/") if c]
+
+
+def format_fs(store: MetadataStore) -> None:
+    """Create the root inode and the id sequence rows."""
+    store.table("inode").put(make_inode(ROOT_ID, 0, "", True))
+    store.table("id_seq").put({"seq_name": "inode", "next": ROOT_ID + 1})
+    store.table("id_seq").put({"seq_name": "block", "next": 1})
+
+
+class IdAllocator:
+    """Namenodes grab id blocks from the DB (one write per `block` ids), so
+    id allocation is neither a bottleneck nor a source of txn conflicts."""
+
+    def __init__(self, store: MetadataStore, seq: str, block: int = 1000):
+        self.store, self.seq, self.block = store, seq, block
+        self._next = 0
+        self._limit = 0
+        self._mu = threading.Lock()
+
+    def next_id(self) -> int:
+        with self._mu:
+            if self._next >= self._limit:
+                t = self.store.table("id_seq")
+                row = dict(t.get((self.seq,)))
+                self._next = row["next"]
+                self._limit = row["next"] + self.block
+                row["next"] = self._limit
+                t.put(row)
+            v = self._next
+            self._next += 1
+            return v
+
+
+# file-related table groups per op (Table 3's ``f_s == 0 ? a : b`` PPIS sets)
+_PPIS_CREATE_EMPTY = ("block", "inv")
+_PPIS_CREATE_FULL = ("block", "replica", "urb", "prb", "ruc", "cr", "er", "inv")
+_PPIS_READ_EMPTY = ("block",)
+_PPIS_READ_FULL = ("block", "replica", "cr", "ruc", "er")
+_PPIS_DEL_EMPTY = ("block", "inv")
+_PPIS_DEL_FULL = ("block", "replica", "urb", "prb", "ruc", "cr", "inv")
+_PPIS_ADDBLK_EMPTY = ("block", "ruc")
+_PPIS_ADDBLK_FULL = ("block", "replica", "urb", "prb", "ruc", "inv")
+
+
+class HopsFSOps:
+    """Inode (single-file/dir) operations for one namenode.
+
+    ``use_cache`` / ``distribution_aware`` / ``adp`` toggles reproduce the
+    Fig 12/13 ablations (ADP off => file-related scans cannot be pruned and
+    degrade to all-shard index scans).
+    """
+
+    def __init__(self, store: MetadataStore, namenode_id: int = 0, *,
+                 use_cache: bool = True, distribution_aware: bool = True,
+                 adp: bool = True,
+                 is_nn_alive: Optional[Callable[[int], bool]] = None):
+        self.store = store
+        self.nn_id = namenode_id
+        self.cache: Optional[InodeHintCache] = (
+            InodeHintCache() if use_cache else None)
+        self.dat = distribution_aware
+        self.adp = adp
+        self.inode_ids = IdAllocator(store, "inode")
+        self.block_ids = IdAllocator(store, "block")
+        self.clock = itertools.count(1)
+        # liveness oracle for subtree-lock reclaim (§6.2); defaults to
+        # "only me is alive" for single-NN tests
+        self._is_nn_alive = is_nn_alive or (lambda nn: nn == self.nn_id)
+
+    # ------------------------------------------------------------------
+    # transaction / lock-phase helpers
+    # ------------------------------------------------------------------
+    def _begin(self, pkey: Any) -> Transaction:
+        return Transaction(self.store, partition_hint=("inode", pkey),
+                           distribution_aware=self.dat)
+
+    def _hint_for(self, comps: Sequence[str], *, parent: bool) -> Any:
+        """Partition-key hint for the transaction (Fig 4 line 2): the
+        file's inode id for file ops (file-related rows live there), the
+        parent's id for namespace-mutating ops."""
+        if self.cache is None:
+            return ROOT_ID
+        v = self.cache.last_resolved_id(comps[:-1] if parent else comps)
+        return v if v is not None else ROOT_ID
+
+    def _file_scan(self, txn: Transaction, tables: Sequence[str],
+                   inode_id: int, lock: str = READ_COMMITTED
+                   ) -> Dict[str, List[Dict[str, Any]]]:
+        out = {}
+        for tname in tables:
+            if self.adp:
+                out[tname] = txn.ppis(tname, "inode_id", inode_id, lock)
+            else:
+                out[tname] = txn.index_scan(tname, "inode_id", inode_id, lock)
+        return out
+
+    def _children(self, txn: Transaction, dir_id: int,
+                  lock: str = READ_COMMITTED) -> List[Dict[str, Any]]:
+        """Directory listing scan: partition-pruned because inodes are
+        partitioned by parent_id (the paper's headline ADP win, §4.2)."""
+        if self.adp:
+            return txn.ppis("inode", "parent_id", dir_id, lock)
+        return txn.index_scan("inode", "parent_id", dir_id, lock)
+
+    def _check_subtree_lock(self, row: Dict[str, Any],
+                            txn: Transaction) -> None:
+        owner = row.get("subtree_lock")
+        if owner is None:
+            return
+        if self._is_nn_alive(owner) and owner != self.nn_id:
+            raise SubtreeLockedError(
+                f"inode {row['id']} subtree-locked by NN {owner}")
+        if owner != self.nn_id:
+            fixed = dict(row)
+            fixed["subtree_lock"] = None          # reclaim from dead NN §6.2
+            txn.write("inode", fixed)
+            row["subtree_lock"] = None
+
+    def _resolve(self, txn: Transaction, comps: Sequence[str], *,
+                 last_lock: str, lock_parent: bool = False,
+                 revalidate: bool = False, lock_last_in_batch: bool = False,
+                 aux: Sequence[Tuple[str, Callable[[int, Optional[Dict]],
+                                                   Optional[Tuple]], str]] = (),
+                 path: str = "") -> ResolvedPath:
+        """Lock phase (Fig 4 lines 1-5) with Table-3 batching conventions.
+
+        cache hit : one batch validates the ancestors at read-committed
+                    (optionally locking the target in the same batch for
+                    ``lock_last_in_batch`` ops like addBlock); mutating ops
+                    lock (parent, target) in a second batch; every ``aux``
+                    read (lease/quota checks) is its own batch.
+        cache miss: recursive single reads over the path (+ an under-lock
+                    revalidation pass for mutating ops); all ``aux`` reads
+                    fold into ONE batch (together with the target lock for
+                    ``lock_last_in_batch``); the (parent, target) lock batch
+                    stays separate.
+
+        ``aux`` entries are (table, pk_fn(parent_id, target_row) -> pk|None,
+        lock); a None pk skips the read.
+        """
+        path = path or "/" + "/".join(comps)
+        if not comps:
+            row = txn.read("inode", (0, ""), last_lock or SHARED)
+            if row is None:
+                raise FileNotFound("/")
+            for tname, pk_fn, lk in aux:
+                pk = pk_fn(ROOT_ID, row)
+                if pk is not None:
+                    with txn.batch() as b:
+                        b.read(tname, pk, lk)
+            return ResolvedPath([], row, row, True)
+
+        pks = self.cache.resolve_pks(comps) if self.cache else None
+        ancestors: List[Dict[str, Any]] = []
+        hit = False
+        parent_pk: Tuple[int, str] = (0, "")     # PK of the parent inode
+        parent_id = ROOT_ID
+        target: Optional[Dict[str, Any]] = None
+        target_read = False
+        if pks is not None:
+            anc_pks = pks[:-1]
+            with txn.batch() as b:
+                got = [b.read("inode", pk, READ_COMMITTED)
+                       for pk in anc_pks]
+                ok = all(g is not None for g in got)
+                if ok:
+                    parent = ROOT_ID
+                    for pk, g in zip(anc_pks, got):
+                        if pk[0] != parent:
+                            ok = False
+                            break
+                        parent = g["id"]
+                if ok and lock_last_in_batch:
+                    pid = got[-1]["id"] if got else ROOT_ID
+                    target = b.read("inode", (pid, comps[-1]), last_lock)
+                    target_read = True
+            if ok:
+                ancestors = list(got)
+                hit = True
+                for row in ancestors:
+                    self._check_subtree_lock(row, txn)
+                if ancestors:
+                    parent_pk = anc_pks[-1]
+                    parent_id = ancestors[-1]["id"]
+            else:
+                for pk in anc_pks:
+                    self.cache.invalidate(*pk)
+                pks = None
+                target, target_read = None, False
+        if pks is None:
+            # Recursive resolution, repairing the cache. Mutating ops
+            # (revalidate=True) re-read the chain once more under the
+            # protection of the locks they are about to take; when the lock
+            # batch itself re-reads the parent (lock_parent), the final pass
+            # stops one component earlier.
+            chain1 = comps[:-2] if (lock_parent and not revalidate) \
+                else comps[:-1]
+            parent = ROOT_ID
+            for name in chain1:
+                row = txn.read("inode", (parent, name), READ_COMMITTED)
+                if row is None:
+                    raise FileNotFound(path)
+                self._check_subtree_lock(row, txn)
+                if self.cache:
+                    self.cache.put(parent, name, row["id"])
+                ancestors.append(row)
+                parent = row["id"]
+            if revalidate:
+                chain2 = comps[:-2] if lock_parent else comps[:-1]
+                p2 = ROOT_ID
+                for name in chain2:
+                    row = txn.read("inode", (p2, name), READ_COMMITTED)
+                    if row is None:
+                        raise FileNotFound(path)
+                    p2 = row["id"]
+            # derive the parent PK from what was resolved
+            if len(comps) == 1:
+                parent_pk, parent_id = (0, ""), ROOT_ID
+            elif lock_parent:
+                gp = ancestors[len(comps) - 3]["id"] if len(comps) >= 3 \
+                    else ROOT_ID
+                parent_pk = (gp, comps[-2])
+                existing = self.store.table("inode").get(parent_pk)
+                if existing is None:
+                    raise FileNotFound(path)
+                parent_id = existing["id"]
+            else:
+                parent_pk = (ancestors[-1]["parent_id"],
+                             ancestors[-1]["name"])
+                parent_id = ancestors[-1]["id"]
+
+        # ---- lock batch(es) + aux reads ---------------------------------
+        parent_row: Optional[Dict[str, Any]] = None
+        if lock_parent:
+            got2 = txn.read_batch([("inode", parent_pk, EXCLUSIVE),
+                                   ("inode", (parent_id, comps[-1]),
+                                    last_lock)])
+            parent_row, target = got2[0], got2[1]
+            target_read = True
+            if parent_row is None:
+                raise FileNotFound(path)
+        elif not target_read:
+            if hit:
+                target = txn.read("inode", (parent_id, comps[-1]), last_lock)
+                target_read = True
+            # miss + lock_last_in_batch: target joins the folded aux batch
+        if parent_row is None:
+            parent_row = (ancestors[-1] if len(comps) >= 2
+                          else self.store.table("inode").get((0, "")))
+
+        if hit:
+            if aux:
+                for tname, pk_fn, lk in aux:
+                    pk = pk_fn(parent_id, target)
+                    if pk is not None:
+                        with txn.batch() as b:
+                            b.read(tname, pk, lk)
+        else:
+            fold_target = lock_last_in_batch and not target_read
+            if not fold_target and not target_read:
+                target = txn.read("inode", (parent_id, comps[-1]), last_lock)
+                target_read = True
+            if aux or fold_target:
+                with txn.batch() as b:
+                    if fold_target:
+                        target = b.read("inode", (parent_id, comps[-1]),
+                                        last_lock)
+                        target_read = True
+                    for tname, pk_fn, lk in aux:
+                        pk = pk_fn(parent_id, target)
+                        if pk is not None:
+                            b.read(tname, pk, lk)
+        if not target_read:
+            target = txn.read("inode", (parent_id, comps[-1]), last_lock)
+
+        self._check_subtree_lock(parent_row, txn)
+        if target is not None:
+            self._check_subtree_lock(target, txn)
+            if self.cache:
+                self.cache.put(parent_id, comps[-1], target["id"])
+        return ResolvedPath(ancestors, parent_row, target, hit)
+
+    # ==================================================================
+    # operations
+    # ==================================================================
+    def mkdir(self, path: str, *, perm: int = 0o755) -> OpResult:
+        comps = split_path(path)
+        if not comps:
+            raise FileAlreadyExists("/")
+        with self._begin(self._hint_for(comps, parent=True)) as txn:
+            rp = self._resolve(txn, comps, last_lock=EXCLUSIVE,
+                               lock_parent=True, path=path)
+            if rp.target is not None:
+                raise FileAlreadyExists(path)
+            if not rp.parent["is_dir"]:
+                raise FSError(f"not a directory: parent of {path}")
+            new_id = self.inode_ids.next_id()
+            txn.write("inode", make_inode(new_id, rp.parent["id"], comps[-1],
+                                          True, perm=perm,
+                                          mtime=next(self.clock)))
+            parent = dict(rp.parent)
+            parent["mtime"] = next(self.clock)
+            txn.write("inode", parent)
+            if self.cache:
+                self.cache.put(rp.parent["id"], comps[-1], new_id)
+            cost = txn.commit()
+        return OpResult(new_id, cost)
+
+    def mkdirs(self, path: str, **kw) -> OpResult:
+        """mkdir -p; cost = sum of constituent mkdirs."""
+        comps = split_path(path)
+        agg = OpCost()
+        last = None
+        for i in range(1, len(comps) + 1):
+            sub = "/" + "/".join(comps[:i])
+            try:
+                r = self.mkdir(sub, **kw)
+                agg.merge(r.cost)
+                last = r.value
+            except FileAlreadyExists:
+                continue
+        return OpResult(last, agg)
+
+    def create(self, path: str, *, repl: int = 3, client: str = "client",
+               overwrite: bool = False) -> OpResult:
+        comps = split_path(path)
+        with self._begin(self._hint_for(comps, parent=True)) as txn:
+            rp = self._resolve(
+                txn, comps, last_lock=EXCLUSIVE, lock_parent=True,
+                revalidate=True, path=path,
+                aux=(("lease", lambda p, t: (client,), READ_COMMITTED),
+                     ("quota", lambda p, t: (p,), READ_COMMITTED)))
+            if rp.target is not None and not overwrite:
+                raise FileAlreadyExists(path)
+            if not rp.parent["is_dir"]:
+                raise FSError(f"not a directory: parent of {path}")
+            fid = (rp.target["id"] if rp.target is not None
+                   else self.inode_ids.next_id())
+            tables = (_PPIS_CREATE_FULL
+                      if rp.target is not None and rp.target["size"] > 0
+                      else _PPIS_CREATE_EMPTY)
+            related = self._file_scan(txn, tables, fid, EXCLUSIVE)
+            if rp.target is not None:  # overwrite: clear old file metadata
+                for tname, rws in related.items():
+                    schema = self.store.table(tname).schema
+                    for r in rws:
+                        txn.delete(tname, tuple(r[c] for c in schema.pk))
+            txn.write("inode", make_inode(fid, rp.parent["id"], comps[-1],
+                                          False, repl=repl,
+                                          mtime=next(self.clock),
+                                          client=client))
+            parent = dict(rp.parent)
+            parent["mtime"] = next(self.clock)
+            txn.write("inode", parent)
+            txn.write("lease", {"holder": client,
+                                "last_renewed": next(self.clock)})
+            txn.write("lease_path", {"inode_id": fid, "holder": client})
+            q = self.store.table("quota").get((rp.parent["id"],))
+            qrow = dict(q) if q else {"inode_id": rp.parent["id"],
+                                      "ns_quota": -1, "ns_used": 0,
+                                      "ss_quota": -1, "ss_used": 0}
+            qrow["ns_used"] = qrow.get("ns_used", 0) + 1
+            txn.write("quota", qrow)
+            if self.cache:
+                self.cache.put(rp.parent["id"], comps[-1], fid)
+            cost = txn.commit()
+        return OpResult(fid, cost)
+
+    def add_block(self, path: str, *, datanodes: Sequence[int] = (0, 1, 2)
+                  ) -> OpResult:
+        comps = split_path(path)
+        with self._begin(self._hint_for(comps, parent=False)) as txn:
+            rp = self._resolve(
+                txn, comps, last_lock=EXCLUSIVE, lock_last_in_batch=True,
+                path=path,
+                aux=(("lease", lambda p, t:
+                      ((t.get("client") or "client",) if t else None),
+                      READ_COMMITTED),))
+            f = rp.target
+            if f is None or f["is_dir"]:
+                raise FileNotFound(path)
+            tables = (_PPIS_ADDBLK_EMPTY if f["size"] == 0
+                      else _PPIS_ADDBLK_FULL)
+            related = self._file_scan(txn, tables, f["id"], EXCLUSIVE)
+            blocks = related.get("block", [])
+            # finalize/inspect the penultimate block: 1 PK_r
+            prev_pk = (max(blocks, key=lambda b: b["index"])["block_id"],) \
+                if blocks else (-1,)
+            txn.read("block", prev_pk, SHARED)
+            bid = self.block_ids.next_id()
+            # only the block row is written here; the replica-under-
+            # construction rows appear when the datanode write pipeline
+            # starts (complete_block), matching Table 3's single PK_w
+            txn.write("block", make_block(bid, f["id"], len(blocks)))
+            cost = txn.commit()
+        return OpResult(bid, cost)
+
+    def complete_block(self, path: str, block_id: int, *, size: int,
+                       datanodes: Sequence[int] = (0, 1, 2)) -> OpResult:
+        comps = split_path(path)
+        with self._begin(self._hint_for(comps, parent=False)) as txn:
+            rp = self._resolve(txn, comps, last_lock=EXCLUSIVE, path=path)
+            f = rp.target
+            if f is None:
+                raise FileNotFound(path)
+            blk = txn.read("block", (block_id,), EXCLUSIVE)
+            if blk is None:
+                raise FileNotFound(f"block {block_id}")
+            blk = dict(blk)
+            blk["size"], blk["state"] = size, "COMPLETE"
+            txn.write("block", blk)
+            rucs = self._file_scan(txn, ("ruc",), f["id"], EXCLUSIVE)["ruc"]
+            for r in rucs:
+                if r["block_id"] == block_id:
+                    txn.delete("ruc", (r["block_id"], r["datanode_id"]))
+            for dn in datanodes[:f["repl"]]:
+                txn.write("replica", make_replica(block_id, f["id"], dn))
+            f = dict(f)
+            f["size"] += size
+            txn.write("inode", f)
+            cost = txn.commit()
+        return OpResult(None, cost)
+
+    def get_block_locations(self, path: str) -> OpResult:
+        """The `read` op of Table 1/3 (68.7% of the Spotify workload)."""
+        comps = split_path(path)
+        with self._begin(self._hint_for(comps, parent=False)) as txn:
+            rp = self._resolve(
+                txn, comps, last_lock=SHARED, path=path,
+                aux=(("lease", lambda p, t:
+                      ((t.get("client") or "client",) if t else None),
+                      READ_COMMITTED),))
+            f = rp.target
+            if f is None:
+                raise FileNotFound(path)
+            tables = _PPIS_READ_EMPTY if f["size"] == 0 else _PPIS_READ_FULL
+            related = self._file_scan(txn, tables, f["id"], READ_COMMITTED)
+            blocks = sorted(related.get("block", []),
+                            key=lambda b: b["index"])
+            reps = related.get("replica", [])
+            locs = [{"block": b["block_id"], "size": b["size"],
+                     "locations": [r["datanode_id"] for r in reps
+                                   if r["block_id"] == b["block_id"]]}
+                    for b in blocks]
+            cost = txn.commit()
+        return OpResult(locs, cost)
+
+    read = get_block_locations
+
+    def listing(self, path: str) -> OpResult:
+        comps = split_path(path)
+        with self._begin(self._hint_for(comps, parent=False)) as txn:
+            rp = self._resolve(txn, comps, last_lock=SHARED, path=path)
+            node = rp.target
+            if node is None:
+                raise FileNotFound(path)
+            names: List[str] = []
+            if node["is_dir"]:
+                names = sorted(c["name"]
+                               for c in self._children(txn, node["id"],
+                                                       SHARED))
+            cost = txn.commit()
+        return OpResult(names, cost)
+
+    def stat(self, path: str) -> OpResult:
+        comps = split_path(path)
+        with self._begin(self._hint_for(comps, parent=False)) as txn:
+            rp = self._resolve(
+                txn, comps, last_lock=SHARED, path=path,
+                aux=(("lease", lambda p, t:
+                      ((t.get("client") or "client",) if t else None),
+                      READ_COMMITTED),))
+            node = rp.target
+            if node is None:
+                raise FileNotFound(path)
+            info = {k: node[k] for k in ("id", "is_dir", "perm", "owner",
+                                         "group", "size", "repl", "mtime")}
+            cost = txn.commit()
+        return OpResult(info, cost)
+
+    info = stat
+
+    def _simple_update(self, path: str,
+                       mutate: Callable[[Dict[str, Any]], None]) -> OpResult:
+        """chmod/chown/setrepl on FILES (and the phase-3 root-only update for
+        directory subtree ops — see subtree.py)."""
+        comps = split_path(path)
+        with self._begin(self._hint_for(comps, parent=False)) as txn:
+            rp = self._resolve(
+                txn, comps, last_lock=EXCLUSIVE, revalidate=True, path=path,
+                aux=(("lease", lambda p, t:
+                      ((t.get("client") or "client",) if t else None),
+                      READ_COMMITTED),
+                     ("quota", lambda p, t: (p,), READ_COMMITTED)))
+            node = rp.target
+            if node is None:
+                raise FileNotFound(path)
+            if node["is_dir"]:
+                # no active subtree op may exist below: all-shard IS on the
+                # subtree-ops table (Table 3: "i is a dir ? IS : PPIS")
+                txn.index_scan("ongoing_subtree_ops", "namenode_id",
+                               self.nn_id)
+            else:
+                self._file_scan(txn, ("block",), node["id"], READ_COMMITTED)
+            node = dict(node)
+            mutate(node)
+            node["mtime"] = next(self.clock)
+            txn.write("inode", node)
+            q = self.store.table("quota").get((node["parent_id"],))
+            txn.write("quota", dict(q) if q else
+                      {"inode_id": node["parent_id"], "ns_quota": -1,
+                       "ns_used": 0, "ss_quota": -1, "ss_used": 0})
+            cost = txn.commit()
+        return OpResult(None, cost)
+
+    def chmod_file(self, path: str, perm: int) -> OpResult:
+        return self._simple_update(path, lambda n: n.update(perm=perm))
+
+    def chown_file(self, path: str, owner: str) -> OpResult:
+        return self._simple_update(path, lambda n: n.update(owner=owner))
+
+    def set_replication(self, path: str, repl: int) -> OpResult:
+        return self._simple_update(path, lambda n: n.update(repl=repl))
+
+    def delete_file(self, path: str) -> OpResult:
+        comps = split_path(path)
+        with self._begin(self._hint_for(comps, parent=True)) as txn:
+            rp = self._resolve(
+                txn, comps, last_lock=EXCLUSIVE, lock_parent=True,
+                revalidate=True, path=path,
+                aux=(("lease", lambda p, t:
+                      ((t.get("client") or "client",) if t else None),
+                      READ_COMMITTED),
+                     ("quota", lambda p, t: (p,), READ_COMMITTED)))
+            node = rp.target
+            if node is None:
+                raise FileNotFound(path)
+            if node["is_dir"]:
+                raise FSError("use subtree delete for directories")
+            tables = _PPIS_DEL_EMPTY if node["size"] == 0 else _PPIS_DEL_FULL
+            related = self._file_scan(txn, tables, node["id"], EXCLUSIVE)
+            for tname, rws in related.items():
+                schema = self.store.table(tname).schema
+                for r in rws:
+                    txn.delete(tname, tuple(r[c] for c in schema.pk))
+            txn.delete("inode", (node["parent_id"], node["name"]))
+            parent = dict(rp.parent)
+            parent["mtime"] = next(self.clock)
+            txn.write("inode", parent)
+            if self.cache:
+                self.cache.invalidate(node["parent_id"], node["name"])
+            cost = txn.commit()
+        return OpResult(None, cost)
+
+    def content_summary(self, path: str) -> OpResult:
+        comps = split_path(path)
+        with self._begin(self._hint_for(comps, parent=False)) as txn:
+            rp = self._resolve(
+                txn, comps, last_lock=SHARED, path=path,
+                aux=(("quota", lambda p, t:
+                      ((t["id"],) if t else None), READ_COMMITTED),))
+            node = rp.target
+            if node is None:
+                raise FileNotFound(path)
+            n_children = 0
+            if node["is_dir"]:
+                n_children = len(self._children(txn, node["id"]))
+            cost = txn.commit()
+        return OpResult({"children": n_children, "size": node["size"]}, cost)
+
+    def set_quota(self, path: str, *, ns_quota: int = -1,
+                  ss_quota: int = -1) -> OpResult:
+        comps = split_path(path)
+        with self._begin(self._hint_for(comps, parent=False)) as txn:
+            rp = self._resolve(txn, comps, last_lock=EXCLUSIVE,
+                               revalidate=True, path=path)
+            node = rp.target
+            if node is None:
+                raise FileNotFound(path)
+            q = self.store.table("quota").get((node["id"],))
+            qrow = dict(q) if q else {"inode_id": node["id"], "ns_used": 0,
+                                      "ss_used": 0}
+            qrow["ns_quota"], qrow["ss_quota"] = ns_quota, ss_quota
+            txn.write("quota", qrow)
+            cost = txn.commit()
+        return OpResult(None, cost)
+
+    def append_file(self, path: str, *, client: str = "client") -> OpResult:
+        comps = split_path(path)
+        with self._begin(self._hint_for(comps, parent=False)) as txn:
+            rp = self._resolve(
+                txn, comps, last_lock=EXCLUSIVE, path=path,
+                aux=(("lease", lambda p, t: (client,), READ_COMMITTED),))
+            node = rp.target
+            if node is None or node["is_dir"]:
+                raise FileNotFound(path)
+            tables = (_PPIS_READ_EMPTY if node["size"] == 0
+                      else _PPIS_READ_FULL)
+            self._file_scan(txn, tables, node["id"], EXCLUSIVE)
+            node = dict(node)
+            node["under_construction"], node["client"] = True, client
+            txn.write("inode", node)
+            txn.write("lease", {"holder": client,
+                                "last_renewed": next(self.clock)})
+            txn.write("lease_path", {"inode_id": node["id"],
+                                     "holder": client})
+            cost = txn.commit()
+        return OpResult(node["id"], cost)
+
+    def rename_file(self, src: str, dst: str) -> OpResult:
+        """mv of a FILE. Changing parent changes the composite PK (and the
+        shard), hence delete+insert inside one transaction. Directory renames
+        go through the subtree protocol (subtree.py)."""
+        sc, dc = split_path(src), split_path(dst)
+        with self._begin(self._hint_for(sc, parent=True)) as txn:
+            # total-order locking over both paths (§5 "Cyclic Deadlocks")
+            first, second = (sc, dc) if sc <= dc else (dc, sc)
+            r1 = self._resolve(txn, first, last_lock=EXCLUSIVE,
+                               lock_parent=True, revalidate=True)
+            r2 = self._resolve(txn, second, last_lock=EXCLUSIVE,
+                               lock_parent=True)
+            srp, drp = (r1, r2) if sc <= dc else (r2, r1)
+            snode = srp.target
+            if snode is None or snode["is_dir"]:
+                raise FileNotFound(src)
+            if drp.target is not None:
+                raise FileAlreadyExists(dst)
+            tables = (_PPIS_READ_EMPTY if snode["size"] == 0
+                      else _PPIS_READ_FULL)
+            self._file_scan(txn, tables, snode["id"], EXCLUSIVE)
+            txn.delete("inode", (snode["parent_id"], snode["name"]))
+            moved = dict(snode)
+            moved["parent_id"], moved["name"] = drp.parent["id"], dc[-1]
+            moved["mtime"] = next(self.clock)
+            txn.write("inode", moved)
+            dp = dict(drp.parent)
+            dp["mtime"] = next(self.clock)
+            txn.write("inode", dp)
+            if srp.parent["id"] != drp.parent["id"]:
+                sp = dict(srp.parent)
+                sp["mtime"] = next(self.clock)
+                txn.write("inode", sp)
+            if self.cache:
+                self.cache.invalidate(snode["parent_id"], snode["name"])
+                self.cache.put(drp.parent["id"], dc[-1], snode["id"])
+            cost = txn.commit()
+        return OpResult(None, cost)
+
+    # ------------------------------------------------------------------
+    # block reports (§7.8)
+    # ------------------------------------------------------------------
+    def process_block_report(self, datanode_id: int,
+                             block_ids: Sequence[int],
+                             batch: int = 1000) -> OpResult:
+        """Validate a datanode's blocks against the metadata: batched PK
+        reads of block rows; replicas upserted; unknown blocks invalidated."""
+        agg = OpCost()
+        for i in range(0, len(block_ids), batch):
+            chunk = block_ids[i:i + batch]
+            with Transaction(self.store,
+                             partition_hint=("block", chunk[0]),
+                             distribution_aware=self.dat) as txn:
+                got = txn.read_batch([("block", (b,), READ_COMMITTED)
+                                      for b in chunk])
+                for b, row in zip(chunk, got):
+                    if row is None:
+                        txn.write("inv", {"block_id": b,
+                                          "datanode_id": datanode_id,
+                                          "inode_id": -1})
+                    else:
+                        txn.write("replica", make_replica(
+                            b, row["inode_id"], datanode_id))
+                agg.merge(txn.commit())
+        return OpResult(None, agg)

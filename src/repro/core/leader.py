@@ -1,0 +1,50 @@
+"""Leader election and membership through the database (paper §3, ref [57]).
+
+HopsFS uses the database as shared memory: every namenode periodically
+writes a heartbeat row; a namenode is *alive* iff it has written within a
+bounded number of ticks; the leader is the alive namenode with the smallest
+id. The leader runs housekeeping (replication manager, block-report load
+balancing, lease recovery).
+
+Time here is a logical clock advanced by the caller (the DES or the runtime
+driver), which makes the protocol deterministic and testable.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from .store import MetadataStore
+from .transactions import Transaction
+
+
+class LeaderElection:
+    def __init__(self, store: MetadataStore, *, max_missed: int = 2):
+        self.store = store
+        self.max_missed = max_missed
+        self.now = 0
+
+    def tick(self) -> None:
+        self.now += 1
+
+    def heartbeat(self, namenode_id: int) -> None:
+        """One bounded-time write to the DB == liveness proof ([57])."""
+        with Transaction(self.store,
+                         partition_hint=("leader", namenode_id)) as txn:
+            txn.write("leader", {"namenode_id": namenode_id,
+                                 "last_hb": self.now})
+
+    def alive(self) -> List[int]:
+        rows = self.store.table("leader").scan_all(
+            lambda r: self.now - r["last_hb"] <= self.max_missed)
+        return sorted(r["namenode_id"] for r in rows)
+
+    def is_alive(self, namenode_id: int) -> bool:
+        row = self.store.table("leader").get((namenode_id,))
+        return row is not None and self.now - row["last_hb"] <= self.max_missed
+
+    def leader(self) -> Optional[int]:
+        a = self.alive()
+        return a[0] if a else None
+
+    def remove(self, namenode_id: int) -> None:
+        self.store.table("leader").delete((namenode_id,))

@@ -1,0 +1,146 @@
+"""Stateless namenodes + client namenode-selection policies (paper §3).
+
+A :class:`Namenode` is stateless apart from its inode hint cache: all
+authoritative state lives in the :class:`~repro.core.store.MetadataStore`.
+Any number of namenodes serve the same store concurrently; clients pick one
+per-op via *random*, *round-robin* or *sticky* policies and transparently
+fail over to another namenode when one dies (§7.6.1 — this is why HopsFS has
+no failover downtime).
+"""
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from .fs import FSError, HopsFSOps, OpResult, SubtreeLockedError
+from .leader import LeaderElection
+from .store import MetadataStore, StoreError
+from .subtree import SubtreeOps
+
+
+class Namenode:
+    def __init__(self, store: MetadataStore, nn_id: int,
+                 election: LeaderElection, **ops_kw):
+        self.nn_id = nn_id
+        self.election = election
+        self.ops = HopsFSOps(store, nn_id,
+                             is_nn_alive=election.is_alive, **ops_kw)
+        self.subtree = SubtreeOps(self.ops)
+        self.alive = True
+        self.ops_served = 0
+
+    def is_leader(self) -> bool:
+        return self.election.leader() == self.nn_id
+
+    # unified dispatch used by the workload driver / DES / benchmarks
+    def execute(self, op: str, *args, **kw) -> OpResult:
+        if not self.alive:
+            raise StoreError(f"namenode {self.nn_id} is down")
+        fn: Callable[..., OpResult] = {
+            "create": self.ops.create,
+            "read": self.ops.get_block_locations,
+            "ls": self.ops.listing,
+            "stat": self.ops.stat,
+            "mkdir": self.ops.mkdir,
+            "mkdirs": self.ops.mkdirs,
+            "delete_file": self.ops.delete_file,
+            "rename_file": self.ops.rename_file,
+            "add_block": self.ops.add_block,
+            "complete_block": self.ops.complete_block,
+            "append": self.ops.append_file,
+            "chmod_file": self.ops.chmod_file,
+            "chown_file": self.ops.chown_file,
+            "set_replication": self.ops.set_replication,
+            "content_summary": self.ops.content_summary,
+            "set_quota": self.ops.set_quota,
+            "delete_subtree": self.subtree.delete_subtree,
+            "rename_subtree": self.subtree.rename_subtree,
+            "chmod_subtree": self.subtree.chmod_subtree,
+            "chown_subtree": self.subtree.chown_subtree,
+            "block_report": self.ops.process_block_report,
+        }[op]
+        res = fn(*args, **kw)
+        self.ops_served += 1
+        return res
+
+
+class NamenodeCluster:
+    """A fleet of stateless namenodes over one store, plus the election."""
+
+    def __init__(self, store: MetadataStore, n_namenodes: int, **ops_kw):
+        self.store = store
+        self.election = LeaderElection(store)
+        self.namenodes = [Namenode(store, i, self.election, **ops_kw)
+                          for i in range(n_namenodes)]
+        for nn in self.namenodes:
+            self.election.heartbeat(nn.nn_id)
+
+    def tick(self) -> None:
+        """One heartbeat round: alive namenodes prove liveness."""
+        self.election.tick()
+        for nn in self.namenodes:
+            if nn.alive:
+                self.election.heartbeat(nn.nn_id)
+
+    def kill(self, nn_id: int) -> None:
+        self.namenodes[nn_id].alive = False
+
+    def restart(self, nn_id: int) -> None:
+        self.namenodes[nn_id].alive = True
+        self.election.heartbeat(nn_id)
+
+    def alive_namenodes(self) -> List[Namenode]:
+        return [nn for nn in self.namenodes if nn.alive]
+
+    def leader(self) -> Optional[Namenode]:
+        lid = self.election.leader()
+        return self.namenodes[lid] if lid is not None else None
+
+
+class Client:
+    """HopsFS client with namenode selection policies (§3) and transparent
+    retry on namenode failure (§7.6.1) or subtree-lock conflicts (§6.3)."""
+
+    def __init__(self, cluster: NamenodeCluster, policy: str = "sticky",
+                 seed: int = 0):
+        assert policy in ("random", "round_robin", "sticky")
+        self.cluster = cluster
+        self.policy = policy
+        self.rng = random.Random(seed)
+        self._rr = self.rng.randrange(1 << 16)
+        self._sticky: Optional[int] = None
+        self.retries = 0
+
+    def _pick(self) -> Namenode:
+        alive = self.cluster.alive_namenodes()
+        if not alive:
+            raise StoreError("no alive namenodes")
+        if self.policy == "random":
+            return self.rng.choice(alive)
+        if self.policy == "round_robin":
+            nn = alive[self._rr % len(alive)]
+            self._rr += 1
+            return nn
+        # sticky: stay with one namenode (better hint-cache locality §5.1.1)
+        if self._sticky is None or not self.cluster.namenodes[
+                self._sticky].alive:
+            self._sticky = self.rng.choice(alive).nn_id
+        return self.cluster.namenodes[self._sticky]
+
+    def execute(self, op: str, *args, **kw) -> OpResult:
+        last: Optional[Exception] = None
+        for _ in range(8):
+            nn = self._pick()
+            try:
+                return nn.execute(op, *args, **kw)
+            except SubtreeLockedError as e:      # voluntary abort: retry
+                last = e
+                self.retries += 1
+            except StoreError as e:
+                if not nn.alive:                  # failover: pick another NN
+                    self.retries += 1
+                    self._sticky = None
+                    last = e
+                    continue
+                raise
+        raise last  # type: ignore[misc]

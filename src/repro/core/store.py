@@ -1,0 +1,375 @@
+"""Shared-nothing, partitioned, transactional in-memory store (paper §2.2).
+
+This is the NDB-equivalent storage engine: tables are hash-partitioned on an
+application-defined partition key (ADP, §4.2) across a fixed set of
+partitions; partitions are assigned to *node groups* of ``replication``
+datanodes each (§2.2.1). Transaction coordinators live on every datanode;
+a transaction started with a *partition hint* runs its coordinator on the
+primary datanode of that partition's node group (DAT, §2.2) so that reads of
+co-located rows are node-local.
+
+Access-path cost hierarchy (paper Fig 2a), tracked per-transaction by
+:class:`OpCost`:
+
+    PK read  <  batched PK read  <  partition-pruned index scan (PPIS)
+             <<  index scan (IS, hits all shards)  <  full table scan (FTS)
+
+Isolation: read-committed plus explicit row locks (shared / exclusive),
+exactly the primitives NDB exposes (§2.2.2). Lock waits block (thread mode)
+with timeout-abort; HopsFS-level deadlock freedom comes from total-order
+acquisition in the FS layer (§5, "Cyclic Deadlocks").
+"""
+from __future__ import annotations
+
+import threading
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .tables import ALL_TABLES, TableSchema, pk_of
+
+# ---------------------------------------------------------------------------
+# Errors
+# ---------------------------------------------------------------------------
+
+
+class StoreError(Exception):
+    pass
+
+
+class RowNotFound(StoreError):
+    pass
+
+
+class LockTimeout(StoreError):
+    """Raised when a row lock cannot be acquired within the transaction
+    inactive timeout (paper §7.5: NDB default 1.2 s; retried by namenode)."""
+
+
+class TransactionAborted(StoreError):
+    pass
+
+
+class NodeGroupDown(StoreError):
+    """All replicas of a node group failed => cluster unavailable (§7.6.2)."""
+
+
+# ---------------------------------------------------------------------------
+# Lock manager
+# ---------------------------------------------------------------------------
+
+READ_COMMITTED = "rc"
+SHARED = "S"
+EXCLUSIVE = "X"
+
+
+class _RowLock:
+    __slots__ = ("holders", "mode", "cond")
+
+    def __init__(self, cond_factory):
+        self.holders: Set[int] = set()
+        self.mode: Optional[str] = None
+        self.cond = cond_factory()
+
+
+class LockManager:
+    """Row-level shared/exclusive locks keyed by (table, pk)."""
+
+    def __init__(self, timeout: float = 1.2):
+        self._mu = threading.Lock()
+        self._locks: Dict[Tuple[str, Tuple[Any, ...]], _RowLock] = {}
+        self.timeout = timeout
+
+    def acquire(self, txn_id: int, table: str, pk: Tuple[Any, ...],
+                mode: str) -> None:
+        if mode == READ_COMMITTED:
+            return
+        key = (table, pk)
+        with self._mu:
+            lk = self._locks.get(key)
+            if lk is None:
+                lk = self._locks[key] = _RowLock(
+                    lambda: threading.Condition(self._mu))
+            deadline = None
+            while True:
+                if not lk.holders or lk.holders == {txn_id}:
+                    break
+                if mode == SHARED and lk.mode == SHARED:
+                    break
+                # conflicting: wait (bounded by NDB txn-inactive timeout)
+                if deadline is None:
+                    import time
+                    deadline = time.monotonic() + self.timeout
+                import time
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not lk.cond.wait(remaining):
+                    raise LockTimeout(f"lock timeout on {table}{pk} ({mode})")
+            lk.holders.add(txn_id)
+            if lk.mode == EXCLUSIVE or mode == EXCLUSIVE:
+                lk.mode = EXCLUSIVE
+            else:
+                lk.mode = SHARED
+
+    def release_all(self, txn_id: int) -> None:
+        with self._mu:
+            dead = []
+            for key, lk in self._locks.items():
+                if txn_id in lk.holders:
+                    lk.holders.discard(txn_id)
+                    if not lk.holders:
+                        lk.mode = None
+                    lk.cond.notify_all()
+                    if not lk.holders:
+                        dead.append(key)
+            for key in dead:
+                del self._locks[key]
+
+    def held(self, table: str, pk: Tuple[Any, ...]) -> Optional[str]:
+        with self._mu:
+            lk = self._locks.get((table, pk))
+            return lk.mode if lk and lk.holders else None
+
+
+# ---------------------------------------------------------------------------
+# Op-cost accounting (Fig 2a + Table 3 round-trip model)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class OpCost:
+    """Round trips + row ops for one transaction, in Table 3's vocabulary.
+
+    One *round trip* is one network exchange between the namenode's DAL and
+    the database: a single PK op, one batch (regardless of rows inside), one
+    PPIS, one IS (which fans out to every shard but is still one client
+    round trip with higher cost weight), or one FTS.
+    """
+    pk_rc: int = 0        # PK read, read-committed (no lock)
+    pk_r: int = 0         # PK read, shared lock
+    pk_w: int = 0         # PK read-for-update / write, exclusive lock
+    batches: int = 0      # batched PK operations
+    batch_rows: int = 0   # total rows across batches
+    ppis: int = 0         # partition-pruned index scans
+    is_scans: int = 0     # index scans hitting all shards
+    fts: int = 0          # full table scans
+    # locality: round trips answered by the hinted (coordinator-local)
+    # node group vs remote node groups (DAT effectiveness, §7.7)
+    local_rt: int = 0
+    remote_rt: int = 0
+    rows_touched: int = 0
+
+    @property
+    def round_trips(self) -> int:
+        return (self.pk_rc + self.pk_r + self.pk_w + self.batches
+                + self.ppis + self.is_scans + self.fts)
+
+    def merge(self, other: "OpCost") -> None:
+        for f in ("pk_rc", "pk_r", "pk_w", "batches", "batch_rows", "ppis",
+                  "is_scans", "fts", "local_rt", "remote_rt", "rows_touched"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+
+    def as_dict(self) -> Dict[str, int]:
+        d = {f: getattr(self, f) for f in (
+            "pk_rc", "pk_r", "pk_w", "batches", "batch_rows", "ppis",
+            "is_scans", "fts", "local_rt", "remote_rt", "rows_touched")}
+        d["round_trips"] = self.round_trips
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Partitioned table
+# ---------------------------------------------------------------------------
+
+
+def _hash_key(value: Any) -> int:
+    """Deterministic partition hash (NDB uses MD5 of the partition key; we
+    use crc32 of the repr — stable across runs, cheap, well-mixed for ids)."""
+    if isinstance(value, int):
+        # avoid trivial modulo patterns on sequential ids
+        v = value * 0x9E3779B1 & 0xFFFFFFFF
+        return v ^ (v >> 16)
+    return zlib.crc32(repr(value).encode())
+
+
+class Table:
+    def __init__(self, schema: TableSchema, n_partitions: int):
+        self.schema = schema
+        self.n_partitions = n_partitions
+        self.parts: List[Dict[Tuple[Any, ...], Dict[str, Any]]] = [
+            {} for _ in range(n_partitions)]
+        # secondary indexes: col -> value -> set of pks
+        self.idx: Dict[str, Dict[Any, Set[Tuple[Any, ...]]]] = {
+            c: {} for c in schema.indexes}
+        self.n_rows = 0
+
+    # -- placement -----------------------------------------------------
+    def partition_of(self, partition_key_value: Any) -> int:
+        return _hash_key(partition_key_value) % self.n_partitions
+
+    def partition_of_pk(self, pk: Tuple[Any, ...]) -> int:
+        # partition key is always a PK column prefix or derivable from a row;
+        # for PKs we locate via the partition-key column position if it is in
+        # the PK, else we must consult the row (file-related tables carry
+        # inode_id both in row and pk where applicable).
+        s = self.schema
+        if s.partition_key in s.pk:
+            return self.partition_of(pk[s.pk.index(s.partition_key)])
+        # fall back: search (only used for tables where pk doesn't embed the
+        # partition key; all such lookups in HopsFS supply the pkey via hint)
+        for p, part in enumerate(self.parts):
+            if pk in part:
+                return p
+        return self.partition_of(pk)
+
+    # -- row ops (no locking here; engine layer handles locks/costs) ----
+    def get(self, pk: Tuple[Any, ...], part_hint: Optional[int] = None
+            ) -> Optional[Dict[str, Any]]:
+        if part_hint is not None:
+            return self.parts[part_hint].get(pk)
+        return self.parts[self.partition_of_pk(pk)].get(pk)
+
+    def put(self, row: Dict[str, Any]) -> None:
+        pk = pk_of(self.schema, row)
+        p = self.partition_of(row[self.schema.partition_key])
+        part = self.parts[p]
+        old = part.get(pk)
+        if old is None:
+            self.n_rows += 1
+        else:
+            self._unindex(old, pk)
+        part[pk] = row
+        self._index(row, pk)
+
+    def delete(self, pk: Tuple[Any, ...]) -> bool:
+        p = self.partition_of_pk(pk)
+        row = self.parts[p].pop(pk, None)
+        if row is None:
+            return False
+        self._unindex(row, pk)
+        self.n_rows -= 1
+        return True
+
+    def _index(self, row, pk):
+        for c, ix in self.idx.items():
+            ix.setdefault(row[c], set()).add(pk)
+
+    def _unindex(self, row, pk):
+        for c, ix in self.idx.items():
+            s = ix.get(row[c])
+            if s is not None:
+                s.discard(pk)
+                if not s:
+                    del ix[row[c]]
+
+    # -- scans ----------------------------------------------------------
+    def scan_index(self, col: str, value: Any) -> List[Dict[str, Any]]:
+        pks = self.idx.get(col, {}).get(value, ())
+        out = []
+        for pk in pks:
+            r = self.get(pk)
+            if r is not None:
+                out.append(r)
+        return out
+
+    def scan_partition(self, part: int, pred: Callable[[Dict[str, Any]], bool]
+                       ) -> List[Dict[str, Any]]:
+        return [r for r in self.parts[part].values() if pred(r)]
+
+    def scan_all(self, pred: Callable[[Dict[str, Any]], bool]
+                 ) -> List[Dict[str, Any]]:
+        out = []
+        for part in self.parts:
+            out.extend(r for r in part.values() if pred(r))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Node groups / cluster topology (paper §2.2.1)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class NodeGroup:
+    gid: int
+    datanodes: List[int]
+    alive: Set[int] = field(default_factory=set)
+
+    def available(self) -> bool:
+        return bool(self.alive)
+
+
+class MetadataStore:
+    """The NDB-equivalent cluster: tables + partitions + node groups + locks.
+
+    ``n_datanodes`` NDB datanodes, ``replication`` copies per node group
+    (default 2 as in the paper). Partition ``p`` of every table lives on node
+    group ``p % n_groups``; the *primary* replica rotates by partition for
+    balance. Failing a datanode keeps the store available while its node
+    group has a survivor; failing an entire node group raises
+    :class:`NodeGroupDown` on access (paper §7.6.2: "namenodes shutdown").
+    """
+
+    def __init__(self, n_datanodes: int = 4, replication: int = 2,
+                 n_partitions: int = 64, lock_timeout: float = 1.2):
+        if n_datanodes % replication:
+            raise ValueError("n_datanodes must be a multiple of replication")
+        self.n_datanodes = n_datanodes
+        self.replication = replication
+        self.n_groups = n_datanodes // replication
+        self.node_groups = [
+            NodeGroup(g, list(range(g * replication, (g + 1) * replication)),
+                      set(range(g * replication, (g + 1) * replication)))
+            for g in range(self.n_groups)]
+        self.n_partitions = n_partitions
+        self.tables: Dict[str, Table] = {
+            s.name: Table(s, n_partitions) for s in ALL_TABLES}
+        self.locks = LockManager(timeout=lock_timeout)
+        self._txn_seq = 0
+        self._mu = threading.Lock()
+        self.epoch = 0            # global checkpoint epoch (§2.2.1)
+        self.total_row_ops = 0    # lifetime row ops (DES capacity feed)
+
+    # -- topology --------------------------------------------------------
+    def group_of_partition(self, part: int) -> NodeGroup:
+        return self.node_groups[part % self.n_groups]
+
+    def primary_datanode(self, part: int) -> int:
+        g = self.group_of_partition(part)
+        if not g.alive:
+            raise NodeGroupDown(f"node group {g.gid} has no live datanode")
+        # rotate primary across partitions for balance
+        members = [d for d in g.datanodes if d in g.alive]
+        return members[(part // self.n_groups) % len(members)]
+
+    def fail_datanode(self, dn: int) -> None:
+        for g in self.node_groups:
+            g.alive.discard(dn)
+
+    def recover_datanode(self, dn: int) -> None:
+        for g in self.node_groups:
+            if dn in g.datanodes:
+                g.alive.add(dn)
+
+    def available(self) -> bool:
+        return all(g.available() for g in self.node_groups)
+
+    def check_available(self, part: int) -> None:
+        g = self.group_of_partition(part)
+        if not g.available():
+            raise NodeGroupDown(f"node group {g.gid} down")
+
+    # -- transactions ------------------------------------------------------
+    def next_txn_id(self) -> int:
+        with self._mu:
+            self._txn_seq += 1
+            return self._txn_seq
+
+    # -- memory accounting (Table 2) ---------------------------------------
+    def memory_bytes(self) -> int:
+        total = 0
+        for t in self.tables.values():
+            total += t.n_rows * t.schema.row_bytes * self.replication
+        return total
+
+    def table(self, name: str) -> Table:
+        return self.tables[name]

@@ -1,0 +1,328 @@
+"""Subtree operations protocol (paper §6).
+
+Operations on directories of unknown (possibly millions) of inodes — delete,
+move/rename, chmod, chown, set-quota — cannot lock millions of rows in one
+OLTP transaction. HopsFS isolates the subtree with an **application-level
+distributed lock** and then executes the operation as many small parallel
+transactions:
+
+  Phase 1 — take an exclusive row lock on the subtree root, verify *no other
+            active subtree op* exists anywhere below (query of the
+            ongoing-subtree-ops table), then set + persist the ``subtree_lock``
+            flag (stamped with the owning namenode id). In-flight inode ops
+            that encounter the flag voluntarily abort (§6.3).
+  Phase 2 — quiesce: wave-by-wave down the tree, take-and-release write locks
+            on every descendant in the same total order inode ops use, via
+            parallel partition-pruned index scans (children of one directory
+            live on one shard, §4.2); build the in-memory tree, reading only
+            projections (inode ids) for efficiency.
+  Phase 3 — execute: delete runs batched transactions **upward from the
+            leaves (post-order)** so a namenode crash never orphans inodes
+            (§6.2); rename/chmod/chown/quota mutate only the subtree root in
+            a single small transaction, leaving inner inodes untouched.
+
+Failure handling (§6.2): the flag holds the owner namenode's id; any other
+namenode finding a flag owned by a dead namenode reclaims it. A delete that
+died mid-way leaves a consistent (smaller) tree that the client retries on
+another namenode.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .fs import (FSError, FileAlreadyExists, FileNotFound, HopsFSOps,
+                 OpResult, SubtreeLockedError, split_path)
+from .store import EXCLUSIVE, READ_COMMITTED, SHARED, OpCost
+from .transactions import Transaction
+
+
+@dataclass
+class TreeNode:
+    inode_id: int
+    parent_id: int
+    name: str
+    is_dir: bool
+    children: List["TreeNode"] = field(default_factory=list)
+
+    def count(self) -> int:
+        return 1 + sum(c.count() for c in self.children)
+
+
+class SubtreeOps:
+    """Subtree operations for one namenode, layered over HopsFSOps."""
+
+    def __init__(self, ops: HopsFSOps, *, batch_size: int = 1000,
+                 parallelism: int = 8, crash_after_batches: Optional[int] = None):
+        self.ops = ops
+        self.store = ops.store
+        self.batch_size = batch_size
+        self.parallelism = parallelism
+        # fault-injection hook: simulate the executing namenode dying after
+        # N phase-3 batches (used by tests to verify §6.2 consistency)
+        self.crash_after_batches = crash_after_batches
+
+    # ------------------------------------------------------------------
+    # Phase 1: subtree lock
+    # ------------------------------------------------------------------
+    def _phase1_lock(self, path: str) -> Tuple[Dict[str, Any], OpCost]:
+        comps = split_path(path)
+        with self.ops._begin(self.ops._hint_for(comps, parent=False)) as txn:
+            rp = self.ops._resolve(txn, comps, last_lock=EXCLUSIVE,
+                                   path=path)
+            root = rp.target
+            if root is None:
+                raise FileNotFound(path)
+            if not root["is_dir"]:
+                raise FSError(f"not a directory: {path}")
+            # no active subtree operation anywhere below (or above) us:
+            # the ongoing-subtree-ops table is small (subtree ops are a tiny
+            # fraction of the workload) but the check is an all-shard IS.
+            active = txn.full_scan("ongoing_subtree_ops", lambda r: True)
+            for a in active:
+                if self.ops._is_nn_alive(a["namenode_id"]):
+                    if self._is_descendant_or_self(a["inode_id"], root["id"]) \
+                            or self._is_descendant_or_self(root["id"],
+                                                           a["inode_id"]):
+                        raise SubtreeLockedError(
+                            f"active subtree op on inode {a['inode_id']}")
+                else:
+                    txn.delete("ongoing_subtree_ops", (a["inode_id"],))
+            locked = dict(root)
+            locked["subtree_lock"] = self.ops.nn_id
+            txn.write("inode", locked)
+            txn.write("ongoing_subtree_ops",
+                      {"inode_id": root["id"],
+                       "namenode_id": self.ops.nn_id, "op": "subtree"})
+            cost = txn.commit()
+        return locked, cost
+
+    def _is_descendant_or_self(self, node_id: int, ancestor_id: int) -> bool:
+        t = self.store.table("inode")
+        cur = node_id
+        seen = 0
+        while cur not in (0,) and seen < 10_000:
+            if cur == ancestor_id:
+                return True
+            rows = t.scan_index("id", cur)
+            if not rows:
+                return False
+            cur = rows[0]["parent_id"]
+            seen += 1
+        return False
+
+    def _unlock(self, root: Dict[str, Any], cost: OpCost) -> None:
+        with Transaction(self.store,
+                         partition_hint=("inode", root["parent_id"]),
+                         distribution_aware=self.ops.dat) as txn:
+            cur = txn.read("inode", (root["parent_id"], root["name"]),
+                           EXCLUSIVE)
+            if cur is not None and cur.get("subtree_lock") == self.ops.nn_id:
+                cur = dict(cur)
+                cur["subtree_lock"] = None
+                txn.write("inode", cur)
+            txn.delete("ongoing_subtree_ops", (root["id"],))
+            cost.merge(txn.commit())
+
+    # ------------------------------------------------------------------
+    # Phase 2: quiesce + build in-memory tree
+    # ------------------------------------------------------------------
+    def _phase2_build_tree(self, root: Dict[str, Any], cost: OpCost
+                           ) -> TreeNode:
+        """BFS down the tree; each directory's children are one
+        partition-pruned scan (all children co-located, §4.2). Locks are
+        taken-and-released per wave to wait out in-flight inode ops. A
+        thread pool runs the per-directory scans of one level in parallel."""
+        tree = TreeNode(root["id"], root["parent_id"], root["name"], True)
+        frontier = [tree]
+        while frontier:
+            next_frontier: List[TreeNode] = []
+
+            def scan_dir(node: TreeNode) -> List[TreeNode]:
+                with Transaction(self.store,
+                                 partition_hint=("inode", node.inode_id),
+                                 distribution_aware=self.ops.dat) as txn:
+                    # take-and-release write locks on the children wave
+                    # (projection: ids only — §6.1 "reduce the overhead")
+                    if self.ops.adp:
+                        kids = txn.ppis("inode", "parent_id", node.inode_id,
+                                        EXCLUSIVE,
+                                        projection=("id", "parent_id",
+                                                    "name", "is_dir"))
+                    else:
+                        kids = txn.index_scan("inode", "parent_id",
+                                              node.inode_id, EXCLUSIVE)
+                    cost.merge(txn.commit())
+                return [TreeNode(k["id"], k["parent_id"], k["name"],
+                                 k["is_dir"]) for k in kids]
+
+            if len(frontier) > 1 and self.parallelism > 1:
+                with ThreadPoolExecutor(self.parallelism) as pool:
+                    results = list(pool.map(scan_dir, frontier))
+            else:
+                results = [scan_dir(n) for n in frontier]
+            for node, kids in zip(frontier, results):
+                node.children = kids
+                next_frontier.extend(k for k in kids if k.is_dir)
+            frontier = next_frontier
+        return tree
+
+    # ------------------------------------------------------------------
+    # Phase 3 executors
+    # ------------------------------------------------------------------
+    def delete_subtree(self, path: str) -> OpResult:
+        """Recursive delete, batched post-order (leaves first) so a crash
+        leaves no orphans (§6.2). Returns #inodes deleted."""
+        root, cost = self._phase1_lock(path)
+        try:
+            tree = self._phase2_build_tree(root, cost)
+            order: List[TreeNode] = []
+
+            def post(n: TreeNode) -> None:
+                for c in n.children:
+                    post(c)
+                order.append(n)
+            post(tree)
+
+            deleted = 0
+            batches = 0
+            for i in range(0, len(order), self.batch_size):
+                chunk = order[i:i + self.batch_size]
+                if self.crash_after_batches is not None \
+                        and batches >= self.crash_after_batches:
+                    # simulated namenode crash: subtree lock flag remains,
+                    # already-deleted leaves are gone, rest still attached.
+                    return OpResult({"deleted": deleted, "crashed": True},
+                                    cost)
+                with Transaction(self.store,
+                                 partition_hint=("inode",
+                                                 chunk[0].parent_id),
+                                 distribution_aware=self.ops.dat) as txn:
+                    for n in chunk:
+                        if not n.is_dir:
+                            related = self.ops._file_scan(
+                                txn, ("block", "replica", "ruc", "inv"),
+                                n.inode_id, EXCLUSIVE)
+                            for tname, rws in related.items():
+                                schema = self.store.table(tname).schema
+                                for r in rws:
+                                    txn.delete(tname, tuple(
+                                        r[c] for c in schema.pk))
+                        txn.delete("inode", (n.parent_id, n.name))
+                        if self.ops.cache:
+                            self.ops.cache.invalidate(n.parent_id, n.name)
+                        deleted += 1
+                    cost.merge(txn.commit())
+                batches += 1
+            # root row is gone; update parent mtime + drop subtree-ops row
+            with Transaction(self.store,
+                             partition_hint=("inode", root["parent_id"]),
+                             distribution_aware=self.ops.dat) as txn:
+                txn.delete("ongoing_subtree_ops", (root["id"],))
+                prow = self.store.table("inode").scan_index(
+                    "id", root["parent_id"])
+                if prow:
+                    p = dict(prow[0])
+                    p["mtime"] = next(self.ops.clock)
+                    txn.write("inode", p)
+                cost.merge(txn.commit())
+            return OpResult({"deleted": deleted, "crashed": False}, cost)
+        except Exception:
+            self._unlock(root, cost)
+            raise
+
+    def _root_only_op(self, path: str, mutate) -> OpResult:
+        """chmod/chown/set-quota on a directory: phases 1-2 isolate and
+        quiesce, phase 3 is a single small transaction updating only the
+        subtree root (§6.2: inner inodes untouched => trivially
+        failure-consistent)."""
+        root, cost = self._phase1_lock(path)
+        try:
+            self._phase2_build_tree(root, cost)
+            with Transaction(self.store,
+                             partition_hint=("inode", root["parent_id"]),
+                             distribution_aware=self.ops.dat) as txn:
+                cur = txn.read("inode", (root["parent_id"], root["name"]),
+                               EXCLUSIVE)
+                if cur is None:
+                    raise FileNotFound(path)
+                cur = dict(cur)
+                mutate(cur)
+                cur["mtime"] = next(self.ops.clock)
+                cur["subtree_lock"] = None
+                txn.write("inode", cur)
+                txn.delete("ongoing_subtree_ops", (root["id"],))
+                cost.merge(txn.commit())
+            return OpResult(None, cost)
+        except Exception:
+            self._unlock(root, cost)
+            raise
+
+    def chmod_subtree(self, path: str, perm: int) -> OpResult:
+        return self._root_only_op(path, lambda n: n.update(perm=perm))
+
+    def chown_subtree(self, path: str, owner: str) -> OpResult:
+        return self._root_only_op(path, lambda n: n.update(owner=owner))
+
+    def set_quota_subtree(self, path: str, *, ns_quota: int = -1,
+                          ss_quota: int = -1) -> OpResult:
+        def mut(n):
+            pass
+        root, cost = self._phase1_lock(path)
+        try:
+            self._phase2_build_tree(root, cost)
+            with Transaction(self.store,
+                             partition_hint=("inode", root["id"]),
+                             distribution_aware=self.ops.dat) as txn:
+                q = self.store.table("quota").get((root["id"],))
+                qrow = dict(q) if q else {"inode_id": root["id"],
+                                          "ns_used": 0, "ss_used": 0}
+                qrow["ns_quota"], qrow["ss_quota"] = ns_quota, ss_quota
+                txn.write("quota", qrow)
+                cost.merge(txn.commit())
+            self._unlock(root, cost)
+            return OpResult(None, cost)
+        except Exception:
+            self._unlock(root, cost)
+            raise
+
+    def rename_subtree(self, src: str, dst: str) -> OpResult:
+        """Directory move: phases 1-2, then a single phase-3 transaction
+        that re-parents ONLY the subtree root (children keep their
+        parent-id; their absolute paths change implicitly). The root's
+        composite PK changes => delete+insert of one row."""
+        root, cost = self._phase1_lock(src)
+        try:
+            self._phase2_build_tree(root, cost)
+            dc = split_path(dst)
+            with Transaction(self.store, partition_hint=(
+                    "inode", self.ops._hint_for(dc, parent=True)),
+                    distribution_aware=self.ops.dat) as txn:
+                drp = self.ops._resolve(txn, dc, last_lock=EXCLUSIVE,
+                                        lock_parent=True, path=dst)
+                if drp.target is not None:
+                    raise FileAlreadyExists(dst)
+                cur = txn.read("inode", (root["parent_id"], root["name"]),
+                               EXCLUSIVE)
+                if cur is None:
+                    raise FileNotFound(src)
+                txn.delete("inode", (root["parent_id"], root["name"]))
+                moved = dict(cur)
+                moved["parent_id"], moved["name"] = drp.parent["id"], dc[-1]
+                moved["mtime"] = next(self.ops.clock)
+                moved["subtree_lock"] = None
+                txn.write("inode", moved)
+                dp = dict(drp.parent)
+                dp["mtime"] = next(self.ops.clock)
+                txn.write("inode", dp)
+                txn.delete("ongoing_subtree_ops", (root["id"],))
+                if self.ops.cache:
+                    self.ops.cache.invalidate(root["parent_id"],
+                                              root["name"])
+                    self.ops.cache.put(drp.parent["id"], dc[-1], root["id"])
+                cost.merge(txn.commit())
+            return OpResult(None, cost)
+        except Exception:
+            self._unlock(root, cost)
+            raise

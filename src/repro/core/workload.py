@@ -1,0 +1,173 @@
+"""Industrial workload generator (paper Table 1 + §7.4).
+
+Reproduces the Spotify HDFS trace characteristics:
+
+  * relative op frequencies of Table 1 (reads 68.73%, stat 17%, ls 9%, ...),
+    including the per-op directory/file split where the paper gives it;
+  * namespace shape: average path depth 7, ~16 files + 2 subdirs per
+    directory, average name length 34;
+  * heavy-tailed access popularity (Yahoo: 3% of files take 80% of
+    accesses) via a Zipf-like sampler.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# (op, weight_pct, fraction_on_directories)
+TABLE1_MIX: List[Tuple[str, float, float]] = [
+    ("append",          0.0,   0.0),
+    ("mkdirs",          0.02,  1.0),
+    ("set_replication", 0.14,  0.0),
+    ("delete",          0.75,  0.035),
+    ("rename",          1.3,   0.0003),
+    ("ls",              9.0,   0.945),
+    ("read",            68.73, 0.0),
+    ("content_summary", 0.01,  0.5),
+    ("set_permissions", 0.03,  0.263),
+    ("set_owner",       0.32,  1.0),
+    ("create",          1.2,   0.0),
+    ("add_block",       1.5,   0.0),
+    ("stat",            17.0,  0.233),
+]
+
+READ_ONLY_OPS = {"read", "ls", "stat", "content_summary"}
+
+
+@dataclass
+class NamespaceSpec:
+    """Spotify-like namespace shape (§7.4)."""
+    depth: int = 7
+    files_per_dir: int = 16
+    dirs_per_dir: int = 2
+    name_len: int = 34
+    seed: int = 7
+
+
+class SyntheticNamespace:
+    """Builds a namespace matching the spec and serves popularity-weighted
+    path samples. Paths are materialized lazily per directory level."""
+
+    def __init__(self, spec: NamespaceSpec, *, n_dirs: int = 200,
+                 files_per_dir: Optional[int] = None):
+        self.spec = spec
+        self.rng = random.Random(spec.seed)
+        self.dirs: List[str] = []
+        self.files: List[str] = []
+        fpd = files_per_dir if files_per_dir is not None \
+            else spec.files_per_dir
+        # build a tree of depth `spec.depth` with the right fanout, capped
+        # at n_dirs directories
+        frontier = ["/w"]
+        self.dirs.append("/w")
+        depth = 1
+        while len(self.dirs) < n_dirs and depth < spec.depth:
+            nxt = []
+            for d in frontier:
+                for k in range(spec.dirs_per_dir):
+                    sub = f"{d}/{self._name(depth, k)}"
+                    self.dirs.append(sub)
+                    nxt.append(sub)
+                    if len(self.dirs) >= n_dirs:
+                        break
+                if len(self.dirs) >= n_dirs:
+                    break
+            frontier = nxt or frontier
+            depth += 1
+        leaf_dirs = [d for d in self.dirs]
+        for d in leaf_dirs:
+            for i in range(fpd):
+                self.files.append(f"{d}/f{i:04d}.parquet")
+        # heavy-tailed popularity: rank files by a Zipf(1.1)-ish law
+        self._pop_weights = [1.0 / (r + 1) ** 1.1
+                             for r in range(len(self.files))]
+
+    def _name(self, depth: int, k: int) -> str:
+        base = f"d{depth}x{k}"
+        pad = max(0, self.spec.name_len - len(base) - 20)
+        return base + "u" * min(pad, 8)
+
+    def sample_file(self, rng: random.Random) -> str:
+        return rng.choices(self.files, weights=self._pop_weights, k=1)[0]
+
+    def sample_dir(self, rng: random.Random) -> str:
+        return rng.choice(self.dirs)
+
+
+@dataclass
+class WorkloadOp:
+    op: str
+    path: str
+    path2: Optional[str] = None
+    on_dir: bool = False
+
+
+class SpotifyWorkload:
+    """Stream of WorkloadOps distributed per Table 1."""
+
+    def __init__(self, ns: SyntheticNamespace, seed: int = 13):
+        self.ns = ns
+        self.rng = random.Random(seed)
+        self._ops = [m[0] for m in TABLE1_MIX]
+        self._weights = [m[1] for m in TABLE1_MIX]
+        self._dir_frac = {m[0]: m[2] for m in TABLE1_MIX}
+        self._create_seq = 0
+
+    def next_op(self) -> WorkloadOp:
+        op = self.rng.choices(self._ops, weights=self._weights, k=1)[0]
+        on_dir = self.rng.random() < self._dir_frac[op]
+        if op in ("mkdirs",):
+            d = self.ns.sample_dir(self.rng)
+            return WorkloadOp("mkdirs", f"{d}/new{self.rng.randrange(1 << 30):x}",
+                              on_dir=True)
+        if op == "create":
+            self._create_seq += 1
+            d = self.ns.sample_dir(self.rng)
+            return WorkloadOp("create", f"{d}/w{self._create_seq:08d}")
+        if op == "add_block":
+            return WorkloadOp("add_block", self.ns.sample_file(self.rng))
+        if op == "rename":
+            src = self.ns.sample_file(self.rng)
+            return WorkloadOp("rename_file", src, src + ".mv", on_dir=on_dir)
+        if op == "delete":
+            if on_dir:
+                return WorkloadOp("delete_subtree",
+                                  self.ns.sample_dir(self.rng), on_dir=True)
+            return WorkloadOp("delete_file", self.ns.sample_file(self.rng))
+        if op == "set_permissions":
+            p = (self.ns.sample_dir(self.rng) if on_dir
+                 else self.ns.sample_file(self.rng))
+            return WorkloadOp("chmod_subtree" if on_dir else "chmod_file",
+                              p, on_dir=on_dir)
+        if op == "set_owner":
+            p = (self.ns.sample_dir(self.rng) if on_dir
+                 else self.ns.sample_file(self.rng))
+            return WorkloadOp("chown_subtree" if on_dir else "chown_file",
+                              p, on_dir=on_dir)
+        if op == "set_replication":
+            return WorkloadOp("set_replication",
+                              self.ns.sample_file(self.rng))
+        if op == "ls":
+            p = (self.ns.sample_dir(self.rng) if on_dir
+                 else self.ns.sample_file(self.rng))
+            return WorkloadOp("ls", p, on_dir=on_dir)
+        if op == "stat":
+            p = (self.ns.sample_dir(self.rng) if on_dir
+                 else self.ns.sample_file(self.rng))
+            return WorkloadOp("stat", p, on_dir=on_dir)
+        if op == "content_summary":
+            p = (self.ns.sample_dir(self.rng) if on_dir
+                 else self.ns.sample_file(self.rng))
+            return WorkloadOp("content_summary", p, on_dir=on_dir)
+        if op == "append":
+            return WorkloadOp("append", self.ns.sample_file(self.rng))
+        # default: read
+        return WorkloadOp("read", self.ns.sample_file(self.rng))
+
+    def mix_histogram(self, n: int = 100_000) -> Dict[str, float]:
+        counts: Dict[str, int] = {}
+        for _ in range(n):
+            o = self.next_op()
+            counts[o.op] = counts.get(o.op, 0) + 1
+        return {k: 100.0 * v / n for k, v in sorted(counts.items())}

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot-spots (+ the metadata-plane
+partition hash). Each subpackage: kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd wrapper + custom_vjp), ref.py (pure-jnp oracle).
+
+TPU is the TARGET; this container validates via interpret=True.
+"""

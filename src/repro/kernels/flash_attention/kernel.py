@@ -1,0 +1,143 @@
+"""Flash attention forward — Pallas TPU kernel.
+
+Grid: (batch*q_heads, n_q_blocks, n_k_blocks); the k dimension is
+`arbitrary` (sequential) so the online-softmax state (running max m,
+denominator l, accumulator acc) lives in VMEM scratch across k-steps.
+
+BlockSpecs move [block_q, head_dim] query tiles and [block_k, head_dim]
+key/value tiles HBM->VMEM; GQA is handled by the k/v index_map (q head h
+reads kv head h // group_size) with no HBM duplication. Causal +
+sliding-window masking is applied in-kernel; fully-masked k-blocks are
+skipped via pl.when (the TPU grid still visits them, but no MXU work is
+issued).
+
+VMEM budget per step: bq*hd (q) + 2*bk*hd (k,v) + bq*bk (scores) +
+bq*(hd+2) f32 scratch ~= 1.3 MB at bq=bk=512, hd=128 — well inside the
+~16 MB/core VMEM of v5e.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces; ANY works for interpret mode on CPU
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+NEG_INF = -1e30
+
+
+def _scratch(shape):
+    if _VMEM is not None:
+        return _VMEM(shape, jnp.float32)
+    return pl.MemorySpace.ANY(shape, jnp.float32)  # type: ignore
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                      causal: bool, window: Optional[int],
+                      softcap: Optional[float], block_q: int, block_k: int,
+                      n_k_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # static-shape mask bounds for this block pair
+    def compute():
+        q = q_ref[0].astype(jnp.float32)                  # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s *= (1.0 / (q.shape[-1] ** 0.5))
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_cur)
+        l_scr[...] = l_prev * corr + p.sum(axis=1, keepdims=True)
+        m_scr[...] = m_cur
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    if causal or window is not None:
+        # skip blocks with no valid (q, k) pair
+        valid = jnp.bool_(True)
+        if causal:
+            valid &= k_start <= q_start + block_q - 1
+        if window is not None:
+            valid &= k_start + block_k - 1 > q_start - window
+        pl.when(valid)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _flush():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        softcap: Optional[float] = None, block_q: int = 512,
+                        block_k: int = 512, interpret: bool = True
+                        ) -> jax.Array:
+    """q [B,S,H,hd]; k/v [B,S,KV,hd] -> [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    nq, nk = S // bq, S // bk
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_k=bk, n_k_blocks=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, qi, ki, G=G: (b // G, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, qi, ki, G=G: (b // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            _scratch((block_q if S >= block_q else S, 1)),
+            _scratch((block_q if S >= block_q else S, 1)),
+            _scratch((block_q if S >= block_q else S, hd)),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,42 @@
+"""jit'd wrapper: Pallas forward + recompute-based backward (custom_vjp).
+
+The backward recomputes attention through the jnp oracle's VJP — the
+standard flash recipe (save only q,k,v + output stats; recompute blocks),
+expressed here at the layer granularity.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import flash_attention_fwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    interpret: bool = True):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               softcap=softcap, interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, softcap, interpret):
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              softcap=softcap, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, softcap, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.attention_ref(
+        q_, k_, v_, causal=causal, window=window, softcap=softcap),
+        q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel (exact softmax)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  softcap: Optional[float] = None) -> jax.Array:
+    """q [B,S,H,hd]; k/v [B,S,KV,hd] (GQA) -> [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32))
+    logits /= jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)

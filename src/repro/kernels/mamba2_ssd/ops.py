@@ -1,0 +1,40 @@
+"""jit'd wrapper for the SSD kernel (fwd kernel + oracle-VJP backward)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from . import ref
+from .kernel import ssd_fwd
+
+
+def ssd(x, dt, A, Bc, Cc, *, h0=None, chunk: int = 128,
+        interpret: bool = True):
+    """Kernel path for h0=0 (training); a carried state falls back to the
+    chunked jnp reference (prefill-continuation is not the hot path)."""
+    if h0 is not None:
+        return ref.ssd_ref(x, dt, A, Bc, Cc, h0=h0, chunk=chunk)
+    return _ssd_k(x, dt, A, Bc, Cc, chunk, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd_k(x, dt, A, Bc, Cc, chunk: int = 128, interpret: bool = True):
+    y, h = ssd_fwd(x, dt, A, Bc, Cc, chunk=chunk, interpret=interpret)
+    return y, h
+
+
+def _fwd(x, dt, A, Bc, Cc, chunk, interpret):
+    out = ssd_fwd(x, dt, A, Bc, Cc, chunk=chunk, interpret=interpret)
+    return out, (x, dt, A, Bc, Cc)
+
+
+def _bwd(chunk, interpret, res, g):
+    x, dt, A, Bc, Cc = res
+    _, vjp = jax.vjp(lambda *a: ref.ssd_ref(*a, chunk=chunk),
+                     x, dt, A, Bc, Cc)
+    return vjp(g)
+
+
+_ssd_k.defvjp(_fwd, _bwd)

@@ -1,0 +1,7 @@
+"""Oracle: the model's own chunked SSD (validated against an explicit
+per-timestep scan in tests)."""
+from ...models.mamba2 import ssd_chunked
+
+
+def ssd_ref(x, dt, A, Bc, Cc, *, h0=None, chunk=128):
+    return ssd_chunked(x, dt, A, Bc, Cc, h0=h0, chunk=chunk)

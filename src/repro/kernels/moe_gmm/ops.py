@@ -1,0 +1,27 @@
+"""jit'd wrapper for the grouped expert matmul."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import ref
+from .kernel import gmm as _gmm_fwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def gmm(x, w, interpret: bool = True):
+    return _gmm_fwd(x, w, interpret=interpret)
+
+
+def _fwd(x, w, interpret):
+    return _gmm_fwd(x, w, interpret=interpret), (x, w)
+
+
+def _bwd(interpret, res, g):
+    x, w = res
+    _, vjp = jax.vjp(ref.gmm_ref, x, w)
+    return vjp(g)
+
+
+gmm.defvjp(_fwd, _bwd)

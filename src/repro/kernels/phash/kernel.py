@@ -1,0 +1,46 @@
+"""Batched partition hash (HopsFS ADP hot path) — Pallas TPU kernel.
+
+The metadata plane hashes billions of (parent_id | inode_id) keys to
+partition ids (paper §4.2: inodes partitioned by parent id, file-related
+rows by inode id). At exabyte scale this runs over block-report streams and
+bulk-import manifests — a pure integer-VPU workload:
+
+    h  = key * 0x9E3779B1 (mod 2^32);  h ^= h >> 16;  partition = h % P
+
+which matches ``repro.core.store._hash_key`` exactly, so the Python
+metadata plane and the TPU data pipeline agree on placement.
+
+Grid: 1-D over key blocks; BlockSpec moves [block_n] int32 tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GOLDEN = 0x9E3779B1
+
+
+def _phash_kernel(keys_ref, out_ref, *, n_partitions: int):
+    k = keys_ref[...].astype(jnp.uint32)
+    h = (k * jnp.uint32(GOLDEN)).astype(jnp.uint32)
+    h = h ^ (h >> jnp.uint32(16))
+    out_ref[...] = (h % jnp.uint32(n_partitions)).astype(jnp.int32)
+
+
+def phash(keys: jax.Array, *, n_partitions: int = 64, block_n: int = 1024,
+          interpret: bool = True) -> jax.Array:
+    """keys [N] int32/uint32 -> partition ids [N] int32."""
+    (N,) = keys.shape
+    bn = min(block_n, N)
+    kernel = functools.partial(_phash_kernel, n_partitions=n_partitions)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // bn,),
+        in_specs=[pl.BlockSpec((bn,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.int32),
+        interpret=interpret,
+    )(keys)

@@ -1,0 +1,11 @@
+"""jit'd wrapper for the partition hash."""
+import functools
+
+import jax
+
+from .kernel import phash as _phash
+
+
+@functools.partial(jax.jit, static_argnames=("n_partitions", "interpret"))
+def phash(keys, n_partitions: int = 64, interpret: bool = True):
+    return _phash(keys, n_partitions=n_partitions, interpret=interpret)

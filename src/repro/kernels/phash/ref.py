@@ -1,0 +1,9 @@
+"""Oracle matching repro.core.store._hash_key for integer keys."""
+import numpy as np
+
+
+def phash_ref(keys, n_partitions: int = 64):
+    k = np.asarray(keys).astype(np.uint32)
+    h = (k * np.uint32(0x9E3779B1)).astype(np.uint32)
+    h = h ^ (h >> np.uint32(16))
+    return (h % np.uint32(n_partitions)).astype(np.int32)

@@ -1,0 +1,115 @@
+"""RWKV-6 WKV chunked recurrence — Pallas TPU kernel.
+
+Grid: (batch*heads, n_chunks), chunk dimension sequential; state S [hd, hd]
+in VMEM scratch. Per chunk:
+
+  intra-chunk   y_t += sum_{s<t} (r_t ⊙ e^{cum_{t-1}-cum_s} ⊙ k_s)·1 v_s
+                computed with the masked-exponent trick (exponents of all
+                VALID pairs are <= 0, so masking precedes exp — stable for
+                arbitrary data-dependent decay);
+  diagonal      y_t += (r_t ⊙ u ⊙ k_t)·1 v_t;
+  state         y_t += r_t S;  S' = diag(prod w) S + sum k~_s v_s^T.
+
+The [Q, Q, hd] pairwise tensor stays in VMEM: Q=32, hd=64 -> 512 KB f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+
+def _scratch(shape):
+    if _VMEM is not None:
+        return _VMEM(shape, jnp.float32)
+    return pl.MemorySpace.ANY(shape, jnp.float32)  # type: ignore
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_out_ref,
+                s_scr, *, Q: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)            # [Q, hd]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0]                              # [Q, hd] log decay (<0)
+    u = u_ref[0]                                # [1, hd]
+
+    cum = jnp.cumsum(lw, axis=0)                # [Q, hd]
+    cum_prev = cum - lw
+    # pairwise masked exponents (valid pairs <= 0)
+    seg = cum_prev[:, None, :] - cum[None, :, :]         # [Q, Q, hd]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1) < \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    seg = jnp.where(tri[..., None], seg, -jnp.inf)
+    att = jnp.einsum("qc,sc,qsc->qs", r, k, jnp.exp(seg))
+    y = jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # diagonal bonus
+    diag = jnp.sum(r * u * k, axis=1, keepdims=True)     # [Q, 1]
+    y += diag * v
+    # carried state
+    r_n = r * jnp.exp(cum_prev)
+    y += jax.lax.dot_general(r_n, s_scr[...], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+    # state update
+    k_end = k * jnp.exp(cum[-1:] - cum)
+    s_scr[...] = s_scr[...] * jnp.exp(cum[-1])[:, None] + \
+        jax.lax.dot_general(k_end, v, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        s_out_ref[0] = s_scr[...]
+
+
+def wkv6_fwd(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, *, chunk: int = 32, interpret: bool = True):
+    """r/k/v/w [B,S,H,hd] (w in (0,1)); u [H,hd].
+    Returns (y [B,S,H,hd], S [B,H,hd,hd])."""
+    B, S, H, hd = r.shape
+    Q = min(chunk, S)
+    nc = S // Q
+    tt = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    lw = jnp.maximum(jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30)),
+                     -60.0)
+    ut = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, 1, hd)
+    ut = ut.astype(jnp.float32)
+
+    kernel = functools.partial(_wkv_kernel, Q=Q, n_chunks=nc)
+    y, s = pl.pallas_call(
+        kernel,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, Q, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, Q, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, Q, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, ci: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, ci: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, hd), r.dtype),
+            jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[_scratch((hd, hd))],
+        interpret=interpret,
+    )(tt(r), tt(k), tt(v), tt(lw), ut)
+    return (y.reshape(B, H, S, hd).transpose(0, 2, 1, 3),
+            s.reshape(B, H, hd, hd))

@@ -1,0 +1,36 @@
+"""jit'd wrapper for the WKV6 kernel (fwd kernel + oracle-VJP backward)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import ref
+from .kernel import wkv6_fwd
+
+
+def wkv6(r, k, v, w, u, *, s0=None, chunk: int = 32,
+         interpret: bool = True):
+    if s0 is not None:
+        return ref.wkv6_ref(r, k, v, w, u, s0=s0, chunk=chunk)
+    return _wkv6_k(r, k, v, w, u, chunk, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _wkv6_k(r, k, v, w, u, chunk: int = 32, interpret: bool = True):
+    return wkv6_fwd(r, k, v, w, u, chunk=chunk, interpret=interpret)
+
+
+def _fwd(r, k, v, w, u, chunk, interpret):
+    out = wkv6_fwd(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    return out, (r, k, v, w, u)
+
+
+def _bwd(chunk, interpret, res, g):
+    r, k, v, w, u = res
+    _, vjp = jax.vjp(lambda *a: ref.wkv6_ref(*a, chunk=chunk),
+                     r, k, v, w, u)
+    return vjp(g)
+
+
+_wkv6_k.defvjp(_fwd, _bwd)

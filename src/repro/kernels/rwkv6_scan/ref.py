@@ -1,0 +1,7 @@
+"""Oracle: the model's chunked WKV (itself validated against an explicit
+per-timestep recurrence in tests)."""
+from ...models.rwkv6 import wkv6_chunked
+
+
+def wkv6_ref(r, k, v, w, u, *, s0=None, chunk=32):
+    return wkv6_chunked(r, k, v, w, u, s0=s0, chunk=chunk)

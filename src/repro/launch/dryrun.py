@@ -1,0 +1,405 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e) + roofline extraction (deliverable g).
+
+For every (architecture x input shape) cell, on the single-pod 16x16 mesh
+AND the 2x16x16 multi-pod mesh:
+
+  1. **compile proof** — jax.jit(step).lower(**ShapeDtypeStructs).compile()
+     of the FULL-depth model (scan-over-layers) with explicit in/out
+     shardings; `memory_analysis()` proves per-device footprint,
+     `cost_analysis()` is recorded raw.
+  2. **roofline accounting** — XLA's cost analysis visits while-loop bodies
+     ONCE and reports per-device numbers (verified empirically; see
+     EXPERIMENTS.md §Methodology). So FLOPs/bytes/collective-bytes are
+     measured from small-depth UNROLLED compiles at full width and
+     extrapolated linearly over the layer period:
+         total(L) = F(P) + (L/P - 1) * (F(2P) - F(P))
+     which is exact for homogeneous-period stacks (P = local:global period
+     for gemma3, shared-attn interval for zamba2, else 1). Collective bytes
+     are parsed from the compiled HLO (all-gather / all-reduce /
+     reduce-scatter / all-to-all / collective-permute operand bytes).
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json; benchmarks
+and EXPERIMENTS.md tables read from there.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3_12b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod] [--skip-existing]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, LONG_CONTEXT_OK, SHAPES, cells, get_config
+from ..models import abstract_params, init_cache_specs, param_specs
+from ..models.config import ModelConfig
+from ..models.params import ParamSpec, axes_tree, count_params
+from ..parallel.sharding import MeshPolicy, logical_to_pspec
+from ..train.optimizer import adamw_abstract
+from ..train.step import decode_step_fn, prefill_step_fn, train_step_fn
+from .analytic import analytic_bytes, analytic_collective_bytes
+from .inputs import batch_axes, batch_specs, cache_abstract, cell_policy
+from .mesh import make_production_mesh
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_IS_AXES = lambda l: (isinstance(l, tuple) and
+                      all(isinstance(a, (str, type(None))) for a in l))
+
+
+def _shardings(tree_axes: Any, policy: MeshPolicy, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda ax: NamedSharding(mesh, logical_to_pspec(ax, policy, mesh)),
+        tree_axes, is_leaf=_IS_AXES)
+
+
+# ---------------------------------------------------------------------------
+# collective-bytes parsing
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes per collective kind over the HLO module.
+    (Loop bodies appear once — callers handle trip-count extrapolation.)"""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_s, kind = m.group(1), m.group(2)
+        total = 0
+        for dm in _SHAPE_RE.finditer(shape_s):
+            dt, dims = dm.group(1), dm.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+def weighted_collective_bytes(per_kind: Dict[str, float]) -> float:
+    """Bytes actually moved per chip: ring all-reduce moves ~2x its payload,
+    ag/rs/a2a/permute ~1x."""
+    w = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+    return sum(v * w.get(k, 1.0) for k, v in per_kind.items())
+
+
+# ---------------------------------------------------------------------------
+# per-cell compile
+# ---------------------------------------------------------------------------
+
+
+def _derive_depth(cfg: ModelConfig, L: int, seq: int) -> ModelConfig:
+    """Reduced-depth, full-width variant for the cost-extrapolation
+    compiles: layers unrolled, inner scans unrolled, attention tiles sized
+    so long-sequence HLO stays bounded (~16 q-blocks)."""
+    kw: Dict[str, Any] = {"n_layers": L, "scan_layers": False,
+                          "unroll_scans": True,
+                          "attn_block_q": max(512, seq // 16),
+                          "attn_block_k": max(512, min(seq // 16,
+                                                       cfg.sliding_window or
+                                                       seq))}
+    if cfg.family == "encdec":
+        kw["n_enc_layers"] = L
+        kw["n_dec_layers"] = L
+    return cfg.derive(**kw)
+
+
+def _period(cfg: ModelConfig) -> int:
+    if cfg.global_interval:
+        return cfg.global_interval
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        return cfg.shared_attn_every
+    return 1
+
+
+def lower_cell(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+               policy: MeshPolicy, *, compile_: bool = True,
+               microbatches: int = 1,
+               kv_len_override: Optional[int] = None):
+    """Build + lower (+ compile) the step function for one cell."""
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    p_specs = param_specs(cfg)
+    p_abs = abstract_params(p_specs)
+    p_axes = axes_tree(p_specs)
+    p_sh = _shardings(p_axes, policy, mesh)
+    b_abs = batch_specs(cfg, shape_name)
+    b_sh = _shardings(batch_axes(cfg, shape_name), policy, mesh)
+
+    if kind == "train":
+        o_abs = adamw_abstract(p_abs)
+        o_sh = {"mu": p_sh, "nu": p_sh, "step": NamedSharding(mesh, P())}
+
+        def step(params, opt_state, batch):
+            return train_step_fn(params, opt_state, batch, cfg=cfg,
+                                 policy=policy, mesh=mesh,
+                                 microbatches=microbatches)
+        lowered = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                          donate_argnums=(0, 1)).lower(p_abs, o_abs, b_abs)
+    elif kind == "prefill":
+        c_abs, c_axes = cache_abstract(cfg, shape_name)
+        c_sh = _shardings(c_axes, policy, mesh)
+
+        def step(params, batch, cache):
+            return prefill_step_fn(params, batch, cache, cfg=cfg,
+                                   policy=policy, mesh=mesh)
+        lowered = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
+                          donate_argnums=(2,)).lower(p_abs, b_abs, c_abs)
+    else:  # decode
+        c_abs, c_axes = cache_abstract(cfg, shape_name,
+                                       kv_len=kv_len_override)
+        c_sh = _shardings(c_axes, policy, mesh)
+        i_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def step(params, batch, cache, index):
+            return decode_step_fn(params, batch, cache, index, cfg=cfg,
+                                  policy=policy, mesh=mesh)
+        lowered = jax.jit(
+            step, in_shardings=(p_sh, b_sh, c_sh, NamedSharding(mesh, P())),
+            donate_argnums=(2,)).lower(p_abs, b_abs, c_abs, i_abs)
+    if not compile_:
+        return lowered, None
+    return lowered, lowered.compile()
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             fast: bool = False, cfg_override: Optional[ModelConfig] = None,
+             policy_override: Optional[MeshPolicy] = None,
+             microbatches: int = 1,
+             kv_len_override: Optional[int] = None) -> Dict[str, Any]:
+    """Full dry-run for one cell: compile proof + extrapolated roofline.
+    Overrides support the §Perf variants (launch/perf.py)."""
+    t_start = time.time()
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    model_axis = mesh.shape["model"]
+    data_axis = mesh.shape["data"]
+    n_pods = mesh.shape.get("pod", 1)
+    policy = policy_override if policy_override is not None else \
+        cell_policy(cfg, shape_name, model_axis=model_axis,
+                    data_axis=data_axis, n_pods=n_pods)
+    sh = SHAPES[shape_name]
+    out: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "kind": sh["kind"], "n_chips": n_chips,
+        "policy": {"fsdp": policy.fsdp, "seq_shard": policy.seq_shard,
+                   "rules": dict(policy.rules)},
+    }
+
+    # ---- 1. full-depth compile proof + memory analysis ------------------
+    lowered, compiled = lower_cell(cfg, shape_name, mesh, policy,
+                                   microbatches=microbatches,
+                                   kv_len_override=kv_len_override)
+    ma = compiled.memory_analysis()
+    out["memory"] = {
+        "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+        "output_bytes_per_device": int(ma.output_size_in_bytes),
+        "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+        "alias_bytes_per_device": int(ma.alias_size_in_bytes),
+    }
+    out["cost_raw"] = _cost_dict(compiled)
+    out["compile_ok"] = True
+    out["compile_s"] = round(time.time() - t_start, 1)
+
+    if fast:
+        # analytic-only roofline (no extrapolation compiles): compute term
+        # from MODEL flops (a lower bound — labeled); memory/collective
+        # from the analytic TPU models. Used for cells whose fully-unrolled
+        # cost compiles are impractical on one CPU core, and for the
+        # multi-pod compile-proof pass.
+        mesh_shape = {a: mesh.shape[a] for a in mesh.axis_names}
+        ana = analytic_bytes(cfg, shape_name, policy, mesh_shape)
+        ana_coll = analytic_collective_bytes(cfg, shape_name, policy,
+                                             mesh_shape)
+        n_active = cfg.active_param_count()
+        tokens = sh["batch"] * (sh["seq"] if sh["kind"] != "decode" else 1)
+        mult = 6 if sh["kind"] == "train" else 2
+        model_flops = mult * n_active * tokens
+        compute_s = model_flops / n_chips / PEAK_FLOPS
+        memory_s = ana["total"] / HBM_BW
+        collective_s = ana_coll["total"] / ICI_BW
+        dom = max((("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s)), key=lambda t: t[1])
+        out["roofline"] = {"compute_s": compute_s, "memory_s": memory_s,
+                           "collective_s": collective_s,
+                           "dominant": dom[0], "bound_s": dom[1],
+                           "analytic_only": True}
+        out["model_flops"] = {
+            "n_active_params": n_active, "tokens": tokens,
+            "model_flops": model_flops,
+            "hlo_flops_global": 0.0, "useful_ratio": 0.0,
+            "roofline_fraction": (model_flops / n_chips / PEAK_FLOPS)
+            / dom[1] if dom[1] else 0.0}
+
+    # ---- 2. roofline accounting via depth extrapolation ------------------
+    if not fast:
+        Pd = _period(cfg)
+        L = cfg.n_enc_layers if cfg.family == "encdec" else cfg.n_layers
+        reps = L // Pd
+        costs = []
+        for depth_reps in (1, 2):
+            c_small = _derive_depth(cfg, Pd * depth_reps, sh["seq"])
+            _, comp_small = lower_cell(c_small, shape_name, mesh, policy,
+                                       microbatches=microbatches,
+                                       kv_len_override=kv_len_override)
+            cd = _cost_dict(comp_small)
+            cd["coll"] = collective_bytes(comp_small.as_text())
+            costs.append(cd)
+        def _extrap(v1: float, v2: float) -> float:
+            d = v2 - v1
+            if d <= 0:
+                # XLA CSE/DCE across the duplicated layers can make the
+                # 2P-depth compile cheaper per layer than P-depth; fall
+                # back to the per-period average of the deeper compile
+                return (v2 / 2.0) * (reps + 1)
+            return v1 + (reps - 1) * d
+
+        flops_dev = _extrap(costs[0]["flops"], costs[1]["flops"])
+        bytes_dev = _extrap(costs[0]["bytes"], costs[1]["bytes"])
+        coll: Dict[str, float] = {}
+        for k in set(costs[0]["coll"]) | set(costs[1]["coll"]):
+            coll[k] = _extrap(costs[0]["coll"].get(k, 0.0),
+                              costs[1]["coll"].get(k, 0.0))
+        coll_dev = weighted_collective_bytes(coll)
+        mesh_shape = {a: mesh.shape[a] for a in mesh.axis_names}
+        ana = analytic_bytes(cfg, shape_name, policy, mesh_shape)
+        ana_coll = analytic_collective_bytes(cfg, shape_name, policy,
+                                             mesh_shape)
+        out["per_device"] = {"flops": flops_dev,
+                             "bytes_hlo_upper": bytes_dev,
+                             "bytes_kernelized": ana["total"],
+                             "bytes_breakdown": ana,
+                             "collective_bytes_hlo": coll_dev,
+                             "collective_bytes_analytic": ana_coll["total"],
+                             "collective_breakdown": ana_coll,
+                             "collectives_by_kind": coll}
+        # roofline terms (seconds). memory/collective use the analytic TPU
+        # models; the HLO-parsed numbers (recorded alongside) are upper
+        # bounds — XLA:CPU neither fuses flash/SSD blocks (inflating bytes)
+        # nor prices ICI (inflating its choice of resharding collectives).
+        compute_s = flops_dev / PEAK_FLOPS
+        memory_s = ana["total"] / HBM_BW
+        memory_s_upper = bytes_dev / HBM_BW
+        collective_s = ana_coll["total"] / ICI_BW
+        collective_s_upper = coll_dev / ICI_BW
+        dominant = max((("compute", compute_s), ("memory", memory_s),
+                        ("collective", collective_s)), key=lambda t: t[1])
+        out["roofline"] = {
+            "compute_s": compute_s, "memory_s": memory_s,
+            "memory_s_hlo_upper": memory_s_upper,
+            "collective_s": collective_s,
+            "collective_s_hlo_upper": collective_s_upper,
+            "dominant": dominant[0],
+            "bound_s": dominant[1],
+        }
+        # model flops: 6*N*D train, 2*N*D inference, N = active params
+        n_active = cfg.active_param_count()
+        tokens = sh["batch"] * (sh["seq"] if sh["kind"] != "decode" else 1)
+        mult = 6 if sh["kind"] == "train" else 2
+        model_flops = mult * n_active * tokens
+        hlo_flops_global = flops_dev * n_chips
+        out["model_flops"] = {
+            "n_active_params": n_active, "tokens": tokens,
+            "model_flops": model_flops,
+            "hlo_flops_global": hlo_flops_global,
+            "useful_ratio": (model_flops / hlo_flops_global
+                             if hlo_flops_global else 0.0),
+            "roofline_fraction": (model_flops / n_chips / PEAK_FLOPS)
+            / dominant[1] if dominant[1] else 0.0,
+        }
+    out["elapsed_s"] = round(time.time() - t_start, 1)
+    return out
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool) -> Path:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    return RESULTS / f"{arch}__{shape}__{mesh}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="compile proof only (skip roofline extrapolation)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    todo = []
+    if args.all:
+        for a, s, skip in cells():
+            todo.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        if args.shape == "long_500k" and args.arch not in LONG_CONTEXT_OK:
+            print(f"SKIP {args.arch} long_500k (pure full-attention; "
+                  "see DESIGN.md §3.3)")
+            return
+        todo.append((args.arch, args.shape))
+
+    n_fail = 0
+    for arch, shape in todo:
+        path = cell_path(arch, shape, args.multipod)
+        if args.skip_existing and path.exists():
+            print(f"cached {path.name}")
+            continue
+        try:
+            res = run_cell(arch, shape, multi_pod=args.multipod,
+                           fast=args.fast)
+            path.write_text(json.dumps(res, indent=1))
+            rl = res.get("roofline", {})
+            print(f"OK  {arch:22s} {shape:12s} mesh={res['mesh']:8s} "
+                  f"dominant={rl.get('dominant', '-'):10s} "
+                  f"compile={res['compile_s']}s")
+        except Exception as e:
+            n_fail += 1
+            traceback.print_exc()
+            print(f"FAIL {arch} {shape}: {type(e).__name__}: {e}")
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh construction (dry-run target topology).
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (smoke tests run on 1 CPU device; only dryrun.py
+sets XLA_FLAGS for 512 placeholder devices).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod. The `pod`
+    axis is the DCN-linked outer axis (gradient all-reduce only); `data`
+    and `model` are ICI axes."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist right now (smoke tests: 1 CPU device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,115 @@
+"""End-to-end training driver.
+
+Wires together: config registry -> data pipeline (registry-backed shards)
+-> pjit train step -> checkpoint manager (manifests in the metadata plane)
+-> fleet runtime (heartbeats, failover, elastic re-mesh).
+
+On this container it trains reduced configs on the host mesh; on a pod the
+same driver takes ``--mesh pod`` and the production sharding policy.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1_5_4b \
+      --smoke --steps 20 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, get_config, get_smoke_config
+from ..data import DataPipeline, synthetic_batch
+from ..metaplane import MetadataPlane
+from ..models import init_params, param_specs
+from ..models.params import axes_tree
+from ..parallel.sharding import MeshPolicy, logical_to_pspec
+from ..ckpt import CheckpointManager
+from ..runtime import FleetRuntime
+from ..train.optimizer import OptConfig, adamw_init
+from ..train.step import make_train_step
+from .mesh import make_host_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="qwen1_5_4b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro-ckpt")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-worker-at", type=int, default=-1,
+                    help="inject a worker failure at this step (demo)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh()
+    policy = MeshPolicy()
+    job = f"{args.arch}-train"
+
+    plane = MetadataPlane()
+    fleet = FleetRuntime(plane, n_workers=4, model_axis=mesh.shape["model"])
+    pipeline = DataPipeline(plane, f"{args.arch}-ds", n_shards=16)
+    ckpt = CheckpointManager(args.ckpt_dir, plane, job, keep=2)
+
+    specs = param_specs(cfg)
+    params = init_params(specs, jax.random.PRNGKey(0))
+    opt_state = adamw_init(params)
+    start = 0
+    if args.resume:
+        restored = ckpt.restore_latest()
+        if restored is not None:
+            start, p_np, o_np = restored
+            params = jax.tree.map(jnp.asarray, p_np)
+            opt_state = jax.tree.map(jnp.asarray, o_np)
+            print(f"resumed from step {start}")
+
+    opt = OptConfig(total_steps=max(args.steps, 1))
+    step_fn = jax.jit(make_train_step(cfg, policy, mesh, opt=opt,
+                                      microbatches=args.microbatches))
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        fleet.tick()
+        plane.tick()
+        if step == args.fail_worker_at:
+            fleet.fail_worker(0)
+            print(f"[step {step}] injected worker-0 failure; "
+                  f"leader={fleet.leader()} mesh={fleet.maybe_remesh()}")
+        shard = pipeline.lease(worker=fleet.leader() or 0)
+        if shard is not None:
+            pipeline.heartbeat(fleet.leader() or 0, shard)
+        b = synthetic_batch(args.batch, args.seq, cfg.vocab_size, step=step)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.ones(
+                (args.batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+            batch["positions"] = jnp.zeros((args.batch, args.seq, 3),
+                                           jnp.int32)
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.ones(
+                (args.batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        if shard is not None:
+            pipeline.complete(fleet.leader() or 0, shard)
+        plane.record_step(job, step, loss=float(loss))
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(loss):8.4f} "
+                  f"({time.time() - t0:5.1f}s)")
+        if (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, params, opt_state)
+            print(f"checkpointed step {step + 1}")
+    print(f"done: {args.steps - start} steps in {time.time() - t0:.1f}s; "
+          f"ledger last step = {plane.last_step(job)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,380 @@
+"""Core layers: norms, RoPE / M-RoPE, GQA attention (train + KV-cache
+decode, sliding-window and local:global variants), MLP variants.
+
+All functions are pure; parameters come in as pytrees built from
+:mod:`repro.models.params` specs. Activation sharding is annotated with
+logical axes via ``shard_constraint`` so one :class:`MeshPolicy` governs the
+whole network.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..parallel.sharding import MeshPolicy, shard_constraint
+from .config import ModelConfig
+from .params import ParamSpec
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, p: Dict[str, Any], x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def norm_specs(cfg: ModelConfig, d: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d = d or cfg.d_model
+    s = {"scale": ParamSpec((d,), ("embed",), "zeros")}
+    if cfg.norm == "layernorm":
+        s = {"scale": ParamSpec((d,), ("embed",), "ones"),
+             "bias": ParamSpec((d,), ("embed",), "zeros")}
+    return s
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE for qwen2-vl)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] (int)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,hd/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, ...]) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): positions3 [B, S, 3] = (t, h, w) ids;
+    the rotary half-dim is split into `sections` (t/h/w bands), each band
+    rotated by its own position stream."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    # band assignment for every frequency index
+    bounds = jnp.cumsum(jnp.asarray(sections))          # e.g. [16, 40, 64]
+    idx = jnp.arange(hd // 2)
+    band = jnp.searchsorted(bounds, idx, side="right")  # 0,1,2
+    band = jnp.clip(band, 0, positions3.shape[-1] - 1)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(band, positions3.shape[:2] + (hd // 2,)),
+        axis=-1)                                        # [B,S,hd/2]
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, hd, nh, nkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    s = {
+        "wq": ParamSpec((d, nh, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, nkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, nkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((nh, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((nh, hd), ("heads", "head_dim"), "zeros")
+        s["bk"] = ParamSpec((nkv, hd), ("kv_heads", "head_dim"), "zeros")
+        s["bv"] = ParamSpec((nkv, hd), ("kv_heads", "head_dim"), "zeros")
+    return s
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+          softcap: Optional[float]) -> jax.Array:
+    """q [B,Sq,H,hd], k/v [B,Sk,KV,hd] with H = KV*G. Returns [B,Sq,H,hd]."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      is_global: Any = True,
+                      window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      block_q: int = 512, block_k: int = 512,
+                      unroll: bool = False) -> jax.Array:
+    """Causal attention without materializing the [Sq, Sk] matrix
+    (flash-attention algorithm in pure jnp; the oracle for
+    ``kernels/flash_attention``).
+
+    Outer python loop over query blocks; inner scan over key blocks with an
+    online softmax (running max + denominator). Key blocks that are fully
+    masked (beyond the causal frontier, or — for STATIC local layers —
+    outside the sliding window) are skipped entirely, so sliding-window
+    archs get their S*W FLOPs instead of S^2. A traced `is_global` (gemma3
+    scan) disables the window skip and applies the mask dynamically.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    nq, nk = S // bq, S // bk
+    static_local = isinstance(is_global, bool) and not is_global \
+        and window is not None
+    qg = q.reshape(B, nq, bq, KV, G, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    out_blocks = []
+    for qi in range(nq):
+        # keep blocks in the input dtype (bf16): f32 casts of whole q/k/v
+        # force XLA's SPMD solver into full-batch all-gathers; the matmuls
+        # accumulate in f32 via preferred_element_type regardless
+        qb = qg[:, qi]                                   # [B,bq,KV,G,hd]
+        lo = 0
+        hi = ((qi + 1) * bq + bk - 1) // bk              # causal frontier
+        if static_local:
+            lo = max(0, (qi * bq - (window - 1)) // bk)
+        m = jnp.full((B, KV, G, bq), -jnp.inf, jnp.float32)
+        l = jnp.zeros((B, KV, G, bq), jnp.float32)
+        acc = jnp.zeros((B, KV, G, bq, hd), jnp.float32)
+
+        def kv_step(carry, ki):
+            m0, l0, a0 = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, ki * bk, bk, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ki * bk, bk, 1)
+            s_ = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb,
+                            preferred_element_type=jnp.float32) * scale
+            if softcap:
+                s_ = softcap * jnp.tanh(s_ / softcap)
+            qpos = qi * bq + jnp.arange(bq)[:, None]
+            kpos = ki * bk + jnp.arange(bk)[None, :]
+            mask = kpos <= qpos
+            if window is not None:
+                wmask = kpos > qpos - window
+                if isinstance(is_global, bool):
+                    if not is_global:
+                        mask = mask & wmask
+                else:
+                    mask = mask & jnp.where(is_global, True, wmask)
+            s_ = jnp.where(mask[None, None, None], s_, -jnp.inf)
+            m1 = jnp.maximum(m0, s_.max(-1))
+            # guard fully-masked rows (m1 = -inf)
+            m1s = jnp.where(jnp.isfinite(m1), m1, 0.0)
+            p = jnp.exp(s_ - m1s[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m0), jnp.exp(m0 - m1s), 0.0)
+            l1 = l0 * corr + p.sum(-1)
+            a1 = a0 * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m1, l1, a1), None
+
+        kis = jnp.arange(lo, hi)
+        if unroll or len(kis) <= 1:
+            carry = (m, l, acc)
+            for ki in range(lo, hi):
+                carry, _ = kv_step(carry, ki)
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m, l, acc), kis)
+        ob = acc / jnp.maximum(l, 1e-30)[..., None]      # [B,KV,G,bq,hd]
+        out_blocks.append(ob.transpose(0, 3, 1, 2, 4))  # [B,bq,KV,G,hd]
+    out = jnp.concatenate(out_blocks, axis=1)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def causal_mask(Sq: int, Sk: int, *, window: Optional[int] = None,
+                offset: int = 0) -> jax.Array:
+    """[1, Sq, Sk] causal (+sliding-window) mask. `offset` = absolute
+    position of query 0 (for decode, offset = cache length)."""
+    qpos = jnp.arange(Sq)[:, None] + offset
+    kpos = jnp.arange(Sk)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m[None]
+
+
+def attention_block(p: Dict[str, Any], x: jax.Array, *, cfg: ModelConfig,
+                    positions: jax.Array, policy: MeshPolicy,
+                    mesh: Optional[Mesh] = None,
+                    is_global: Any = True,
+                    cache: Optional[Dict[str, jax.Array]] = None,
+                    cache_index: Optional[jax.Array] = None,
+                    use_pallas: bool = False
+                    ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """GQA attention. Train/prefill when `cache` is None or being filled;
+    decode (Sq=1) updates `cache` at `cache_index` and attends to the whole
+    cache. `is_global` may be a traced bool (scan over mixed local/global
+    layers, gemma3): local layers apply the sliding-window mask.
+    """
+    B, Sq, d = x.shape
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        pos1d = positions[..., 0]
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        pos1d = positions
+    q = shard_constraint(q, ("batch", "seq", "heads", None), policy, mesh)
+    k = shard_constraint(k, ("batch", "kv_seq", "kv_heads", None), policy,
+                         mesh)
+
+    window = cfg.sliding_window
+    new_cache = cache
+    if cache is not None and cache_index is not None:
+        # decode: write k/v at cache_index, attend over the cache
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(
+            cache["k"].dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(
+            cache["v"].dtype), (0, cache_index, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        Sk = ck.shape[1]
+        kpos = jnp.arange(Sk)[None, :]
+        valid = kpos <= cache_index                     # causal over cache
+        wmask = jnp.where(jnp.asarray(is_global),
+                          jnp.ones((1, Sk), bool),
+                          kpos > cache_index - (window or Sk))
+        mask = (valid & wmask)[:, None, :]              # [1,1,Sk]
+        out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                    jnp.broadcast_to(mask, (B, Sq, Sk)), cfg.logit_softcap)
+    else:
+        if use_pallas:
+            from ..kernels.flash_attention import ops as fa_ops
+            out = fa_ops.flash_attention(
+                q, k, v, causal=True,
+                window=None if (is_global is True) else window,
+                softcap=cfg.logit_softcap)
+        elif Sq >= 1024:
+            # blocked online-softmax: never materializes [Sq,Sk] (memory
+            # roofline) and skips out-of-window blocks for static-local
+            # layers (compute roofline for SWA archs)
+            out = blocked_attention(q, k, v, is_global=is_global,
+                                    window=window,
+                                    softcap=cfg.logit_softcap,
+                                    block_q=cfg.attn_block_q,
+                                    block_k=cfg.attn_block_k,
+                                    unroll=cfg.unroll_scans)
+        else:
+            full = causal_mask(Sq, Sq)
+            local = causal_mask(Sq, Sq, window=window)
+            mask = jnp.where(jnp.asarray(is_global), full, local)
+            out = _sdpa(q, k, v, jnp.broadcast_to(mask, (B, Sq, Sq)),
+                        cfg.logit_softcap)
+        if cache is not None:                            # prefill fills cache
+            pad = cache["k"].shape[1] - Sq
+            ck = jnp.pad(k.astype(cache["k"].dtype),
+                         ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cv = jnp.pad(v.astype(cache["v"].dtype),
+                         ((0, 0), (0, pad), (0, 0), (0, 0)))
+            new_cache = {"k": ck, "v": cv}
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+    y = shard_constraint(y, ("batch", "seq", "act_embed"), policy, mesh)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None
+              ) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        return {"wi": ParamSpec((d, f), ("embed", "mlp")),
+                "wg": ParamSpec((d, f), ("embed", "mlp")),
+                "wo": ParamSpec((f, d), ("mlp", "embed"))}
+    return {"wi": ParamSpec((d, f), ("embed", "mlp")),
+            "wo": ParamSpec((f, d), ("mlp", "embed"))}
+
+
+def mlp_block(p: Dict[str, Any], x: jax.Array, *, cfg: ModelConfig,
+              policy: MeshPolicy, mesh: Optional[Mesh] = None) -> jax.Array:
+    dt = x.dtype
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wi"].astype(dt))
+    elif cfg.mlp_type == "relu2":                     # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(x @ p["wi"].astype(dt)))
+    else:
+        h = jax.nn.gelu(x @ p["wi"].astype(dt))
+    h = shard_constraint(h, ("batch", "seq", "mlp"), policy, mesh)
+    y = h @ p["wo"].astype(dt)
+    return shard_constraint(y, ("batch", "seq", "act_embed"), policy, mesh)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    s = {"tok": ParamSpec((cfg.vocab_size, cfg.d_model),
+                          ("vocab", "embed"), "normal", 1.0)}
+    if not cfg.tie_embeddings:
+        s["head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                              ("embed", "vocab"))
+    return s
+
+
+def embed(p: Dict[str, Any], tokens: jax.Array, *, policy: MeshPolicy,
+          mesh: Optional[Mesh] = None, dtype=jnp.bfloat16) -> jax.Array:
+    x = jnp.take(p["tok"].astype(dtype), tokens, axis=0)
+    return shard_constraint(x, ("batch", "seq", "act_embed"), policy, mesh)
+
+
+def lm_head(p: Dict[str, Any], x: jax.Array, *, policy: MeshPolicy,
+            mesh: Optional[Mesh] = None) -> jax.Array:
+    w = p.get("head")
+    if w is None:
+        w = p["tok"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return shard_constraint(logits, ("batch", "seq", "vocab"), policy, mesh)

@@ -1,0 +1,562 @@
+"""Model assembly: one composable decoder covering all ten architectures.
+
+Families:
+  dense / moe / vlm — transformer decoder, scan-over-layers, per-layer
+        flags drive local:global attention (gemma3) and MoE (qwen3/mixtral);
+        vlm (qwen2-vl) splices precomputed patch embeddings + M-RoPE.
+  hybrid            — zamba2: Mamba2 backbone + a SHARED attention block
+        applied every `shared_attn_every` layers (own KV slot per
+        application).
+  ssm               — rwkv6: attention-free WKV blocks.
+  encdec            — seamless: bidirectional encoder over frame embeddings
+        (stub frontend per assignment) + causal decoder w/ cross-attention.
+
+Interface (all pure functions):
+  param_specs(cfg)                      -> ParamSpec tree
+  init_cache_specs(cfg, B, S_max)       -> ParamSpec-like tree for caches
+  forward(params, batch, cfg, policy, mesh, ...) -> logits
+  decode_step(params, batch, cache, index, ...)  -> (logits, new cache)
+  loss_fn(params, batch, ...)           -> scalar loss
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from ..parallel.sharding import MeshPolicy, shard_constraint
+from .config import ModelConfig
+from .layers import (apply_norm, attention_block, attn_specs, causal_mask,
+                     embed, embed_specs, lm_head, mlp_block, mlp_specs,
+                     norm_specs, _sdpa)
+from .mamba2 import mamba2_block, mamba2_specs
+from .moe import moe_apply, moe_specs
+from .params import ParamSpec
+from .rwkv6 import rwkv6_att, rwkv6_ffn, rwkv6_specs
+
+
+def _stack(specs: Any, L: int) -> Any:
+    """Prepend a scanned `layers` axis to every leaf spec."""
+    return jax.tree.map(
+        lambda s: ParamSpec((L,) + s.shape, ("layers",) + s.axes, s.init,
+                            s.scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def layer_flags(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer is_global flags (gemma3 5:1 local:global; SWA archs are
+    all-local; others all-global)."""
+    L = cfg.n_layers
+    if cfg.global_interval:
+        return np.asarray([(i % cfg.global_interval) ==
+                           (cfg.global_interval - 1) for i in range(L)])
+    if cfg.sliding_window:
+        return np.zeros(L, bool)
+    return np.ones(L, bool)
+
+
+# ===========================================================================
+# decoder transformer (dense / moe / vlm)
+# ===========================================================================
+
+
+def _layer_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    s: Dict[str, Any] = {"ln1": norm_specs(cfg), "ln2": norm_specs(cfg),
+                         "attn": attn_specs(cfg)}
+    if cfg.is_moe:
+        s["moe"] = moe_specs(cfg)
+    else:
+        s["mlp"] = mlp_specs(cfg)
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.family == "ssm":
+        return _rwkv_param_specs(cfg)
+    if cfg.family == "hybrid":
+        return _hybrid_param_specs(cfg)
+    if cfg.family == "encdec":
+        return _encdec_param_specs(cfg)
+    s = {"embed": embed_specs(cfg),
+         "layers": _stack(_layer_specs(cfg), cfg.n_layers),
+         "ln_f": norm_specs(cfg)}
+    if cfg.family == "vlm":
+        s["patch_proj"] = {
+            "w": ParamSpec((cfg.d_model, cfg.d_model), ("embed", None))}
+    return s
+
+
+def init_cache_specs(cfg: ModelConfig, B: int, S_max: int) -> Any:
+    """KV-cache / state trees as ParamSpecs (zeros init; `kv_seq` logical
+    axis lets long-context policies shard the cache over `data`)."""
+    if cfg.family == "ssm":
+        d = cfg.d_model
+        H, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+        L = cfg.n_layers
+        return {"wkv": ParamSpec((L, B, H, hd, hd),
+                                 ("layers", "batch", "heads", None, None),
+                                 "zeros"),
+                "shift_a": ParamSpec((L, B, 1, d),
+                                     ("layers", "batch", None, "act_embed"),
+                                     "zeros"),
+                "shift_f": ParamSpec((L, B, 1, d),
+                                     ("layers", "batch", None, "act_embed"),
+                                     "zeros")}
+    if cfg.family == "hybrid":
+        d = cfg.d_model
+        d_in = cfg.ssm_expand * d
+        H = cfg.ssm_heads or max(1, d_in // 64)
+        hd = d_in // H
+        L, N, K = cfg.n_layers, cfg.ssm_state, cfg.ssm_conv
+        n_apps = max(1, L // max(1, cfg.shared_attn_every))
+        kv = cfg.n_kv_heads
+        return {"h": ParamSpec((L, B, H, hd, N),
+                               ("layers", "batch", None, None, "state"),
+                               "zeros"),
+                "conv": ParamSpec((L, B, K - 1, d_in + 2 * N),
+                                  ("layers", "batch", None, None), "zeros"),
+                "shared_k": ParamSpec((n_apps, B, S_max, kv, cfg.hd),
+                                      (None, "batch", "kv_seq", "kv_heads",
+                                       None), "zeros"),
+                "shared_v": ParamSpec((n_apps, B, S_max, kv, cfg.hd),
+                                      (None, "batch", "kv_seq", "kv_heads",
+                                       None), "zeros")}
+    if cfg.family == "encdec":
+        kv = cfg.n_kv_heads
+        return {"k": ParamSpec((cfg.n_dec_layers, B, S_max, kv, cfg.hd),
+                               ("layers", "batch", "kv_seq", "kv_heads",
+                                None), "zeros"),
+                "v": ParamSpec((cfg.n_dec_layers, B, S_max, kv, cfg.hd),
+                               ("layers", "batch", "kv_seq", "kv_heads",
+                                None), "zeros"),
+                "enc_out": ParamSpec((B, cfg.n_patches, cfg.d_model),
+                                     ("batch", "frames", "act_embed"), "zeros")}
+    kv = cfg.n_kv_heads
+    return {"k": ParamSpec((cfg.n_layers, B, S_max, kv, cfg.hd),
+                           ("layers", "batch", "kv_seq", "kv_heads", None),
+                           "zeros"),
+            "v": ParamSpec((cfg.n_layers, B, S_max, kv, cfg.hd),
+                           ("layers", "batch", "kv_seq", "kv_heads", None),
+                           "zeros")}
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.
+                              nothing_saveable)
+    if cfg.remat == "selective":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _decoder_stack(params: Dict[str, Any], x: jax.Array, *,
+                   cfg: ModelConfig, policy: MeshPolicy,
+                   mesh: Optional[Mesh], positions: jax.Array,
+                   cache: Optional[Dict[str, jax.Array]] = None,
+                   cache_index: Optional[jax.Array] = None,
+                   use_pallas: bool = False) -> Tuple[jax.Array, Any]:
+    flags = jnp.asarray(layer_flags(cfg))
+    decode = cache_index is not None
+
+    def layer(carry_x, scanned):
+        lp, is_global, ck, cv = scanned
+        h = apply_norm(cfg, lp["ln1"], carry_x)
+        layer_cache = {"k": ck, "v": cv} if ck is not None else None
+        a, new_cache = attention_block(
+            lp["attn"], h, cfg=cfg, positions=positions, policy=policy,
+            mesh=mesh, is_global=is_global, cache=layer_cache,
+            cache_index=cache_index, use_pallas=use_pallas)
+        if cfg.parallel_block:
+            # command-r: x + attn(ln(x)) + mlp(ln(x)) with the same norm
+            m = mlp_block(lp["mlp"], h, cfg=cfg, policy=policy, mesh=mesh)
+            out = carry_x + a + m
+        else:
+            h2 = carry_x + a
+            hn = apply_norm(cfg, lp["ln2"], h2)
+            if cfg.is_moe:
+                m = moe_apply(lp["moe"], hn, cfg=cfg, policy=policy,
+                              mesh=mesh)
+            else:
+                m = mlp_block(lp["mlp"], hn, cfg=cfg, policy=policy,
+                              mesh=mesh)
+            out = h2 + m
+        out = shard_constraint(out, ("batch", "seq", "act_embed"), policy, mesh)
+        nk = new_cache["k"] if new_cache is not None else ck
+        nv = new_cache["v"] if new_cache is not None else cv
+        return out, (nk, nv)
+
+    layer = _maybe_remat(layer, cfg)
+
+    if cfg.scan_layers:
+        ck = cache["k"] if cache is not None else None
+        cv = cache["v"] if cache is not None else None
+
+        def body(carry, xs):
+            out, (nk, nv) = layer(carry, xs)
+            return out, (nk, nv)
+        xs = (params["layers"], flags,
+              ck if ck is not None else jnp.zeros((cfg.n_layers,)),
+              cv if cv is not None else jnp.zeros((cfg.n_layers,)))
+        if cache is None:
+            def body_nc(carry, xs):
+                lp, fl, _, _ = xs
+                out, _ = layer(carry, (lp, fl, None, None))
+                return out, None
+            x, _ = jax.lax.scan(body_nc, x, xs)
+            return x, None
+        x, (nk, nv) = jax.lax.scan(body, x, xs)
+        return x, {"k": nk, "v": nv}
+    # unrolled (hillclimb alternative)
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        ck = cache["k"][i] if cache is not None else None
+        cv = cache["v"][i] if cache is not None else None
+        x, (nk, nv) = layer(x, (lp, flags[i], ck, cv))
+        if cache is not None:
+            new_k.append(nk)
+            new_v.append(nv)
+    nc = {"k": jnp.stack(new_k), "v": jnp.stack(new_v)} \
+        if cache is not None else None
+    return x, nc
+
+
+def forward(params: Dict[str, Any], batch: Dict[str, jax.Array], *,
+            cfg: ModelConfig, policy: MeshPolicy,
+            mesh: Optional[Mesh] = None,
+            cache: Optional[Any] = None,
+            cache_index: Optional[jax.Array] = None,
+            use_pallas: bool = False) -> Tuple[jax.Array, Any]:
+    """Returns (logits, new_cache). Train/prefill: cache_index None."""
+    if cfg.family == "ssm":
+        return _rwkv_forward(params, batch, cfg=cfg, policy=policy,
+                             mesh=mesh, cache=cache,
+                             cache_index=cache_index,
+                             use_pallas=use_pallas)
+    if cfg.family == "hybrid":
+        return _hybrid_forward(params, batch, cfg=cfg, policy=policy,
+                               mesh=mesh, cache=cache,
+                               cache_index=cache_index,
+                               use_pallas=use_pallas)
+    if cfg.family == "encdec":
+        return _encdec_forward(params, batch, cfg=cfg, policy=policy,
+                               mesh=mesh, cache=cache,
+                               cache_index=cache_index,
+                               use_pallas=use_pallas)
+    tokens = batch["tokens"]
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], tokens, policy=policy, mesh=mesh, dtype=dtype)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        # splice precomputed patch embeddings (frontend stub) over the
+        # leading n_patches token positions
+        pe = batch["patch_embeds"].astype(dtype) @ \
+            params["patch_proj"]["w"].astype(dtype)
+        pe = pe.astype(dtype)
+        P_ = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, P_:]], axis=1)
+    if cfg.mrope:
+        positions = batch.get("positions")
+        if positions is None:
+            S = tokens.shape[1]
+            pos1 = (jnp.arange(S)[None, :, None] if cache_index is None
+                    else cache_index[None, None, None] +
+                    jnp.zeros((1, 1, 1), jnp.int32))
+            positions = jnp.broadcast_to(pos1, tokens.shape + (3,))
+    else:
+        S = tokens.shape[1]
+        positions = (jnp.arange(S)[None, :] if cache_index is None
+                     else jnp.full((tokens.shape[0], S), 0) + cache_index)
+        positions = jnp.broadcast_to(positions, tokens.shape)
+    x, new_cache = _decoder_stack(params, x, cfg=cfg, policy=policy,
+                                  mesh=mesh, positions=positions,
+                                  cache=cache, cache_index=cache_index,
+                                  use_pallas=use_pallas)
+    x = apply_norm(cfg, params["ln_f"], x)
+    logits = lm_head(params["embed"], x, policy=policy, mesh=mesh)
+    return logits, new_cache
+
+
+# ===========================================================================
+# rwkv6 (ssm family)
+# ===========================================================================
+
+
+def _rwkv_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    per_layer = dict(rwkv6_specs(cfg))
+    per_layer["ln1"] = norm_specs(cfg)
+    per_layer["ln2"] = norm_specs(cfg)
+    return {"embed": embed_specs(cfg),
+            "layers": _stack(per_layer, cfg.n_layers),
+            "ln_f": norm_specs(cfg)}
+
+
+def _rwkv_forward(params, batch, *, cfg, policy, mesh, cache=None,
+                  cache_index=None, use_pallas=False):
+    tokens = batch["tokens"]
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], tokens, policy=policy, mesh=mesh, dtype=dtype)
+    decode = cache_index is not None
+
+    def layer(carry_x, lp, st):
+        from .layers import rmsnorm
+        h = rmsnorm(carry_x, lp["ln1"]["scale"], cfg.norm_eps)
+        a, st_a = rwkv6_att(lp["att"], h, cfg=cfg, policy=policy, mesh=mesh,
+                            state=st, decode=decode, use_pallas=use_pallas)
+        x2 = carry_x + a
+        h2 = rmsnorm(x2, lp["ln2"]["scale"], cfg.norm_eps)
+        f, new_sf = rwkv6_ffn(lp["ffn"], h2,
+                              cfg=cfg, policy=policy, mesh=mesh,
+                              state={"shift_f": st["shift_f"]}
+                              if st is not None else None)
+        out = x2 + f
+        if st_a is not None:
+            return out, {"wkv": st_a["wkv"], "shift_a": st_a["shift_a"],
+                         "shift_f": new_sf}
+        return out, None
+
+    lp_all = params["layers"]
+    if cache is not None or decode:
+        c = cache
+
+        def body(carry, s):
+            lp, wkv, sa, sf = s
+            out, st = layer(carry, lp,
+                            {"wkv": wkv, "shift_a": sa, "shift_f": sf})
+            return out, (st["wkv"], st["shift_a"], st["shift_f"])
+        x, (wkv, sa, sf) = jax.lax.scan(
+            body, x, (lp_all, c["wkv"], c["shift_a"], c["shift_f"]))
+        new_cache = {"wkv": wkv, "shift_a": sa, "shift_f": sf}
+    else:
+        def body(carry, lp):
+            out, _ = layer(carry, lp, None)
+            return out, None
+        x, _ = jax.lax.scan(body, x, lp_all)
+        new_cache = None
+    from .layers import rmsnorm
+    x = rmsnorm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    logits = lm_head(params["embed"], x, policy=policy, mesh=mesh)
+    return logits, new_cache
+
+
+# ===========================================================================
+# zamba2 (hybrid family)
+# ===========================================================================
+
+
+def _hybrid_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    per_layer = {"ln1": norm_specs(cfg), "mamba": mamba2_specs(cfg),
+                 "ln2": norm_specs(cfg), "mlp": mlp_specs(cfg)}
+    shared = {"ln1": norm_specs(cfg), "attn": attn_specs(cfg),
+              "ln2": norm_specs(cfg), "mlp": mlp_specs(cfg)}
+    return {"embed": embed_specs(cfg),
+            "layers": _stack(per_layer, cfg.n_layers),
+            "shared": shared,
+            "ln_f": norm_specs(cfg)}
+
+
+def _hybrid_forward(params, batch, *, cfg, policy, mesh, cache=None,
+                    cache_index=None, use_pallas=False):
+    tokens = batch["tokens"]
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], tokens, policy=policy, mesh=mesh, dtype=dtype)
+    decode = cache_index is not None
+    B, S = tokens.shape
+    every = max(1, cfg.shared_attn_every)
+    positions = (jnp.arange(S)[None, :] if not decode
+                 else jnp.zeros((B, S), jnp.int32) + cache_index)
+    positions = jnp.broadcast_to(positions, (B, S))
+
+    def mamba_layer(x_in, lp, st):
+        h = apply_norm(cfg, lp["ln1"], x_in)
+        m, new_st = mamba2_block(lp["mamba"], h, cfg=cfg, policy=policy,
+                                 mesh=mesh, state=st, decode=decode,
+                                 use_pallas=use_pallas)
+        x2 = x_in + m
+        h2 = apply_norm(cfg, lp["ln2"], x2)
+        x3 = x2 + mlp_block(lp["mlp"], h2, cfg=cfg, policy=policy,
+                            mesh=mesh)
+        return x3, new_st
+
+    c = cache
+    # scan the mamba backbone; shared attention applied OUTSIDE the scan at
+    # its interval positions (keeps the scan homogeneous; n_apps is small)
+    n_apps = max(1, cfg.n_layers // every)
+    seg = every
+    new_h, new_conv = [], []
+    new_sk, new_sv = [], []
+    for app in range(n_apps):
+        sl = slice(app * seg, (app + 1) * seg)
+        seg_params = jax.tree.map(lambda a: a[sl], params["layers"])
+        if c is not None or decode:
+            def body_s(carry, s):
+                lp, hs, cs = s
+                out, st = mamba_layer(carry, lp, {"h": hs, "conv": cs})
+                return out, (st["h"], st["conv"])
+            x, ys = jax.lax.scan(body_s, x,
+                                 (seg_params, c["h"][sl], c["conv"][sl]))
+            new_h.append(ys[0])
+            new_conv.append(ys[1])
+        else:
+            def body_t(carry, lp):
+                out, _ = mamba_layer(carry, lp, None)
+                return out, None
+            x, _ = jax.lax.scan(body_t, x, seg_params)
+        # shared attention block (same params every application)
+        sp = params["shared"]
+        hh = apply_norm(cfg, sp["ln1"], x)
+        app_cache = None
+        if c is not None:
+            app_cache = {"k": c["shared_k"][app], "v": c["shared_v"][app]}
+        a, new_app_cache = attention_block(
+            sp["attn"], hh, cfg=cfg, positions=positions, policy=policy,
+            mesh=mesh, is_global=True, cache=app_cache,
+            cache_index=cache_index, use_pallas=use_pallas)
+        x = x + a
+        h2 = apply_norm(cfg, sp["ln2"], x)
+        x = x + mlp_block(sp["mlp"], h2, cfg=cfg, policy=policy, mesh=mesh)
+        if c is not None and new_app_cache is not None:
+            new_sk.append(new_app_cache["k"])
+            new_sv.append(new_app_cache["v"])
+    new_cache = None
+    if c is not None:
+        new_cache = {"h": jnp.concatenate(new_h) if new_h else c["h"],
+                     "conv": jnp.concatenate(new_conv) if new_conv
+                     else c["conv"],
+                     "shared_k": jnp.stack(new_sk) if new_sk
+                     else c["shared_k"],
+                     "shared_v": jnp.stack(new_sv) if new_sv
+                     else c["shared_v"]}
+    x = apply_norm(cfg, params["ln_f"], x)
+    logits = lm_head(params["embed"], x, policy=policy, mesh=mesh)
+    return logits, new_cache
+
+
+# ===========================================================================
+# seamless (encdec family)
+# ===========================================================================
+
+
+def _encdec_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    enc_layer = {"ln1": norm_specs(cfg), "attn": attn_specs(cfg),
+                 "ln2": norm_specs(cfg), "mlp": mlp_specs(cfg)}
+    dec_layer = {"ln1": norm_specs(cfg), "attn": attn_specs(cfg),
+                 "ln_x": norm_specs(cfg), "xattn": attn_specs(cfg),
+                 "ln2": norm_specs(cfg), "mlp": mlp_specs(cfg)}
+    return {"embed": embed_specs(cfg),
+            "enc": _stack(enc_layer, cfg.n_enc_layers),
+            "dec": _stack(dec_layer, cfg.n_dec_layers),
+            "ln_enc": norm_specs(cfg), "ln_f": norm_specs(cfg)}
+
+
+def _cross_attention(p, x, enc_out, *, cfg, policy, mesh):
+    B, Sq, d = x.shape
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+    Sk = enc_out.shape[1]
+    mask = jnp.ones((B, Sq, Sk), bool)
+    out = _sdpa(q, k, v, mask, None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def _encdec_forward(params, batch, *, cfg, policy, mesh, cache=None,
+                    cache_index=None, use_pallas=False):
+    dtype = jnp.dtype(cfg.dtype)
+    decode = cache_index is not None
+    # ---------------- encoder (skipped during decode: enc_out cached) ----
+    if not decode:
+        enc_x = batch["frames"].astype(dtype)          # stub frontend
+        pos_e = jnp.broadcast_to(jnp.arange(enc_x.shape[1])[None, :],
+                                 enc_x.shape[:2])
+
+        def enc_layer(carry, lp):
+            h = apply_norm(cfg, lp["ln1"], carry)
+            B, S, _ = h.shape
+            dte = h.dtype
+            q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"].astype(dte))
+            k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"].astype(dte))
+            v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"].astype(dte))
+            from .layers import apply_rope
+            q = apply_rope(q, pos_e, cfg.rope_theta)
+            k = apply_rope(k, pos_e, cfg.rope_theta)
+            a = _sdpa(q, k, v, jnp.ones((B, S, S), bool), None)
+            a = jnp.einsum("bshk,hkd->bsd", a, lp["attn"]["wo"].astype(dte))
+            x2 = carry + a
+            h2 = apply_norm(cfg, lp["ln2"], x2)
+            return x2 + mlp_block(lp["mlp"], h2, cfg=cfg, policy=policy,
+                                  mesh=mesh), None
+        enc_out, _ = jax.lax.scan(enc_layer, enc_x, params["enc"])
+        enc_out = apply_norm(cfg, params["ln_enc"], enc_out)
+    else:
+        enc_out = cache["enc_out"].astype(dtype)
+    # ---------------- decoder -------------------------------------------
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, policy=policy, mesh=mesh, dtype=dtype)
+    B, S = tokens.shape
+    positions = (jnp.arange(S)[None, :] if not decode
+                 else jnp.zeros((B, S), jnp.int32) + cache_index)
+    positions = jnp.broadcast_to(positions, (B, S))
+
+    def dec_layer(carry, scanned):
+        lp, ck, cv = scanned
+        h = apply_norm(cfg, lp["ln1"], carry)
+        layer_cache = {"k": ck, "v": cv} if ck is not None else None
+        a, new_cache_l = attention_block(
+            lp["attn"], h, cfg=cfg, positions=positions, policy=policy,
+            mesh=mesh, is_global=True, cache=layer_cache,
+            cache_index=cache_index, use_pallas=use_pallas)
+        x2 = carry + a
+        hx = apply_norm(cfg, lp["ln_x"], x2)
+        x3 = x2 + _cross_attention(lp["xattn"], hx, enc_out, cfg=cfg,
+                                   policy=policy, mesh=mesh)
+        h2 = apply_norm(cfg, lp["ln2"], x3)
+        out = x3 + mlp_block(lp["mlp"], h2, cfg=cfg, policy=policy,
+                             mesh=mesh)
+        nk = new_cache_l["k"] if new_cache_l is not None else ck
+        nv = new_cache_l["v"] if new_cache_l is not None else cv
+        return out, (nk, nv)
+
+    if cache is not None:
+        x, (nk, nv) = jax.lax.scan(dec_layer, x,
+                                   (params["dec"], cache["k"], cache["v"]))
+        new_cache = {"k": nk, "v": nv, "enc_out": enc_out.astype(
+            cache["enc_out"].dtype)}
+    else:
+        def body(carry, lp):
+            out, _ = dec_layer(carry, (lp, None, None))
+            return out, None
+        x, _ = jax.lax.scan(body, x, params["dec"])
+        new_cache = None
+    x = apply_norm(cfg, params["ln_f"], x)
+    logits = lm_head(params["embed"], x, policy=policy, mesh=mesh)
+    return logits, new_cache
+
+
+# ===========================================================================
+# loss
+# ===========================================================================
+
+
+def loss_fn(params, batch, *, cfg: ModelConfig, policy: MeshPolicy,
+            mesh: Optional[Mesh] = None, use_pallas: bool = False
+            ) -> jax.Array:
+    logits, _ = forward(params, batch, cfg=cfg, policy=policy, mesh=mesh,
+                        use_pallas=use_pallas)
+    labels = batch["labels"]
+    # vocab stays TP-sharded throughout: logsumexp and the one-hot-masked
+    # gold-logit reduction are elementwise+reduce over the sharded axis
+    # (take_along_axis over a sharded vocab makes XLA all-gather logits)
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    logz = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    viota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, len(lf.shape) - 1)
+    gold = jnp.sum(jnp.where(viota == labels[..., None], lf, 0.0), axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

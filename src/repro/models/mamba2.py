@@ -1,0 +1,174 @@
+"""Mamba2 (state-space dual / SSD) mixer — the zamba2 backbone block.
+
+Chunked SSD algorithm (the TPU-friendly formulation; also the spec for the
+``kernels/mamba2_ssd`` Pallas kernel):
+
+  within a chunk of length Q the output is an attention-like quadratic form
+  masked by cumulative decays; across chunks a recurrent state
+  ``h [B, H, hd, N]`` carries the summary. Decode is a single-step state
+  update (constant memory — why SSM archs run the long_500k cell).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import MeshPolicy, shard_constraint
+from .config import ModelConfig
+from .params import ParamSpec
+
+
+def mamba2_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = cfg.ssm_heads or max(1, d_in // 64)
+    N = cfg.ssm_state
+    return {
+        # in_proj output width (2*d_in + 2N + H) is generally not divisible
+        # by the model axis -> kept replicated on that dim; the out_proj
+        # carries the TP sharding for this mixer
+        "in_proj": ParamSpec((d, 2 * d_in + 2 * N + H), ("embed", None)),
+        "conv": ParamSpec((cfg.ssm_conv, d_in + 2 * N), ("conv", None)),
+        "A_log": ParamSpec((H,), (None,), "ones"),
+        "D": ParamSpec((H,), (None,), "ones"),
+        "dt_bias": ParamSpec((H,), (None,), "zeros"),
+        "norm": ParamSpec((d_in,), ("mlp",), "zeros"),
+        "out_proj": ParamSpec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array
+                ) -> Tuple[jax.Array, ...]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads or max(1, d_in // 64)
+    N = cfg.ssm_state
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    x, Bc, Cc = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    return z, x, Bc, Cc, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x [B,S,D]; w [K,D]. Returns (y, new_state)
+    where state is the last K-1 inputs (decode carry)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(y), xp[:, -(K - 1):, :]
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bc: jax.Array,
+                Cc: jax.Array, *, chunk: int = 128,
+                h0: Optional[jax.Array] = None, unroll: bool = False
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan. x [B,S,H,hd]; dt [B,S,H] (softplus'd); A [H] (negative);
+    Bc/Cc [B,S,N]. Returns (y [B,S,H,hd], h [B,H,hd,N])."""
+    B, S, H, hd = x.shape
+    N = Bc.shape[-1]
+    nc = max(1, S // chunk)
+    Q = S // nc
+    xr = x.reshape(B, nc, Q, H, hd)
+    dtr = dt.reshape(B, nc, Q, H)
+    Br = Bc.reshape(B, nc, Q, N)
+    Cr = Cc.reshape(B, nc, Q, N)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, hd, N), jnp.float32)
+    h0 = h0.astype(jnp.float32)
+
+    la = dtr * A[None, None, None, :]                  # log decay per step
+    cum = jnp.cumsum(la, axis=2)                       # [B,nc,Q,H]
+
+    def body(h, inputs):
+        xq, dtq, bq, cq, laq, cumq = inputs            # per-chunk slices
+        # intra-chunk quadratic form: M[t,s] = C_t.B_s * exp(cum_t - cum_s)
+        # * dt_s   for s <= t
+        cb = jnp.einsum("bqn,bsn->bqs", cq, bq,
+                        preferred_element_type=jnp.float32)  # [B,Q,Q]
+        seg = cumq[:, :, None, :] - cumq[:, None, :, :]      # [B,Q,S,H]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        # mask BEFORE exp: discarded (future) entries carry positive
+        # exponents that overflow, and where(c, exp(x), 0) back-propagates
+        # inf * 0 = NaN through the discarded branch
+        seg = jnp.where(tri[None, :, :, None], seg, -jnp.inf)
+        decay = jnp.exp(seg)
+        M = cb[..., None] * decay * dtq[:, None, :, :]       # [B,Q,S,H]
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", M,
+                             xq.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        state_decay = jnp.exp(cumq)                          # [B,Q,H]
+        y_state = jnp.einsum("bqn,bhpn,bqh->bqhp", cq.astype(jnp.float32),
+                             h, state_decay)
+        # state update
+        rem = jnp.exp(cumq[:, -1:, :] - cumq)                # [B,Q,H]
+        dx = xq.astype(jnp.float32) * (dtq * rem)[..., None]
+        h_new = h * jnp.exp(cumq[:, -1, :])[:, :, None, None] + \
+            jnp.einsum("bqhp,bqn->bhpn", dx, bq.astype(jnp.float32))
+        return h_new, (y_intra + y_state).astype(x.dtype)
+
+    ins = (jnp.moveaxis(xr, 1, 0), jnp.moveaxis(dtr, 1, 0),
+           jnp.moveaxis(Br, 1, 0), jnp.moveaxis(Cr, 1, 0),
+           jnp.moveaxis(la.reshape(B, nc, Q, H), 1, 0),
+           jnp.moveaxis(cum, 1, 0))
+    h, ys = jax.lax.scan(body, h0, ins, unroll=nc if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd)
+    return y, h
+
+
+def ssd_decode_step(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bc: jax.Array, Cc: jax.Array, h: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token state update. x [B,1,H,hd]; h [B,H,hd,N]."""
+    a = jnp.exp(dt[:, 0, :] * A[None, :])              # [B,H]
+    hf = h * a[:, :, None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", x[:, 0].astype(jnp.float32),
+        Bc[:, 0].astype(jnp.float32), dt[:, 0])
+    y = jnp.einsum("bn,bhpn->bhp", Cc[:, 0].astype(jnp.float32), hf)
+    return y[:, None].astype(x.dtype), hf
+
+
+def mamba2_block(p: Dict[str, Any], x: jax.Array, *, cfg: ModelConfig,
+                 policy: MeshPolicy, mesh=None,
+                 state: Optional[Dict[str, jax.Array]] = None,
+                 decode: bool = False, use_pallas: bool = False
+                 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full mixer: in_proj -> causal conv -> SSD -> gated RMSNorm ->
+    out_proj. `state` = {"h": [B,H,hd,N], "conv": [B,K-1,D]} for decode."""
+    B, S, d = x.shape
+    d_in = cfg.ssm_expand * d
+    H = cfg.ssm_heads or max(1, d_in // 64)
+    hd = d_in // H
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xi, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xi, Bc, Cc], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv"].astype(x.dtype), conv_state)
+    xi, Bc, Cc = jnp.split(conv_out, [d_in, d_in + cfg.ssm_state], axis=-1)
+    dtp = jax.nn.softplus(dt + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xi.reshape(B, S, H, hd)
+    h0 = state["h"] if state is not None else None
+    if decode:
+        y, h = ssd_decode_step(xh, dtp, A, Bc, Cc,
+                               h0 if h0 is not None else
+                               jnp.zeros((B, H, hd, N1 := cfg.ssm_state),
+                                         jnp.float32))
+    elif use_pallas:
+        from ..kernels.mamba2_ssd import ops as ssd_ops
+        y, h = ssd_ops.ssd(xh, dtp, A, Bc, Cc, h0=h0)
+    else:
+        y, h = ssd_chunked(xh, dtp, A, Bc, Cc, h0=h0,
+                           unroll=cfg.unroll_scans)
+    y = y + xh.astype(y.dtype) * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_in)
+    from .layers import rmsnorm
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(y.dtype)
+    out = shard_constraint(out, ("batch", "seq", "act_embed"), policy, mesh)
+    new_state = {"h": h, "conv": new_conv} if (state is not None or decode) \
+        else None
+    return out, new_state

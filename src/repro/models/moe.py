@@ -1,0 +1,199 @@
+"""Mixture-of-Experts layer: token-choice top-k routing with two
+TPU-native execution strategies (selected by expert/mesh divisibility):
+
+  * **EP (expert parallel)** — experts sharded over the `model` axis;
+    per-device capacity-buffer dispatch + ``all_to_all`` exchange inside
+    ``shard_map`` (GShard-style, qwen3-moe: 128 experts / 16 = 8 per chip).
+  * **TP (tensor parallel)** — when n_experts doesn't divide the `model`
+    axis (mixtral: 8 experts on 16 chips), every chip keeps all experts but
+    shards each expert's hidden dim; the combine is a psum (standard
+    Mixtral TP practice).
+
+A dense reference (``moe_dense``) computes the same function without any
+collective, used by single-device smoke tests and as the kernels' oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..parallel.sharding import MeshPolicy, logical_to_pspec, shard_constraint
+from .config import ModelConfig
+from .params import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f, e = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", "experts")),
+        "wi": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+        "wg": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+        "wo": ParamSpec((e, f, d), ("experts", "expert_mlp", "embed")),
+    }
+
+
+def _router(p: Dict[str, Any], x: jax.Array, k: int
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (weights [.., k], experts [.., k]); weights softmaxed over
+    the selected k (qwen3/mixtral convention)."""
+    logits = jnp.einsum("...d,de->...e", x, p["router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    top, idx = jax.lax.top_k(logits, k)
+    w = jax.nn.softmax(top, axis=-1)
+    return w.astype(x.dtype), idx
+
+
+def _expert_ffn(p, h, which=slice(None)):
+    """h: [E?, C, d] -> [E?, C, d] through each expert's SwiGLU."""
+    wi, wg, wo = p["wi"][which], p["wg"][which], p["wo"][which]
+    a = jnp.einsum("ecd,edf->ecf", h, wi.astype(h.dtype))
+    g = jnp.einsum("ecd,edf->ecf", h, wg.astype(h.dtype))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * a,
+                      wo.astype(h.dtype))
+
+
+# ---------------------------------------------------------------------------
+# dense reference (no collectives): every token through its k experts via
+# gather of expert outputs computed for all experts. O(E/k) extra FLOPs —
+# fine for the tiny smoke configs and as a correctness oracle.
+# ---------------------------------------------------------------------------
+
+
+def moe_dense(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig
+              ) -> jax.Array:
+    B, S, d = x.shape
+    w, idx = _router(p, x, cfg.experts_per_token)        # [B,S,k]
+    xt = x.reshape(1, B * S, d)
+    ys = _expert_ffn(p, jnp.broadcast_to(xt, (cfg.n_experts, B * S, d)))
+    ys = ys.reshape(cfg.n_experts, B, S, d)
+    sel = jnp.take_along_axis(
+        jnp.moveaxis(ys, 0, 2),                          # [B,S,E,d]
+        idx[..., None], axis=2)                          # [B,S,k,d]
+    return jnp.sum(sel * w[..., None], axis=2)
+
+
+# ---------------------------------------------------------------------------
+# capacity-buffer dispatch (shared by EP and TP paths). Everything below
+# operates on per-device token blocks inside shard_map.
+# ---------------------------------------------------------------------------
+
+
+def _dispatch(x2: jax.Array, w: jax.Array, idx: jax.Array, E: int, C: int
+              ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """x2 [T,d]; w/idx [T,k]. Scatter tokens into per-expert capacity
+    buffers. Returns (buffers [E,C,d], keep mask [T,k], pos [T,k], w)."""
+    T, k = idx.shape
+    flat_e = idx.reshape(-1)                             # [T*k]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [T*k, E]
+    pos = jnp.cumsum(onehot, axis=0) * onehot            # 1-based positions
+    pos_in_e = (pos.sum(-1) - 1).reshape(T, k)           # [T,k]
+    keep = pos_in_e < C
+    buf = jnp.zeros((E, C, x2.shape[-1]), x2.dtype)
+    tok_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, k))
+    e_safe = jnp.where(keep, idx, 0)
+    p_safe = jnp.where(keep, pos_in_e, C - 1)
+    buf = buf.at[e_safe.reshape(-1), p_safe.reshape(-1)].add(
+        jnp.where(keep.reshape(-1)[:, None], x2[tok_idx.reshape(-1)], 0))
+    return buf, keep, pos_in_e, w
+
+
+def _combine(y_buf: jax.Array, idx: jax.Array, pos: jax.Array,
+             keep: jax.Array, w: jax.Array) -> jax.Array:
+    """y_buf [E,C,d] -> per-token combine [T,d]."""
+    e_safe = jnp.where(keep, idx, 0)
+    p_safe = jnp.where(keep, pos, 0)
+    gathered = y_buf[e_safe.reshape(-1), p_safe.reshape(-1)]    # [T*k, d]
+    T, k = idx.shape
+    gathered = gathered.reshape(T, k, -1)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    return jnp.sum(gathered * w[..., None], axis=1)
+
+
+def moe_apply(p: Dict[str, Any], x: jax.Array, *, cfg: ModelConfig,
+              policy: MeshPolicy, mesh: Optional[Mesh] = None) -> jax.Array:
+    """Dispatch to EP / TP / dense based on mesh shape."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return moe_dense(p, x, cfg)
+    M = mesh.shape["model"]
+    if M == 1:
+        return moe_dense(p, x, cfg)
+    if cfg.n_experts % M == 0:
+        return _moe_ep(p, x, cfg, policy, mesh)
+    return _moe_tp(p, x, cfg, policy, mesh)
+
+
+def _token_pspec(policy: MeshPolicy, mesh: Mesh) -> P:
+    return logical_to_pspec(("batch", "seq", "act_embed"), policy, mesh)
+
+
+def _moe_ep(p, x, cfg: ModelConfig, policy: MeshPolicy, mesh: Mesh
+            ) -> jax.Array:
+    """Expert parallelism over the `model` axis with all_to_all."""
+    E, k, M = cfg.n_experts, cfg.experts_per_token, mesh.shape["model"]
+    E_loc = E // M
+    xs = _token_pspec(policy, mesh)
+    # experts sharded over model on their leading dim; router replicated
+    wspec = {"router": P(None, None),
+             "wi": P("model", None, None), "wg": P("model", None, None),
+             "wo": P("model", None, None)}
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(wspec, xs), out_specs=xs, check_rep=False)
+    def run(pp, xb):
+        B, S, d = xb.shape
+        T = B * S
+        C = max(8, int(np.ceil(T * k / E * cfg.capacity_factor)))
+        w, idx = _router(pp, xb, k)
+        x2 = xb.reshape(T, d)
+        buf, keep, pos, w2 = _dispatch(x2, w.reshape(T, k),
+                                       idx.reshape(T, k), E, C)
+        # exchange: [E, C, d] -> [M, E_loc, C, d] -> a2a -> peers' blocks
+        buf = buf.reshape(M, E_loc, C, d)
+        buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=0,
+                                 tiled=False)            # [M, E_loc, C, d]
+        h = buf.reshape(E_loc, M * C, d)
+        y = _expert_ffn(pp, h)                           # local experts
+        y = y.reshape(M, E_loc, C, d)
+        y = jax.lax.all_to_all(y, "model", split_axis=0, concat_axis=0,
+                               tiled=False)
+        y_buf = y.reshape(E, C, d)
+        out = _combine(y_buf, idx.reshape(T, k), pos, keep, w2)
+        return out.reshape(B, S, d)
+
+    return run(p, x)
+
+
+def _moe_tp(p, x, cfg: ModelConfig, policy: MeshPolicy, mesh: Mesh
+            ) -> jax.Array:
+    """Tensor parallelism: all experts on every chip, hidden dim sharded
+    over `model`; psum combines the down-projection."""
+    E, k = cfg.n_experts, cfg.experts_per_token
+    xs = _token_pspec(policy, mesh)
+    wspec = {"router": P(None, None),
+             "wi": P(None, None, "model"), "wg": P(None, None, "model"),
+             "wo": P(None, "model", None)}
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(wspec, xs), out_specs=xs, check_rep=False)
+    def run(pp, xb):
+        B, S, d = xb.shape
+        T = B * S
+        C = max(8, int(np.ceil(T * k / E * cfg.capacity_factor)))
+        w, idx = _router(pp, xb, k)
+        x2 = xb.reshape(T, d)
+        buf, keep, pos, w2 = _dispatch(x2, w.reshape(T, k),
+                                       idx.reshape(T, k), E, C)
+        y_buf = _expert_ffn(pp, buf)                     # sharded hidden
+        y_buf = jax.lax.psum(y_buf, "model")
+        out = _combine(y_buf, idx.reshape(T, k), pos, keep, w2)
+        return out.reshape(B, S, d)
+
+    return run(p, x)

@@ -1,0 +1,71 @@
+"""Parameter trees: shapes + logical axes + initialization.
+
+Models declare a nested dict of :class:`ParamSpec` (shape, logical axes,
+init law). From one spec tree we derive:
+
+  * ``init_params``     — materialized arrays (smoke tests / examples)
+  * ``abstract_params`` — ShapeDtypeStruct stand-ins (dry-run: no allocation)
+  * ``axes_tree``       — logical-axes pytree -> PartitionSpecs via
+                          :mod:`repro.parallel.sharding`
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | scaled
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs: Any, key: jax.Array, dtype: Any = jnp.float32) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dtype))
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            std = s.scale / math.sqrt(max(1, fan_in))
+            out.append((jax.random.normal(k, s.shape) * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs: Any, dtype: Any = jnp.float32) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        specs, is_leaf=_is_spec)
+
+
+def axes_tree(specs: Any) -> Any:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def count_params(specs: Any) -> int:
+    total = 0
+    for s in jax.tree.leaves(specs, is_leaf=_is_spec):
+        total += int(np.prod(s.shape))
+    return total
+
+
+def param_bytes(specs: Any, bytes_per_param: int = 4) -> int:
+    return count_params(specs) * bytes_per_param

@@ -1,0 +1,186 @@
+"""RWKV-6 "Finch" block (attention-free; data-dependent decay).
+
+Recurrence (per head; k,r,w in R^hd, v in R^hd):
+
+    y_t = r_t · S_{t-1} + (r_t ⊙ u ⊙ k_t) · 1 * v_t
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+with w_t = exp(-exp(w0 + LoRA(x_t))) data-dependent per channel. The chunked
+form (also the spec for ``kernels/rwkv6_scan``) rewrites the intra-chunk
+part as a [Q,Q] quadratic form over decay-normalized keys/receptances, and
+carries S across chunks. Decode is a single-step state update.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import MeshPolicy, shard_constraint
+from .config import ModelConfig
+from .params import ParamSpec
+
+
+def rwkv6_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    lora = 64
+    return {
+        "att": {
+            "mu": ParamSpec((5, d), (None, "embed"), "zeros"),   # r,k,v,w,g
+            "wr": ParamSpec((d, d), ("embed", "heads_flat")),
+            "wk": ParamSpec((d, d), ("embed", "heads_flat")),
+            "wv": ParamSpec((d, d), ("embed", "heads_flat")),
+            "wg": ParamSpec((d, d), ("embed", "heads_flat")),
+            "wo": ParamSpec((d, d), ("heads_flat", "embed")),
+            "w0": ParamSpec((d,), ("heads_flat",), "zeros"),
+            "w_lora_a": ParamSpec((d, lora), ("embed", None)),
+            "w_lora_b": ParamSpec((lora, d), (None, "heads_flat")),
+            "u": ParamSpec((d,), ("heads_flat",), "zeros"),
+            "ln_x": ParamSpec((d,), ("heads_flat",), "zeros"),
+        },
+        "ffn": {
+            "mu": ParamSpec((2, d), (None, "embed"), "zeros"),   # k,r
+            "wk": ParamSpec((d, f), ("embed", "mlp")),
+            "wv": ParamSpec((f, d), ("mlp", "embed")),
+            "wr": ParamSpec((d, d), ("embed", None)),
+        },
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """x_{t-1} stream; `prev` is the last token of the previous segment
+    (decode carry). Returns (shifted, new_prev)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    shifted = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    return shifted, x[:, -1:]
+
+
+def wkv6_chunked(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                 u: jax.Array, *, chunk: int = 64,
+                 s0: Optional[jax.Array] = None, unroll: bool = False
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """r/k/v/w: [B,S,H,hd] (w = per-step decay in (0,1)); u: [H,hd].
+    Returns (y [B,S,H,hd], S [B,H,hd,hd])."""
+    B, S, H, hd = r.shape
+    nc = max(1, S // chunk)
+    Q = S // nc
+    rr = r.reshape(B, nc, Q, H, hd)
+    kk = k.reshape(B, nc, Q, H, hd)
+    vv = v.reshape(B, nc, Q, H, hd)
+    # clamp: strong data-dependent decay underflows w to 0 in f32 (and
+    # 1e-38 is denormal -> flushed to 0 on TPU); -60 per step keeps all
+    # chunk-cumulative exponents finite while exp() underflows cleanly
+    lw = jnp.maximum(jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30)),
+                     -60.0).reshape(B, nc, Q, H, hd)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def body(s, inp):
+        rq, kq, vq, lwq = inp
+        cum = jnp.cumsum(lwq, axis=1)                  # [B,Q,H,hd]
+        # intra-chunk: y_t += sum_{s<t} (r_t . prod_{j=s+1..t-1} w_j . k_s) v_s
+        # The pairwise exponent cum_{t-1} - cum_s is <= 0 for every VALID
+        # (s < t) pair, so masking BEFORE exponentiation is numerically
+        # safe for arbitrary data-dependent decays (separate exp(±cum)
+        # factorization overflows for strong decay).
+        cum_prev = cum - lwq                           # cum_{t-1}
+        seg = cum_prev[:, :, None] - cum[:, None]      # [B,Q,S,H,hd]
+        tri = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+        seg = jnp.where(tri[None, :, :, None, None], seg, -jnp.inf)
+        att = jnp.einsum("bqhc,bshc,bqshc->bhqs",
+                         rq.astype(jnp.float32), kq.astype(jnp.float32),
+                         jnp.exp(seg))
+        # carried-state receptance (exponent cum_{t-1} <= 0: safe)
+        r_n = rq.astype(jnp.float32) * jnp.exp(cum_prev)
+        # diagonal (s == t) uses the bonus u
+        diag = jnp.einsum("bqhc,bqhc->bqh",
+                          rq.astype(jnp.float32) * u[None, None],
+                          kq.astype(jnp.float32))
+        y = jnp.einsum("bhqs,bshd->bqhd", att, vv_f := vq.astype(jnp.float32))
+        y += diag[..., None] * vv_f
+        # contribution of the carried state
+        y += jnp.einsum("bqhc,bhcd->bqhd", r_n, s)
+        # state update: S' = diag(prod w) S + sum_s (k_s exp(cum_Q - cum_s)) v_s
+        k_end = kq.astype(jnp.float32) * jnp.exp(cum[:, -1:, :, :] - cum)
+        s_new = s * jnp.exp(cum[:, -1])[..., None] + \
+            jnp.einsum("bshc,bshd->bhcd", k_end, vv_f)
+        return s_new, y
+
+    ins = (jnp.moveaxis(rr, 1, 0), jnp.moveaxis(kk, 1, 0),
+           jnp.moveaxis(vv, 1, 0), jnp.moveaxis(lw, 1, 0))
+    s, ys = jax.lax.scan(body, s0, ins, unroll=nc if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd)
+    return y.astype(r.dtype), s
+
+
+def wkv6_step(r, k, v, w, u, s):
+    """Single decode step. r/k/v/w: [B,1,H,hd]; s: [B,H,hd,hd]."""
+    rf, kf, vf = (a[:, 0].astype(jnp.float32) for a in (r, k, v))
+    wf = w[:, 0].astype(jnp.float32)
+    y = jnp.einsum("bhc,bhcd->bhd", rf, s) + \
+        jnp.einsum("bhc,bhc,bhd->bhd", rf * u[None], kf, vf)
+    s_new = s * wf[..., None] + jnp.einsum("bhc,bhd->bhcd", kf, vf)
+    return y[:, None].astype(r.dtype), s_new
+
+
+def rwkv6_att(p: Dict[str, Any], x: jax.Array, *, cfg: ModelConfig,
+              policy: MeshPolicy, mesh=None,
+              state: Optional[Dict[str, jax.Array]] = None,
+              decode: bool = False, use_pallas: bool = False
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    prev = state["shift_a"] if state is not None else None
+    xs, new_prev = _token_shift(x, prev)
+    dt = x.dtype
+    mu = p["mu"].astype(dt)                              # [5, d]
+    mix = [x + (xs - x) * mu[i] for i in range(5)]
+    r = (mix[0] @ p["wr"].astype(dt)).reshape(B, S, H, hd)
+    k = (mix[1] @ p["wk"].astype(dt)).reshape(B, S, H, hd)
+    v = (mix[2] @ p["wv"].astype(dt)).reshape(B, S, H, hd)
+    g = jax.nn.silu(mix[4] @ p["wg"].astype(dt))
+    wlog = p["w0"].astype(jnp.float32) + \
+        ((mix[3] @ p["w_lora_a"].astype(dt)) @
+         p["w_lora_b"].astype(dt)).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog.astype(jnp.float32))).reshape(B, S, H, hd)
+    u = p["u"].astype(jnp.float32).reshape(H, hd)
+    s0 = state["wkv"] if state is not None else None
+    if decode:
+        y, s = wkv6_step(r, k, v, w, u,
+                         s0 if s0 is not None else
+                         jnp.zeros((B, H, hd, hd), jnp.float32))
+    elif use_pallas:
+        from ..kernels.rwkv6_scan import ops as wkv_ops
+        y, s = wkv_ops.wkv6(r, k, v, w, u, s0=s0)
+    else:
+        y, s = wkv6_chunked(r, k, v, w, u, s0=s0,
+                            unroll=cfg.unroll_scans)
+    from .layers import rmsnorm
+    y = rmsnorm(y.reshape(B, S, d), p["ln_x"], cfg.norm_eps) * g
+    out = y.astype(dt) @ p["wo"].astype(dt)
+    out = shard_constraint(out, ("batch", "seq", "act_embed"), policy, mesh)
+    new_state = None
+    if state is not None or decode:
+        new_state = {"wkv": s, "shift_a": new_prev}
+    return out, new_state
+
+
+def rwkv6_ffn(p: Dict[str, Any], x: jax.Array, *, cfg: ModelConfig,
+              policy: MeshPolicy, mesh=None,
+              state: Optional[Dict[str, jax.Array]] = None
+              ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    prev = state["shift_f"] if state is not None else None
+    xs, new_prev = _token_shift(x, prev)
+    dt = x.dtype
+    mu = p["mu"].astype(dt)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    kk = shard_constraint(kk, ("batch", "seq", "mlp"), policy, mesh)
+    y = (kk @ p["wv"].astype(dt)) * jax.nn.sigmoid(xr @ p["wr"].astype(dt))
+    return shard_constraint(y, ("batch", "seq", "act_embed"), policy, mesh), \
+        new_prev

@@ -1,0 +1,2 @@
+from .sharding import (LOGICAL_RULES, MeshPolicy, logical_to_pspec,
+                       shard_constraint, param_pspecs)

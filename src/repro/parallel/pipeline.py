@@ -1,0 +1,96 @@
+"""GPipe-style pipeline parallelism via shard_map + collective_permute.
+
+Offered as a config option for pods where a `stage` mesh axis is
+preferable to deeper FSDP (e.g. cross-pod DCN too slow for per-layer param
+all-gathers). The schedule is the classic GPipe 1F1B-ish loop expressed
+with `jax.lax.ppermute`: microbatch activations rotate through stages;
+each stage applies its local layer block.
+
+The 40-cell dry-run baseline uses DP×FSDP×TP (dominant on a 16×16 ICI
+mesh); this module is exercised by tests/test_pipeline.py and available as
+`MeshPolicy` + `pipeline_apply` for stage-sharded deployments.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(layer_fn: Callable[[Any, jax.Array], jax.Array],
+                   stacked_params: Any, x: jax.Array, *, mesh: Mesh,
+                   stage_axis: str = "stage",
+                   n_microbatches: int = None) -> jax.Array:
+    """Run `x` through `n_stages * layers_per_stage` layers, stages sharded
+    over `stage_axis`.
+
+    stacked_params: pytree with leading [n_stages, layers_per_stage, ...]
+    x: [n_microbatches, mb, ...] microbatched activations.
+
+    Schedule (GPipe): T = n_micro + n_stages - 1 ticks; at tick t, stage s
+    processes microbatch (t - s) if 0 <= t - s < n_micro. Activations hop
+    stage->stage+1 via ppermute; bubbles are masked compute (charged in the
+    roofline as the (S-1)/(M+S-1) bubble fraction).
+    """
+    S = mesh.shape[stage_axis]
+    M = x.shape[0] if n_microbatches is None else n_microbatches
+
+    p_spec = jax.tree.map(lambda _: P(stage_axis), stacked_params)
+    x_spec = P(None)          # microbatches replicated; stages gate by id
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(p_spec, x_spec), out_specs=x_spec, check_rep=False)
+    def run(params_local, xs):
+        # params_local: [1, layers_per_stage, ...] (this stage's block)
+        params_me = jax.tree.map(lambda a: a[0], params_local)
+        sid = jax.lax.axis_index(stage_axis)
+        n_stages = jax.lax.axis_size(stage_axis)
+        T = M + S - 1
+        buf = jnp.zeros_like(xs[0])          # activation entering this stage
+        outs = jnp.zeros_like(xs)
+
+        def stage_block(p, h):
+            def body(carry, lp):
+                return layer_fn(lp, carry), None
+            out, _ = jax.lax.scan(body, h, p)
+            return out
+
+        def tick(carry, t):
+            buf, outs = carry
+            mb = t - sid                      # microbatch at this stage
+            active = (mb >= 0) & (mb < M)
+            # stage 0 ingests a fresh microbatch from xs
+            feed = jnp.where(sid == 0,
+                             xs[jnp.clip(t, 0, M - 1)], buf)
+            h = stage_block(params_me, feed)
+            h = jnp.where(active, h, feed)
+            # last stage emits; others forward
+            out_mb = jnp.clip(mb, 0, M - 1)
+            emit = active & (sid == n_stages - 1)
+            outs = jnp.where(
+                emit,
+                outs.at[out_mb].set(h), outs)
+            nxt = jax.lax.ppermute(
+                h, stage_axis,
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (nxt, outs), None
+
+        (_, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(T))
+        # all stages computed `outs` divergently; the true values live on
+        # the last stage: broadcast them
+        outs = jax.lax.psum(
+            jnp.where(sid == n_stages - 1, outs, jnp.zeros_like(outs)),
+            stage_axis)
+        return outs
+
+    return run(stacked_params, x)
+
+
+def pipeline_bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    """GPipe bubble overhead: (S-1)/(M+S-1)."""
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

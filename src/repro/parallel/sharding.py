@@ -1,0 +1,132 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP over one mesh).
+
+Every parameter and activation in the model zoo carries *logical* axis names
+(("vocab", "embed"), ("batch", "seq", "embed"), ...). A :class:`MeshPolicy`
+maps logical names to mesh axes:
+
+  batch        -> ("pod", "data")     data parallelism (pods are the slow,
+                                      DCN-linked outer axis: only gradient
+                                      all-reduce crosses pods)
+  heads/mlp/experts/vocab -> "model"  tensor / expert parallelism
+  embed        -> "data" (fsdp=True)  ZeRO-3 parameter sharding
+  kv_seq       -> "data" (seq_shard)  long-context KV caches (batch=1 cells)
+
+The model code never mentions mesh axes; swapping policies re-shards the
+whole system (this is what the §Perf hillclimb iterates on).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# default logical->mesh rules (single- and multi-pod; missing axes are
+# silently dropped by PartitionSpec when the mesh lacks them)
+LOGICAL_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,                 # activations keep sequence unsharded (TP)
+    "kv_seq": None,              # overridden by seq_shard policies
+    "embed": None,               # PARAM hidden dim (fsdp shards it)
+    "act_embed": None,           # ACTIVATION hidden dim: never sharded
+                                 # by fsdp (fsdp is a weights-only policy)
+    "heads": "model",
+    "kv_heads": "model",
+    "heads_flat": "model",       # rwkv: flattened H*hd projection dim
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "vocab": "model",
+    "layers": None,
+    "state": None,
+    "conv": None,
+    "frames": None,
+    "cap": None,
+}
+
+
+@dataclass(frozen=True)
+class MeshPolicy:
+    """Sharding policy: logical rules + toggles.
+
+    fsdp      — shard parameter "embed" dims over `data` (ZeRO-3).
+    seq_shard — shard KV caches' "kv_seq" over `data` (long-context decode).
+    rules     — overrides merged over LOGICAL_RULES.
+    """
+    fsdp: bool = False
+    seq_shard: bool = False
+    rules: Tuple[Tuple[str, Any], ...] = ()
+
+    def resolve(self) -> Dict[str, Any]:
+        r = dict(LOGICAL_RULES)
+        if self.fsdp:
+            r["embed"] = "data"
+        if self.seq_shard:
+            r["kv_seq"] = "data"
+        r.update(dict(self.rules))
+        return r
+
+    def with_rules(self, **kw: Any) -> "MeshPolicy":
+        return replace(self, rules=self.rules + tuple(kw.items()))
+
+
+def _mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]], policy: MeshPolicy,
+                     mesh: Optional[Mesh] = None) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec under `policy`,
+    dropping mesh axes that don't exist in `mesh` (lets one policy serve
+    single-pod and multi-pod meshes)."""
+    rules = policy.resolve()
+    present = set(_mesh_axes(mesh)) if mesh is not None else None
+    out = []
+    used: set = set()
+    for ax in axes:
+        if ax is None:
+            out.append(None)
+            continue
+        m = rules.get(ax)
+        if m is None:
+            out.append(None)
+            continue
+        if isinstance(m, (tuple, list)):
+            ms = tuple(x for x in m
+                       if (present is None or x in present) and x not in used)
+            used.update(ms)
+            out.append(ms if ms else None)
+        else:
+            if (present is not None and m not in present) or m in used:
+                out.append(None)
+            else:
+                used.add(m)
+                out.append(m)
+    return P(*out)
+
+
+def shard_constraint(x: jax.Array, axes: Sequence[Optional[str]],
+                     policy: MeshPolicy, mesh: Optional[Mesh] = None
+                     ) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op outside jit/mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, logical_to_pspec(axes, policy, mesh))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def param_pspecs(axes_tree: Any, policy: MeshPolicy,
+                 mesh: Optional[Mesh] = None) -> Any:
+    """Map a pytree of logical-axes tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: logical_to_pspec(axes, policy, mesh),
+        axes_tree, is_leaf=lambda l: isinstance(l, tuple) and
+        all(isinstance(a, (str, type(None))) for a in l))
+
+
+def named_shardings(axes_tree: Any, policy: MeshPolicy, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps),
+                        param_pspecs(axes_tree, policy, mesh))

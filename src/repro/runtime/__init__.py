@@ -1,0 +1,1 @@
+from .fleet import FleetRuntime, WorkerState, elastic_remesh

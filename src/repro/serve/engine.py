@@ -1,0 +1,116 @@
+"""Batched serving engine: continuous-batching scheduler over the
+prefill/decode pjit steps.
+
+Requests enter a queue; the engine packs up to `max_batch` active sequences
+into one shared KV cache (slot-per-request), prefilling new requests one
+slot at a time and decoding all active slots together — the standard
+continuous-batching loop, sized down to run on CPU for the examples while
+lowering to the production mesh unchanged.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import forward, init_cache_specs, param_specs
+from ..models.config import ModelConfig
+from ..models.params import ParamSpec, init_params
+from ..parallel.sharding import MeshPolicy
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [S] int32
+    max_new: int = 8
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *,
+                 max_batch: int = 4, max_seq: int = 128,
+                 policy: MeshPolicy = MeshPolicy(), mesh=None):
+        self.cfg = cfg
+        self.params = params
+        self.policy = policy
+        self.mesh = mesh
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        specs = init_cache_specs(cfg, max_batch, max_seq)
+        zeros = lambda s: jnp.zeros(
+            s.shape, jnp.bfloat16 if len(s.shape) >= 3 else jnp.float32)
+        self.cache = jax.tree.map(
+            zeros, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.positions = np.zeros(max_batch, np.int32)
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+        self._decode = jax.jit(self._decode_fn)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def _decode_fn(self, params, tokens, cache, index):
+        logits, new_cache = forward(params, {"tokens": tokens},
+                                    cfg=self.cfg, policy=self.policy,
+                                    mesh=self.mesh, cache=cache,
+                                    cache_index=index)
+        return jnp.argmax(logits[:, -1], axis=-1), new_cache
+
+    def _prefill(self, slot: int, req: Request) -> None:
+        """Prefill one request token-by-token into its slot (slot-local
+        decode steps; production fuses this into a chunked prefill)."""
+        for t, tok in enumerate(req.prompt):
+            tokens = np.zeros((self.max_batch, 1), np.int32)
+            tokens[slot, 0] = tok
+            _, self.cache = self._decode(self.params, jnp.asarray(tokens),
+                                         self.cache, jnp.int32(t))
+        self.positions[slot] = len(req.prompt)
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One engine iteration: admit + decode all active slots."""
+        while self.queue and self._free_slot() is not None:
+            slot = self._free_slot()
+            req = self.queue.pop(0)
+            self.slots[slot] = req
+            self._prefill(slot, req)
+        active = [(i, r) for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for i, r in active:
+            last = r.generated[-1] if r.generated else int(r.prompt[-1])
+            tokens[i, 0] = last
+        index = jnp.int32(int(max(self.positions[i] for i, _ in active)))
+        nxt, self.cache = self._decode(self.params, jnp.asarray(tokens),
+                                       self.cache, index)
+        nxt = np.asarray(nxt)
+        for i, r in active:
+            r.generated.append(int(nxt[i]))
+            self.positions[i] += 1
+            if len(r.generated) >= r.max_new or \
+                    self.positions[i] >= self.max_seq - 1:
+                r.done = True
+                self.completed.append(r)
+                self.slots[i] = None
+
+    def run(self, max_iters: int = 64) -> List[Request]:
+        for _ in range(max_iters):
+            if not self.queue and all(s is None for s in self.slots):
+                break
+            self.step()
+        return self.completed

@@ -1,0 +1,84 @@
+"""AdamW with fully-sharded state (moments inherit the parameters' logical
+axes, so FSDP shards optimizer memory 3x alongside the weights)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def lr_at(c: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(1, c.warmup_steps))
+    t = jnp.clip((step - c.warmup_steps) /
+                 max(1, c.total_steps - c.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return c.lr * warm * (0.1 + 0.9 * cos)
+
+
+def adamw_init(params: Any) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_abstract(params_abs: Any) -> Dict[str, Any]:
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(z, params_abs),
+            "nu": jax.tree.map(z, params_abs),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def opt_axes_tree(param_axes: Any) -> Dict[str, Any]:
+    """Moments shard exactly like their parameters."""
+    return {"mu": param_axes, "nu": param_axes, "step": ()}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(c: OptConfig, params: Any, grads: Any, state: Dict[str, Any]
+                 ) -> Tuple[Any, Dict[str, Any]]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.grad_clip / (gnorm + 1e-9))
+    lr = lr_at(c, step)
+    b1c = 1 - c.b1 ** step.astype(jnp.float32)
+    b2c = 1 - c.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu2 = c.b1 * mu + (1 - c.b1) * g
+        nu2 = c.b2 * nu + (1 - c.b2) * jnp.square(g)
+        pf = p.astype(jnp.float32)
+        delta = (mu2 / b1c) / (jnp.sqrt(nu2 / b2c) + c.eps)
+        pf = pf - lr * (delta + c.weight_decay * pf)
+        return pf.astype(p.dtype), mu2, nu2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n
+           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}

@@ -1,0 +1,98 @@
+"""Train / serve step builders (the functions the launcher pjit-compiles).
+
+``train_step_fn``   — loss + grads + AdamW update (+ optional gradient
+                      accumulation over microbatches via lax.scan).
+``prefill_step_fn`` — forward over a full prompt, filling the KV cache.
+``decode_step_fn``  — one token against the cache (the decode_32k /
+                      long_500k dry-run target).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..models import forward, loss_fn
+from ..models.config import ModelConfig
+from ..parallel.sharding import MeshPolicy
+from .optimizer import OptConfig, adamw_update
+
+
+def train_step_fn(params: Any, opt_state: Any, batch: Dict[str, jax.Array],
+                  *, cfg: ModelConfig, policy: MeshPolicy,
+                  mesh: Optional[Mesh] = None, opt: OptConfig = OptConfig(),
+                  microbatches: int = 1, use_pallas: bool = False
+                  ) -> Tuple[Any, Any, jax.Array]:
+    """One optimizer step. With microbatches>1, grads accumulate over a
+    lax.scan of microbatch slices (activation memory / compile-size lever
+    used by the §Perf hillclimb)."""
+
+    def lf(p, b):
+        return loss_fn(p, b, cfg=cfg, policy=policy, mesh=mesh,
+                       use_pallas=use_pallas)
+
+    if microbatches <= 1:
+        loss, grads = jax.value_and_grad(lf)(params, batch)
+        if cfg.grad_compress:
+            # bf16 on the wire (the DP/FSDP reduce-scatter happens on the
+            # cast values); the optimizer re-ups to f32 for accumulation
+            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    else:
+        B = batch["tokens"].shape[0]
+        mb = B // microbatches
+        sliced = jax.tree.map(
+            lambda x: x.reshape((microbatches, mb) + x.shape[1:]), batch)
+
+        def acc(carry, mbatch):
+            g_acc, l_acc = carry
+            l, g = jax.value_and_grad(lf)(params, mbatch)
+            g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g)
+            return (g_acc, l_acc + l), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (grads, loss), _ = jax.lax.scan(acc, (zeros, 0.0), sliced)
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        loss = loss / microbatches
+    new_params, new_opt = adamw_update(opt, params, grads, opt_state)
+    return new_params, new_opt, loss
+
+
+def make_train_step(cfg: ModelConfig, policy: MeshPolicy,
+                    mesh: Optional[Mesh] = None,
+                    opt: OptConfig = OptConfig(), microbatches: int = 1,
+                    use_pallas: bool = False):
+    return functools.partial(train_step_fn, cfg=cfg, policy=policy,
+                             mesh=mesh, opt=opt, microbatches=microbatches,
+                             use_pallas=use_pallas)
+
+
+def prefill_step_fn(params: Any, batch: Dict[str, jax.Array], cache: Any,
+                    *, cfg: ModelConfig, policy: MeshPolicy,
+                    mesh: Optional[Mesh] = None, use_pallas: bool = False
+                    ) -> Tuple[jax.Array, Any]:
+    logits, new_cache = forward(params, batch, cfg=cfg, policy=policy,
+                                mesh=mesh, cache=cache, cache_index=None,
+                                use_pallas=use_pallas)
+    return logits[:, -1:], new_cache
+
+
+def decode_step_fn(params: Any, batch: Dict[str, jax.Array], cache: Any,
+                   index: jax.Array, *, cfg: ModelConfig,
+                   policy: MeshPolicy, mesh: Optional[Mesh] = None,
+                   use_pallas: bool = False) -> Tuple[jax.Array, Any]:
+    """`serve_step`: one new token (batch["tokens"] is [B,1]) against a KV
+    cache of seq_len (decode_32k / long_500k cells)."""
+    logits, new_cache = forward(params, batch, cfg=cfg, policy=policy,
+                                mesh=mesh, cache=cache, cache_index=index,
+                                use_pallas=use_pallas)
+    return logits, new_cache
+
+
+def make_decode_step(cfg: ModelConfig, policy: MeshPolicy,
+                     mesh: Optional[Mesh] = None, use_pallas: bool = False):
+    return functools.partial(decode_step_fn, cfg=cfg, policy=policy,
+                             mesh=mesh, use_pallas=use_pallas)

@@ -1,0 +1,12 @@
+"""Shared fixtures. NB: XLA_FLAGS / device count is NOT set here — smoke
+tests and benches must see the real (1-CPU) device; only dryrun.py forces
+512 placeholder devices."""
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,157 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch as a
+REDUCED same-family config — one forward + one train step on CPU, asserting
+output shapes and finiteness; plus a decode step against the cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import (forward, init_cache_specs, init_params, loss_fn,
+                          param_specs)
+from repro.models.params import ParamSpec, count_params
+from repro.parallel.sharding import MeshPolicy
+from repro.train.optimizer import OptConfig, adamw_init
+from repro.train.step import train_step_fn
+
+POLICY = MeshPolicy()
+B, S = 2, 32
+
+
+def make_batch(cfg, *, train=True):
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32)}
+    if train:
+        batch["labels"] = jnp.ones((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.ones((B, cfg.n_patches, cfg.d_model),
+                                         jnp.bfloat16)
+        batch["positions"] = jnp.zeros((B, S, 3), jnp.int32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.ones((B, cfg.n_patches, cfg.d_model),
+                                   jnp.bfloat16)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    published = {
+        "qwen2_vl_7b": (28, 3584, 28, 4, 18944, 152064),
+        "qwen3_moe_30b_a3b": (48, 2048, 32, 4, 768, 151936),
+        "mixtral_8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "command_r_plus_104b": (64, 12288, 96, 8, 33792, 256000),
+        "gemma3_12b": (48, 3840, 16, 8, 15360, 262144),
+        "nemotron_4_340b": (96, 18432, 96, 8, 73728, 256000),
+        "qwen1_5_4b": (40, 2560, 20, 20, 6912, 151936),
+        "zamba2_2_7b": (54, 2560, 32, 32, 10240, 32000),
+        "rwkv6_3b": (32, 2560, 40, 40, 8960, 65536),
+        "seamless_m4t_medium": (24, 1024, 16, 16, 4096, 256256),
+    }[arch]
+    L, d, h, kv, ff, vocab = published
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert (cfg.moe_d_ff or cfg.d_ff) == ff
+    assert cfg.vocab_size == vocab
+    if arch == "qwen3_moe_30b_a3b":
+        assert cfg.n_experts == 128 and cfg.experts_per_token == 8
+    if arch == "mixtral_8x22b":
+        assert cfg.n_experts == 8 and cfg.experts_per_token == 2
+        assert cfg.sliding_window
+    if arch == "zamba2_2_7b":
+        assert cfg.ssm_state == 64 and cfg.shared_attn_every == 6
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch, key):
+    cfg = get_smoke_config(arch)
+    params = init_params(param_specs(cfg), key)
+    logits, _ = forward(params, make_batch(cfg, train=False), cfg=cfg,
+                        policy=POLICY, mesh=None)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_decreases_loss_direction(arch, key):
+    cfg = get_smoke_config(arch)
+    params = init_params(param_specs(cfg), key)
+    opt_state = adamw_init(params)
+    batch = make_batch(cfg)
+    opt = OptConfig(lr=1e-3, warmup_steps=0, total_steps=4)
+    l0 = None
+    for _ in range(2):
+        params, opt_state, loss = train_step_fn(
+            params, opt_state, batch, cfg=cfg, policy=POLICY, mesh=None,
+            opt=opt)
+        l0 = float(loss) if l0 is None else l0
+    assert np.isfinite(float(loss))
+    assert float(loss) <= l0 + 0.5      # same batch: should not explode
+
+
+@pytest.mark.parametrize("arch", ["gemma3_12b", "qwen3_moe_30b_a3b",
+                                  "zamba2_2_7b", "rwkv6_3b",
+                                  "seamless_m4t_medium"])
+def test_decode_step_with_cache(arch, key):
+    cfg = get_smoke_config(arch)
+    params = init_params(param_specs(cfg), key)
+    specs = init_cache_specs(cfg, B, S)
+    cache = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.bfloat16 if len(s.shape) >= 3
+                            else jnp.float32),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    batch = {"tokens": jnp.ones((B, 1), jnp.int32)}
+    logits, new_cache = forward(params, batch, cfg=cfg, policy=POLICY,
+                                mesh=None, cache=cache,
+                                cache_index=jnp.int32(3))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+
+
+def test_microbatched_grad_accumulation_matches(key):
+    cfg = get_smoke_config("qwen1_5_4b")
+    params = init_params(param_specs(cfg), key)
+    batch = make_batch(cfg)
+    opt = OptConfig(lr=1e-3, warmup_steps=0, total_steps=2)
+    p1, _, l1 = train_step_fn(params, adamw_init(params), batch, cfg=cfg,
+                              policy=POLICY, mesh=None, opt=opt,
+                              microbatches=1)
+    p2, _, l2 = train_step_fn(params, adamw_init(params), batch, cfg=cfg,
+                              policy=POLICY, mesh=None, opt=opt,
+                              microbatches=2)
+    assert abs(float(l1) - float(l2)) < 5e-2
+    d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                  b.astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 5e-2
+
+
+def test_moe_dense_vs_capacity_dispatch(key):
+    """The EP/TP dispatch path must agree with the dense reference when
+    capacity is not exceeded (single-device mesh -> dense path is used;
+    here we call the internal dispatch helpers directly)."""
+    import numpy as np
+    from repro.models.moe import _dispatch, _combine, _router, moe_dense
+    from repro.models import param_specs
+    cfg = get_smoke_config("qwen3_moe_30b_a3b")
+    specs = param_specs(cfg)
+    params = init_params(specs, key)
+    lp = jax.tree.map(lambda a: a[0], params["layers"])["moe"]
+    x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32)
+    ref = moe_dense(lp, x, cfg)
+    T = 2 * 16
+    w, idx = _router(lp, x, cfg.experts_per_token)
+    x2 = x.reshape(T, cfg.d_model)
+    C = T * cfg.experts_per_token            # capacity ample: no drops
+    buf, keep, pos, w2 = _dispatch(x2, w.reshape(T, -1),
+                                   idx.reshape(T, -1), cfg.n_experts, C)
+    assert bool(keep.all())
+    from repro.models.moe import _expert_ffn
+    y = _combine(_expert_ffn(lp, buf), idx.reshape(T, -1), pos, keep, w2)
+    np.testing.assert_allclose(np.asarray(y.reshape(2, 16, -1)),
+                               np.asarray(ref), atol=2e-4, rtol=1e-3)

@@ -1,0 +1,38 @@
+"""Pipeline-parallel (GPipe via shard_map + ppermute) correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.parallel.pipeline import pipeline_apply, pipeline_bubble_fraction
+
+
+def test_bubble_fraction():
+    assert pipeline_bubble_fraction(4, 12) == pytest.approx(3 / 15)
+    assert pipeline_bubble_fraction(1, 8) == 0.0
+
+
+def test_pipeline_matches_sequential():
+    """The staged schedule must equal running all layers sequentially."""
+    n = len(jax.devices())
+    if n < 1:
+        pytest.skip("no devices")
+    S = 1                                  # stage axis size on this host
+    mesh = jax.make_mesh((S,), ("stage",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    L_per, M, mb, d = 3, 4, 2, 8
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (S, L_per, d, d)) * 0.3
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, mb, d))
+
+    def layer_fn(lp, h):
+        return jnp.tanh(h @ lp)
+
+    out = pipeline_apply(layer_fn, w, x, mesh=mesh)
+
+    ref = x
+    for s in range(S):
+        for l in range(L_per):
+            ref = jnp.tanh(ref @ w[s, l])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)

@@ -1,0 +1,42 @@
+"""True multi-stage pipeline-parallel test: runs in a subprocess with 4
+host devices (XLA device count is process-global, so the main test process
+— which must see 1 device — cannot host it)."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys
+    sys.path.insert(0, %r)
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.parallel.pipeline import pipeline_apply
+
+    S, L_per, M, mb, d = 4, 2, 8, 2, 8
+    mesh = jax.make_mesh((S,), ("stage",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    w = jax.random.normal(jax.random.PRNGKey(0), (S, L_per, d, d)) * 0.3
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, mb, d))
+
+    def layer_fn(lp, h):
+        return jnp.tanh(h @ lp)
+
+    out = pipeline_apply(layer_fn, w, x, mesh=mesh)
+    ref = x
+    for s in range(S):
+        for l in range(L_per):
+            ref = jnp.tanh(ref @ w[s, l])
+    err = float(jnp.max(jnp.abs(out - ref)))
+    assert err < 1e-4, err
+    print("PIPELINE_OK", err)
+""") % str(SRC)
+
+
+def test_pipeline_four_stages():
+    r = subprocess.run([sys.executable, "-c", SCRIPT],
+                       capture_output=True, text=True, timeout=300)
+    assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr

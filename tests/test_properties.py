@@ -1,0 +1,150 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import (HopsFSOps, InodeHintCache, MetadataStore, format_fs)
+from repro.core.hdfs_baseline import HDFSNamenode
+from repro.core.store import _hash_key
+from repro.core.workload import NamespaceSpec, SpotifyWorkload, SyntheticNamespace
+
+SLOW = settings(max_examples=25,
+                suppress_health_check=[HealthCheck.too_slow], deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# partitioning invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=1, max_value=512))
+def test_hash_partition_in_range(key, nparts):
+    assert 0 <= _hash_key(key) % nparts < nparts
+
+
+@given(st.lists(st.integers(min_value=0, max_value=2**31 - 1),
+                min_size=64, max_size=256, unique=True))
+def test_hash_partition_balance(keys):
+    """No partition should swallow everything (mixing works)."""
+    parts = [_hash_key(k) % 16 for k in keys]
+    counts = np.bincount(parts, minlength=16)
+    assert counts.max() <= len(keys) * 0.5
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_phash_kernel_matches_store_hash(key):
+    """The TPU partition hash and the metadata store agree on placement."""
+    from repro.kernels.phash.ref import phash_ref
+    expect = _hash_key(key) % 64
+    got = int(phash_ref(np.asarray([key], np.int64) & 0xFFFFFFFF, 64)[0])
+    assert got == expect
+
+
+# ---------------------------------------------------------------------------
+# HopsFS vs in-memory oracle (HDFS baseline) equivalence
+# ---------------------------------------------------------------------------
+
+_name = st.text(alphabet="abcdef", min_size=1, max_size=4)
+
+
+@st.composite
+def fs_script(draw):
+    ops = []
+    known = ["/w"]
+    for _ in range(draw(st.integers(min_value=1, max_value=12))):
+        kind = draw(st.sampled_from(["mkdir", "create", "stat", "ls"]))
+        if kind in ("mkdir", "create"):
+            base = draw(st.sampled_from(known))
+            path = base + "/" + draw(_name)
+            if kind == "mkdir":
+                known.append(path)
+            ops.append((kind, path))
+        else:
+            ops.append((kind, draw(st.sampled_from(known))))
+    return ops
+
+
+@SLOW
+@given(fs_script())
+def test_hopsfs_matches_oracle(script):
+    """Any script of namespace ops leaves HopsFS and the single-node
+    oracle in identical visible states."""
+    store = MetadataStore(n_datanodes=2)
+    format_fs(store)
+    hops = HopsFSOps(store, 0)
+    oracle = HDFSNamenode()
+    hops.mkdir("/w")
+    oracle.mkdir("/w")
+    for kind, path in script:
+        r_h = r_o = None
+        e_h = e_o = False
+        try:
+            if kind == "mkdir":
+                hops.mkdir(path)
+            elif kind == "create":
+                hops.create(path)
+            elif kind == "stat":
+                r_h = hops.stat(path).value["is_dir"]
+            else:
+                r_h = hops.listing(path).value
+        except Exception:
+            e_h = True
+        try:
+            if kind == "mkdir":
+                oracle.mkdir(path)
+            elif kind == "create":
+                oracle.create(path)
+            elif kind == "stat":
+                r_o = oracle.stat(path)["is_dir"]
+            else:
+                r_o = oracle.ls(path)
+        except Exception:
+            e_o = True
+        if kind in ("stat", "ls"):
+            assert e_h == e_o and r_h == r_o, (kind, path)
+
+
+# ---------------------------------------------------------------------------
+# hint cache invariants
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.integers(0, 50), _name), min_size=1,
+                max_size=64))
+def test_hint_cache_lru_bound(entries):
+    c = InodeHintCache(capacity=16)
+    for i, (pid, name) in enumerate(entries):
+        c.put(pid, name, i + 2)
+    assert len(c._lru) <= 16
+
+
+@given(st.integers(min_value=2, max_value=30))
+def test_cache_hit_cost_depth_invariant(depth):
+    """Table 3's structural property, as a property test."""
+    store = MetadataStore(n_datanodes=2)
+    format_fs(store)
+    fs = HopsFSOps(store, 0)
+    d = "/" + "/".join(f"l{i}" for i in range(depth - 1))
+    fs.mkdirs(d)
+    fs.create(d + "/f")
+    fs.stat(d + "/f")
+    c1 = fs.stat(d + "/f").cost.round_trips
+    assert c1 == 3          # PK_r + 2 batches, independent of depth
+
+
+# ---------------------------------------------------------------------------
+# workload generator matches Table 1
+# ---------------------------------------------------------------------------
+
+def test_workload_mix_matches_table1():
+    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=30)
+    wl = SpotifyWorkload(ns, seed=3)
+    hist = wl.mix_histogram(30_000)
+    reads = hist.get("read", 0)
+    assert 66.0 < reads < 71.5                      # 68.73% ±
+    assert 15.5 < hist.get("stat", 0) < 18.5        # 17%
+    assert 7.5 < hist.get("ls", 0) < 10.5           # 9%
+    mutating = sum(hist.get(k, 0) for k in
+                   ("create", "delete_file", "delete_subtree",
+                    "rename_file", "mkdirs", "add_block", "append"))
+    assert mutating < 6.0                           # ~95% read-mostly

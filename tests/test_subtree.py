@@ -1,0 +1,117 @@
+"""Subtree operations protocol tests (paper §6): isolation, batching,
+failure consistency, lock reclaim."""
+import pytest
+
+from repro.core import (HopsFSOps, MetadataStore, SubtreeLockedError,
+                        SubtreeOps, format_fs)
+
+
+@pytest.fixture
+def fs():
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    return HopsFSOps(store, 0)
+
+
+def build_tree(fs, root="/proj", dirs=3, files=4, depth=2):
+    fs.mkdirs(root)
+    total = 1
+
+    def rec(base, d):
+        nonlocal total
+        for i in range(files):
+            fs.create(f"{base}/file{i}")
+            total += 1
+        if d < depth:
+            for j in range(dirs):
+                sub = f"{base}/dir{j}"
+                fs.mkdir(sub)
+                total += 1
+                rec(sub, d + 1)
+    rec(root, 1)
+    return total
+
+
+def test_delete_subtree_counts_and_cleans(fs):
+    n = build_tree(fs)
+    st = SubtreeOps(fs.ops if hasattr(fs, "ops") else fs)
+    res = st.delete_subtree("/proj")
+    assert res.value["deleted"] == n
+    assert fs.listing("/").value == []
+    assert fs.store.table("ongoing_subtree_ops").n_rows == 0
+
+
+def test_delete_subtree_batched_transactions(fs):
+    build_tree(fs)
+    st = SubtreeOps(fs, batch_size=5)
+    res = st.delete_subtree("/proj")
+    # phase 3 executed in many small txns: round trips far exceed one
+    # txn's worth but no txn touched more than batch_size inodes
+    assert res.value["deleted"] > 5
+    assert res.cost.round_trips > 10
+
+
+def test_chmod_subtree_updates_root_only(fs):
+    build_tree(fs)
+    st = SubtreeOps(fs)
+    st.chmod_subtree("/proj", 0o700)
+    assert fs.stat("/proj").value["perm"] == 0o700
+    # inner inodes untouched (paper §6.2) and lock released
+    assert fs.stat("/proj/file0").value["perm"] == 0o755
+    assert fs.store.table("inode").scan_index("id", 2)[0][
+        "subtree_lock"] is None
+
+
+def test_rename_subtree_preserves_descendants(fs):
+    build_tree(fs)
+    st = SubtreeOps(fs)
+    st.rename_subtree("/proj", "/moved")
+    assert "file0" in fs.listing("/moved").value
+    assert "dir0" in fs.listing("/moved").value
+    assert fs.listing("/moved/dir0").value  # children intact
+
+
+def test_concurrent_inode_op_aborts_under_subtree_lock(fs):
+    build_tree(fs)
+    # another namenode is mid-subtree-op: lock flag set, NN 1 alive
+    alive = {0, 1}
+    fs._is_nn_alive = lambda nn: nn in alive
+    root = fs.store.table("inode").get((1, "proj"))
+    locked = dict(root)
+    locked["subtree_lock"] = 1
+    fs.store.table("inode").put(locked)
+    with pytest.raises(SubtreeLockedError):
+        fs.create("/proj/new-file")
+
+
+def test_dead_namenode_lock_is_reclaimed(fs):
+    build_tree(fs)
+    fs._is_nn_alive = lambda nn: nn == 0          # NN 9 is dead
+    root = fs.store.table("inode").get((1, "proj"))
+    locked = dict(root)
+    locked["subtree_lock"] = 9
+    fs.store.table("inode").put(locked)
+    fs.create("/proj/new-file")                    # reclaims + proceeds §6.2
+    assert fs.store.table("inode").get((1, "proj"))["subtree_lock"] is None
+
+
+def test_crashed_delete_leaves_consistent_tree(fs):
+    """§6.2: post-order delete + crash => no orphans; remainder intact;
+    retry on another namenode completes."""
+    n = build_tree(fs)
+    st = SubtreeOps(fs, batch_size=4, crash_after_batches=2)
+    res = st.delete_subtree("/proj")
+    assert res.value["crashed"]
+    deleted = res.value["deleted"]
+    assert 0 < deleted < n
+    # every surviving inode is still reachable from the root (no orphans)
+    t = fs.store.table("inode")
+    survivors = t.scan_all(lambda r: r["id"] != 1)
+    ids = {r["id"] for r in survivors} | {1}
+    for r in survivors:
+        assert r["parent_id"] in ids, f"orphan: {r}"
+    # another namenode reclaims the dead NN's lock and finishes the job
+    fs2 = HopsFSOps(fs.store, 1, is_nn_alive=lambda nn: nn == 1)
+    st2 = SubtreeOps(fs2)
+    res2 = st2.delete_subtree("/proj")
+    assert res2.value["deleted"] == n - deleted

@@ -1,0 +1,229 @@
+"""End-to-end behaviour tests: metadata plane, checkpoint/restart,
+failover, elasticity, data pipeline, cluster DES, serving engine."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import Client, MetadataStore, NamenodeCluster, format_fs
+from repro.core.cluster_sim import (DEFAULT_PARAMS, HDFSSim, HopsFSSim,
+                                    profile_ops)
+from repro.core.workload import (NamespaceSpec, SpotifyWorkload,
+                                 SyntheticNamespace)
+from repro.ckpt import CheckpointManager
+from repro.data import DataPipeline
+from repro.metaplane import MetadataPlane
+from repro.models import init_params, param_specs
+from repro.runtime import FleetRuntime, elastic_remesh
+
+
+# ---------------------------------------------------------------------------
+# namenode fleet behaviour (paper §3, §7.6)
+# ---------------------------------------------------------------------------
+
+def test_multiple_namenodes_share_one_namespace():
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    cluster = NamenodeCluster(store, 3)
+    c = Client(cluster, policy="round_robin")
+    c.execute("mkdirs", "/a/b")
+    c.execute("create", "/a/b/f1")       # possibly a different namenode
+    assert c.execute("ls", "/a/b").value == ["f1"]
+    served = [nn.ops_served for nn in cluster.namenodes]
+    assert sum(served) >= 3
+
+
+def test_client_failover_is_transparent():
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    cluster = NamenodeCluster(store, 3)
+    c = Client(cluster, policy="sticky", seed=1)
+    c.execute("mkdirs", "/x")
+    sticky = c._sticky
+    cluster.kill(sticky)
+    cluster.tick()
+    cluster.tick()
+    cluster.tick()
+    r = c.execute("create", "/x/after-failover")   # no exception = no downtime
+    assert r.value
+    assert c._sticky != sticky       # client silently moved off the dead NN
+
+
+def test_leader_election_moves_off_dead_namenode():
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    cluster = NamenodeCluster(store, 3)
+    assert cluster.leader().nn_id == 0
+    cluster.kill(0)
+    for _ in range(4):
+        cluster.tick()
+    assert cluster.leader().nn_id == 1
+
+
+def test_ndb_node_failure_tolerated_with_replica():
+    store = MetadataStore(n_datanodes=4, replication=2)
+    format_fs(store)
+    cluster = NamenodeCluster(store, 2)
+    c = Client(cluster)
+    c.execute("mkdirs", "/p")
+    store.fail_datanode(0)               # group 0 keeps one replica
+    c.execute("create", "/p/f")
+    assert c.execute("ls", "/p").value == ["f"]
+
+
+# ---------------------------------------------------------------------------
+# metadata plane + checkpoint/restart
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_commit_is_atomic_and_restorable():
+    plane = MetadataPlane()
+    cm = CheckpointManager(tempfile.mkdtemp(), plane, "j", keep=2)
+    params = {"w": np.arange(6.0).reshape(2, 3)}
+    opt = {"mu": {"w": np.zeros((2, 3))}, "step": np.int32(5)}
+    cm.save(100, params, opt)
+    step, p, o = cm.restore_latest()
+    assert step == 100
+    np.testing.assert_array_equal(p["w"], params["w"])
+    man = plane.manifest("j", 100)
+    assert man.complete and "params/w" in man.shards
+
+
+def test_checkpoint_gc_uses_subtree_delete():
+    plane = MetadataPlane()
+    cm = CheckpointManager(tempfile.mkdtemp(), plane, "j2", keep=1)
+    p = {"w": np.ones(2)}
+    for s in (1, 2, 3):
+        cm.save(s, p, {"m": np.zeros(2)})
+    names = plane.client.execute("ls", "/ckpt/j2").value
+    assert names == ["step-00000003"]
+
+
+def test_restore_ignores_uncommitted_tmp():
+    plane = MetadataPlane()
+    cm = CheckpointManager(tempfile.mkdtemp(), plane, "j3", keep=3)
+    cm.save(7, {"w": np.ones(1)}, {"m": np.ones(1)})
+    # a crashed writer left a .tmp tree for step 9
+    base = plane.begin_checkpoint("j3", 9)
+    plane.add_shard(base, "params/w", 0)
+    assert plane.latest_checkpoint("j3") == 7
+
+
+# ---------------------------------------------------------------------------
+# elastic runtime + stragglers
+# ---------------------------------------------------------------------------
+
+def test_elastic_remesh_shapes():
+    assert elastic_remesh(128, model_axis=16, chips_per_worker=4) == (32, 16)
+    assert elastic_remesh(127, model_axis=16, chips_per_worker=4) == (16, 16)
+    assert elastic_remesh(3, model_axis=4, chips_per_worker=4) == (2, 4)
+
+
+def test_fleet_failover_and_rejoin():
+    plane = MetadataPlane()
+    fleet = FleetRuntime(plane, 8, model_axis=4, chips_per_worker=4)
+    assert fleet.mesh_shape == (8, 4)
+    fleet.fail_worker(3)
+    fleet.tick()
+    assert fleet.maybe_remesh() == (4, 4)
+    fleet.join_worker(3)
+    fleet.tick()
+    assert fleet.maybe_remesh() == (8, 4)
+    assert fleet.remesh_events
+
+
+def test_straggler_redispatch_and_idempotent_completion():
+    plane = MetadataPlane()
+    dp = DataPipeline(plane, "ds", n_shards=3, hb_timeout=2)
+    s0 = dp.lease(0)
+    dp.lease(1)
+    dp.lease(1)
+    assert dp.lease(2) is None           # all leased
+    for _ in range(4):
+        dp.tick()                        # worker 0 goes silent
+    s_backup = dp.lease(2)
+    assert s_backup == s0                # backup task on the straggler
+    assert dp.complete(2, s0)            # backup finishes first
+    assert not dp.complete(0, s0)        # straggler's completion: duplicate
+    assert dp.duplicate_completions == 1
+
+
+def test_data_determinism_across_restart():
+    plane = MetadataPlane()
+    dp = DataPipeline(plane, "ds2", n_shards=2)
+    b1 = dp.read("shard-00000", batch=2, seq=8, vocab=100, step=5)
+    dp2 = DataPipeline(plane, "ds2")     # "restarted" pipeline
+    b2 = dp2.read("shard-00000", batch=2, seq=8, vocab=100, step=5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# cluster DES reproduces the paper's headline behaviours (fast subset;
+# full curves live in benchmarks/)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def profiles():
+    return profile_ops()
+
+
+@pytest.fixture(scope="module")
+def ns():
+    return SyntheticNamespace(NamespaceSpec(), n_dirs=30)
+
+
+def test_hopsfs_scales_with_namenodes(profiles, ns):
+    tps = []
+    for nn, cl in ((1, 200), (4, 600)):
+        sim = HopsFSSim(n_namenodes=nn, n_ndb=4, profiles=profiles)
+        sim.start_clients(cl, SpotifyWorkload(ns))
+        tps.append(sim.run(0.8).throughput)
+    assert tps[1] > 2.5 * tps[0]
+
+
+def test_hopsfs_beats_hdfs_at_scale(profiles, ns):
+    hd = HDFSSim()
+    hd.start_clients(900, SpotifyWorkload(ns))
+    hdfs_tp = hd.run(0.8).throughput
+    hs = HopsFSSim(n_namenodes=12, n_ndb=8, profiles=profiles)
+    hs.start_clients(1800, SpotifyWorkload(ns))
+    hops_tp = hs.run(0.8).throughput
+    assert hops_tp > 2.0 * hdfs_tp       # paper: 2.6x
+
+
+def test_hopsfs_no_downtime_on_namenode_failure(profiles, ns):
+    sim = HopsFSSim(n_namenodes=4, n_ndb=4, profiles=profiles)
+    sim.start_clients(400, SpotifyWorkload(ns))
+    sim.sim.after(0.4, lambda: sim.kill_namenode(0))
+    res = sim.run(1.2)
+    by_sec = dict(res.timeline)
+    assert all(by_sec.get(s, 0) > 0 for s in range(1))  # never zero
+    assert res.throughput > 0
+
+
+def test_hdfs_failover_causes_downtime(ns):
+    sim = HDFSSim()
+    sim.start_clients(400, SpotifyWorkload(ns))
+    sim.sim.after(0.2, sim.kill_active)
+    res = sim.run(1.0)
+    # ops completed in (0.2, 0.2+gap) should collapse to ~0
+    assert sim.down_until > 0.2
+    assert res.throughput < 400 / 1.0 / 0.001  # sanity
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+def test_serve_engine_generates_batched():
+    from repro.serve import Request, ServeEngine
+    cfg = get_smoke_config("qwen1_5_4b").derive(n_layers=2)
+    params = init_params(param_specs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=2, max_seq=32)
+    for rid in range(3):
+        eng.submit(Request(rid, np.array([1, 2, 3 + rid]), max_new=4))
+    done = eng.run(max_iters=40)
+    assert len(done) == 3
+    assert all(len(r.generated) == 4 for r in done)
