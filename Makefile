@@ -1,0 +1,20 @@
+# Tier-1 tests, benchmarks, and docs checks — one invocation each.
+PY        ?= python
+PYTHONPATH := src
+
+.PHONY: test bench bench-all bench-quick docs-lint
+
+test:                    ## tier-1 suite (ROADMAP verify command)
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -x -q
+
+bench:                   ## Fig 7-style trace replay -> BENCH_throughput.json
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.trace_replay
+
+bench-quick:             ## fast smoke of the trace replay
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.trace_replay --quick
+
+bench-all:               ## every paper figure/table reproduction (CSV)
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.run --quick
+
+docs-lint:               ## docs exist + their repo-path references resolve
+	PYTHONPATH=$(PYTHONPATH) $(PY) scripts/docs_lint.py

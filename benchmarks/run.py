@@ -15,6 +15,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks import paper_benches as pb            # noqa: E402
 from benchmarks.roofline import bench_roofline        # noqa: E402
+from benchmarks.trace_replay import bench_trace_replay  # noqa: E402
 
 BENCHES = [
     ("table1", pb.bench_table1_workload_mix),
@@ -28,6 +29,7 @@ BENCHES = [
     ("fig11", pb.bench_fig11_failover),
     ("fig12_13", pb.bench_fig12_13_ablations),
     ("table3", pb.bench_table3_costmodel),
+    ("trace_replay", bench_trace_replay),
     ("ckpt", pb.bench_ckpt_metadata),
     ("roofline", bench_roofline),
 ]

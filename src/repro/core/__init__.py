@@ -7,6 +7,7 @@ Public surface:
   HopsFSOps            — inode operations (Fig 4 template, Table 3 costs)
   SubtreeOps           — subtree operations protocol (§6)
   NamenodeCluster / Client — stateless namenodes + selection policies
+  RequestPipeline      — batched multi-namenode request pipeline (§7.2)
   LeaderElection       — DB-as-shared-memory leader election (§3)
   HDFSNamenode / HDFSHACluster — the HDFS baseline (§2.1)
   profile_ops / HopsFSSim / HDFSSim — measured-cost DES (§7)
@@ -16,7 +17,9 @@ from .fs import (FSError, FileAlreadyExists, FileNotFound, HopsFSOps,
 from .hdfs_baseline import HDFSHACluster, HDFSNamenode
 from .hint_cache import InodeHintCache
 from .leader import LeaderElection
-from .namenode import Client, Namenode, NamenodeCluster
+from .namenode import (BATCHABLE_READ_OPS, Client, Namenode, NamenodeCluster,
+                       OpOutcome, PipelineStats, RequestPipeline,
+                       materialize_namespace, namespace_snapshot)
 from .store import (EXCLUSIVE, READ_COMMITTED, SHARED, LockTimeout,
                     MetadataStore, NodeGroupDown, OpCost, StoreError)
 from .subtree import SubtreeOps, TreeNode
@@ -26,6 +29,8 @@ from .transactions import Transaction, run_with_retry
 __all__ = [
     "MetadataStore", "Transaction", "OpCost", "HopsFSOps", "SubtreeOps",
     "TreeNode", "NamenodeCluster", "Namenode", "Client", "LeaderElection",
+    "RequestPipeline", "PipelineStats", "OpOutcome", "BATCHABLE_READ_OPS",
+    "materialize_namespace", "namespace_snapshot",
     "HDFSNamenode", "HDFSHACluster", "InodeHintCache", "format_fs",
     "split_path", "run_with_retry", "FSError", "FileNotFound",
     "FileAlreadyExists", "SubtreeLockedError", "StoreError", "LockTimeout",

@@ -26,11 +26,13 @@ from __future__ import annotations
 
 import heapq
 import random
+import zlib
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .fs import HopsFSOps
+from .namenode import BATCHABLE_READ_OPS
 from .store import MetadataStore, OpCost
 from .workload import READ_ONLY_OPS, SpotifyWorkload, WorkloadOp
 
@@ -367,6 +369,50 @@ class HopsFSSim:
                 nn, prof, done))
         self.sim.after(self.p.client_nn_rtt / 2, after_rpc)
 
+    def _build_rts(self, prof: RTProfile) -> List[Tuple[str, bool]]:
+        """Expand a profile into (kind, is_local) round trips."""
+        rts: List[Tuple[str, bool]] = []
+        loc_total = prof.local + prof.remote
+        frac_local = prof.local / loc_total if loc_total else 0.0
+        for kind, cnt in (("pk", prof.pk), ("batch", prof.batch),
+                          ("ppis", prof.ppis), ("is", prof.is_scans),
+                          ("fts", prof.fts)):
+            for _ in range(cnt):
+                rts.append((kind, self.rng.random() < frac_local))
+        return rts
+
+    def _exec_rts(self, rts: List[Tuple[str, bool]],
+                  finish: Callable[[], None]) -> None:
+        """Run a sequence of DB round trips (each queueing on NDB server
+        threads), then call ``finish``."""
+        p = self.p
+        self.rng.shuffle(rts)
+
+        def next_rt(i: int) -> None:
+            if i >= len(rts):
+                finish()
+                return
+            kind, local = rts[i]
+            rtt = p.db_rtt_local if local else p.db_rtt_remote
+            if kind in ("is", "fts"):
+                svc = (p.svc_is_per_node if kind == "is"
+                       else p.svc_fts_per_node)
+                remaining = [self.n_ndb]
+
+                def one_done():
+                    remaining[0] -= 1
+                    if remaining[0] == 0:
+                        self.sim.after(rtt, lambda: next_rt(i + 1))
+                for node in self.ndb:
+                    node.submit(svc, one_done)
+            else:
+                svc = {"pk": p.svc_pk, "batch": p.svc_batch,
+                       "ppis": p.svc_ppis}[kind]
+                node = self.ndb[self.rng.randrange(self.n_ndb)]
+                node.submit(svc, lambda: self.sim.after(
+                    rtt, lambda: next_rt(i + 1)))
+        next_rt(0)
+
     def _with_handler(self, nn: int, prof: RTProfile,
                       done: Callable[[], None]) -> None:
         """Handler is HELD for the op's full duration (CPU + all DB round
@@ -377,43 +423,10 @@ class HopsFSSim:
             self.nn_handlers[nn].release()
             self.sim.after(p.client_nn_rtt / 2, done)
 
-        def run_db():
-            rts: List[Tuple[str, bool]] = []
-            loc_total = prof.local + prof.remote
-            frac_local = prof.local / loc_total if loc_total else 0.0
-            for kind, cnt in (("pk", prof.pk), ("batch", prof.batch),
-                              ("ppis", prof.ppis), ("is", prof.is_scans),
-                              ("fts", prof.fts)):
-                for _ in range(cnt):
-                    rts.append((kind, self.rng.random() < frac_local))
-            self.rng.shuffle(rts)
-
-            def next_rt(i: int) -> None:
-                if i >= len(rts):
-                    finish()
-                    return
-                kind, local = rts[i]
-                rtt = p.db_rtt_local if local else p.db_rtt_remote
-                if kind in ("is", "fts"):
-                    svc = (p.svc_is_per_node if kind == "is"
-                           else p.svc_fts_per_node)
-                    remaining = [self.n_ndb]
-
-                    def one_done():
-                        remaining[0] -= 1
-                        if remaining[0] == 0:
-                            self.sim.after(rtt, lambda: next_rt(i + 1))
-                    for node in self.ndb:
-                        node.submit(svc, one_done)
-                else:
-                    svc = {"pk": p.svc_pk, "batch": p.svc_batch,
-                           "ppis": p.svc_ppis}[kind]
-                    node = self.ndb[self.rng.randrange(self.n_ndb)]
-                    node.submit(svc, lambda: self.sim.after(
-                        rtt, lambda: next_rt(i + 1)))
-            next_rt(0)
         # CPU slice, then DB phase
-        self.nn_cpu[nn].submit(p.nn_cpu_per_op, run_db)
+        self.nn_cpu[nn].submit(
+            p.nn_cpu_per_op,
+            lambda: self._exec_rts(self._build_rts(prof), finish))
 
     # -- faults ---------------------------------------------------------------
     def kill_namenode(self, nn: int) -> None:
@@ -427,6 +440,134 @@ class HopsFSSim:
         self.sim.run(seconds)
         tl = sorted(self.timeline.items())
         return SimResult(self.completed, seconds, self.latencies, tl)
+
+
+class BatchedHopsFSSim(HopsFSSim):
+    """DES of the batched multi-namenode request pipeline (§2.2, §7.2).
+
+    Clients enqueue into ONE shared queue; each namenode pulls batches of
+    up to ``batch_size`` ops whenever it has a free handler (a batch holds
+    one handler for its whole duration, so batching amortizes handler
+    occupancy exactly as it amortizes round trips). Mirroring the
+    functional :meth:`~repro.core.namenode.Namenode.execute_batch`, the
+    PK/batch path-validation round trips of each *batchable read group*
+    inside a batch collapse into one batched exchange, while per-op scan
+    round trips (PPIS/IS/FTS) and every mutating op's full profile are
+    unchanged. Batches form adaptively: an idle fleet serves singleton
+    batches (no added latency); under saturation the queue depth grows and
+    batching kicks in — the behaviour that produces the Fig 7-style
+    throughput-scaling curve replayed by ``benchmarks/trace_replay.py``.
+    """
+
+    _BATCHABLE = frozenset(BATCHABLE_READ_OPS)
+
+    def __init__(self, *, batch_size: int = 16, **kw):
+        super().__init__(**kw)
+        self.batch_size = max(1, batch_size)
+        self.queue: deque = deque()        # (WorkloadOp, done_cb)
+        self._inflight = [0] * len(self.nn_handlers)
+        self.nn_ops_completed = [0] * len(self.nn_handlers)
+        self.batches_executed = 0
+        self.batched_ops = 0
+
+    # -- shared-queue client behaviour ---------------------------------
+    def _client_loop(self, cid: int, workload, policy: str,
+                     jitter: float = 0.0) -> None:
+        # `policy` is moot here: ops go to whichever NN pulls the batch
+        def issue():
+            op = workload.next_op()
+            t0 = self.sim.t
+            self.queue.append((op, lambda: self._done(t0, issue)))
+            self._dispatch()
+        self.sim.after(jitter, issue)
+
+    # -- dispatch ------------------------------------------------------
+    def _dispatch(self) -> None:
+        progress = True
+        while self.queue and progress:
+            progress = False
+            for nn in self._alive_nns():
+                if not self.queue:
+                    break
+                if self._inflight[nn] >= self.p.nn_handlers:
+                    continue
+                k = min(self.batch_size, len(self.queue))
+                batch = [self.queue.popleft() for _ in range(k)]
+                self._inflight[nn] += 1
+                self._run_batch(nn, batch)
+                progress = True
+
+    def _run_batch(self, nn: int, batch) -> None:
+        p = self.p
+
+        def after_rpc():
+            if not self.nn_alive[nn]:
+                # NN died holding the batch: requeue for the survivors
+                self._inflight[nn] -= 1
+                self.failed_ops += len(batch)
+                for item in reversed(batch):
+                    self.queue.appendleft(item)
+                self.sim.after(0.05, self._dispatch)
+                return
+            self.nn_handlers[nn].acquire(with_handler)
+
+        def with_handler():
+            def finish():
+                self.nn_handlers[nn].release()
+                self._inflight[nn] -= 1
+                self.nn_ops_completed[nn] += len(batch)
+                self.batches_executed += 1
+                if len(batch) > 1:
+                    self.batched_ops += len(batch)
+                for _, done_cb in batch:
+                    self.sim.after(p.client_nn_rtt / 2, done_cb)
+                self._dispatch()
+            self.nn_cpu[nn].submit(
+                p.nn_cpu_per_op * len(batch),
+                lambda: self._exec_rts(self._merged_rts(batch), finish))
+        self.sim.after(p.client_nn_rtt / 2, after_rpc)
+
+    # partition count used to group same-type reads — mirrors the default
+    # MetadataStore sharding the functional pipeline groups against
+    N_PARTITIONS = 64
+
+    def _merged_rts(self, batch) -> List[Tuple[str, bool]]:
+        """Round trips for a batch, collapsed exactly as the functional
+        ``Namenode._execute_read_run`` does: same-type read ops are grouped
+        by the TARGET'S PARTITION (path-hashed), and each multi-op
+        partition group's pk+batch validation round trips become ONE
+        batched exchange (§5.1); singleton groups, per-op scans, and every
+        mutating op keep their full profiles. Zipf-popular files landing on
+        the same partition are what make groups collapse."""
+        groups: Dict[Tuple[str, int], List[RTProfile]] = {}
+        rts: List[Tuple[str, bool]] = []
+        for op, _ in batch:
+            prof = self.profiles.get(op.op) or self.profiles["read"]
+            if op.op in self._BATCHABLE:
+                part = zlib.crc32(op.path.encode()) % self.N_PARTITIONS
+                groups.setdefault((op.op, part), []).append(prof)
+            else:
+                rts.extend(self._build_rts(prof))
+        for profs in groups.values():
+            if len(profs) == 1:
+                rts.extend(self._build_rts(profs[0]))
+                continue
+            loc = sum(pr.local for pr in profs)
+            rem = sum(pr.remote for pr in profs)
+            frac_local = loc / (loc + rem) if (loc + rem) else 0.0
+            # ONE batched exchange replaces the group's pk+batch RTs (§5.1)
+            rts.append(("batch", self.rng.random() < frac_local))
+            for pr in profs:
+                for kind, cnt in (("ppis", pr.ppis), ("is", pr.is_scans),
+                                  ("fts", pr.fts)):
+                    for _ in range(cnt):
+                        rts.append((kind,
+                                    self.rng.random() < frac_local))
+        return rts
+
+    def restart_namenode(self, nn: int) -> None:
+        super().restart_namenode(nn)
+        self._dispatch()
 
 
 class HDFSSim:

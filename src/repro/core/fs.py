@@ -499,6 +499,32 @@ class HopsFSOps:
             cost = txn.commit()
         return OpResult(None, cost)
 
+    # -- read-op payload phases, shared with the batched pipeline so the
+    # -- two execution paths cannot diverge (namenode._complete_read_op)
+    def read_payload(self, txn: Transaction,
+                     target: Dict[str, Any]) -> List[Dict[str, Any]]:
+        tables = (_PPIS_READ_EMPTY if target["size"] == 0
+                  else _PPIS_READ_FULL)
+        related = self._file_scan(txn, tables, target["id"], READ_COMMITTED)
+        blocks = sorted(related.get("block", []), key=lambda b: b["index"])
+        reps = related.get("replica", [])
+        return [{"block": b["block_id"], "size": b["size"],
+                 "locations": [r["datanode_id"] for r in reps
+                               if r["block_id"] == b["block_id"]]}
+                for b in blocks]
+
+    @staticmethod
+    def stat_payload(target: Dict[str, Any]) -> Dict[str, Any]:
+        return {k: target[k] for k in ("id", "is_dir", "perm", "owner",
+                                       "group", "size", "repl", "mtime")}
+
+    def listing_payload(self, txn: Transaction,
+                        target: Dict[str, Any]) -> List[str]:
+        if not target["is_dir"]:
+            return []
+        return sorted(c["name"]
+                      for c in self._children(txn, target["id"], SHARED))
+
     def get_block_locations(self, path: str) -> OpResult:
         """The `read` op of Table 1/3 (68.7% of the Spotify workload)."""
         comps = split_path(path)
@@ -511,15 +537,7 @@ class HopsFSOps:
             f = rp.target
             if f is None:
                 raise FileNotFound(path)
-            tables = _PPIS_READ_EMPTY if f["size"] == 0 else _PPIS_READ_FULL
-            related = self._file_scan(txn, tables, f["id"], READ_COMMITTED)
-            blocks = sorted(related.get("block", []),
-                            key=lambda b: b["index"])
-            reps = related.get("replica", [])
-            locs = [{"block": b["block_id"], "size": b["size"],
-                     "locations": [r["datanode_id"] for r in reps
-                                   if r["block_id"] == b["block_id"]]}
-                    for b in blocks]
+            locs = self.read_payload(txn, f)
             cost = txn.commit()
         return OpResult(locs, cost)
 
@@ -532,11 +550,7 @@ class HopsFSOps:
             node = rp.target
             if node is None:
                 raise FileNotFound(path)
-            names: List[str] = []
-            if node["is_dir"]:
-                names = sorted(c["name"]
-                               for c in self._children(txn, node["id"],
-                                                       SHARED))
+            names = self.listing_payload(txn, node)
             cost = txn.commit()
         return OpResult(names, cost)
 
@@ -551,8 +565,7 @@ class HopsFSOps:
             node = rp.target
             if node is None:
                 raise FileNotFound(path)
-            info = {k: node[k] for k in ("id", "is_dir", "perm", "owner",
-                                         "group", "size", "repl", "mtime")}
+            info = self.stat_payload(node)
             cost = txn.commit()
         return OpResult(info, cost)
 

@@ -73,6 +73,24 @@ class InodeHintCache:
             parent = child
         return pks
 
+    def resolve_pks_and_id(self, components: Sequence[str]
+                           ) -> Optional[Tuple[List[Tuple[int, str]], int]]:
+        """Full-chain resolution for the batched pipeline: the composite PK
+        of every component **plus the target's inode id**, iff every lookup
+        (including the target itself) hits. The target id is what the
+        batched executor feeds to the vectorized partition hash to group
+        same-partition ops; a miss anywhere returns None and the op falls
+        back to the sequential path (which repairs the cache)."""
+        pks: List[Tuple[int, str]] = []
+        parent = ROOT_ID
+        for name in components:
+            pks.append((parent, name))
+            child = self.get(parent, name)
+            if child is None:
+                return None
+            parent = child
+        return pks, parent
+
     def last_resolved_id(self, components: Sequence[str]) -> Optional[int]:
         parent = ROOT_ID
         for name in components:

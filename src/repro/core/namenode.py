@@ -1,4 +1,4 @@
-"""Stateless namenodes + client namenode-selection policies (paper §3).
+"""Stateless namenodes + client policies + the batched request pipeline.
 
 A :class:`Namenode` is stateless apart from its inode hint cache: all
 authoritative state lives in the :class:`~repro.core.store.MetadataStore`.
@@ -6,16 +6,77 @@ Any number of namenodes serve the same store concurrently; clients pick one
 per-op via *random*, *round-robin* or *sticky* policies and transparently
 fail over to another namenode when one dies (§7.6.1 — this is why HopsFS has
 no failover downtime).
+
+Batched request pipeline (paper §2.2/§7.2): the throughput headline comes
+from many namenodes issuing *batched, distribution-aware* transactions.
+:class:`RequestPipeline` feeds N namenodes from one shared client queue in
+fixed-size batches; :meth:`Namenode.execute_batch` groups consecutive
+same-type read ops whose paths fully hit the hint cache, hashes every
+hinted inode id to its partition in one vectorized ``phash`` kernel call
+(§4.2), and validates each same-partition group's paths with ONE batched
+PK exchange instead of 2-3 round trips per op. Mutating ops and cache
+misses fall back to the sequential path, preserving exact sequential
+semantics (asserted by tests/test_batched_pipeline.py).
 """
 from __future__ import annotations
 
 import random
-from typing import Any, Callable, Dict, List, Optional, Sequence
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from .fs import FSError, HopsFSOps, OpResult, SubtreeLockedError
+from .fs import (FSError, HopsFSOps, OpResult, SubtreeLockedError,
+                 split_path)
 from .leader import LeaderElection
-from .store import MetadataStore, StoreError
+from .store import (MetadataStore, OpCost, READ_COMMITTED, SHARED,
+                    StoreError, _hash_key)
 from .subtree import SubtreeOps
+from .tables import ROOT_ID
+from .transactions import Transaction
+from .workload import WorkloadOp
+
+# read-only op types the batched executor may group (no mutation => any
+# ordering within a run of them is equivalent to sequential execution)
+BATCHABLE_READ_OPS = ("read", "stat", "ls")
+
+_phash_usable = True
+
+# Below this many keys the scalar hash beats an interpret-mode Pallas call
+# (kernel dispatch overhead dominates); on accelerator-backed deployments
+# the vectorized path wins for the bulk workloads (block reports, import
+# manifests) that hash thousands of keys at once.
+PHASH_MIN_BATCH = 512
+
+
+def _partitions_for(ids: Sequence[int], n_partitions: int, *,
+                    min_batch: int = PHASH_MIN_BATCH) -> List[int]:
+    """Batch path->partition hashing: the phash Pallas kernel for large
+    batches, the scalar store hash below ``min_batch`` (or if the kernel
+    stack is unavailable). Both implement the identical mix, so placement
+    always agrees with ``MetadataStore`` partitioning."""
+    global _phash_usable
+    if _phash_usable and len(ids) >= max(2, min_batch):
+        try:
+            from ..kernels.phash.ops import phash_partitions
+            return [int(p) for p in phash_partitions(ids, n_partitions)]
+        except Exception:
+            _phash_usable = False
+    return [_hash_key(i) % n_partitions for i in ids]
+
+
+@dataclass
+class OpOutcome:
+    """Per-op outcome from the batched pipeline: either a result or the
+    name of the FS error that sequential execution would have raised."""
+    result: Optional[OpResult]
+    error: Optional[str] = None
+    batched: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return self.result is not None
 
 
 class Namenode:
@@ -28,40 +89,254 @@ class Namenode:
         self.subtree = SubtreeOps(self.ops)
         self.alive = True
         self.ops_served = 0
+        self.agg_cost = OpCost()     # committed-txn cost served by this NN
+        self.batches_executed = 0
+        self.batched_ops = 0
 
     def is_leader(self) -> bool:
         return self.election.leader() == self.nn_id
 
-    # unified dispatch used by the workload driver / DES / benchmarks
+    # unified dispatch used by the workload driver / DES / benchmarks;
+    # class-level so the pipeline hot path doesn't rebuild it per call
+    _DISPATCH: Dict[str, Tuple[str, str]] = {
+        "create": ("ops", "create"),
+        "read": ("ops", "get_block_locations"),
+        "ls": ("ops", "listing"),
+        "stat": ("ops", "stat"),
+        "mkdir": ("ops", "mkdir"),
+        "mkdirs": ("ops", "mkdirs"),
+        "delete_file": ("ops", "delete_file"),
+        "rename_file": ("ops", "rename_file"),
+        "add_block": ("ops", "add_block"),
+        "complete_block": ("ops", "complete_block"),
+        "append": ("ops", "append_file"),
+        "chmod_file": ("ops", "chmod_file"),
+        "chown_file": ("ops", "chown_file"),
+        "set_replication": ("ops", "set_replication"),
+        "content_summary": ("ops", "content_summary"),
+        "set_quota": ("ops", "set_quota"),
+        "delete_subtree": ("subtree", "delete_subtree"),
+        "rename_subtree": ("subtree", "rename_subtree"),
+        "chmod_subtree": ("subtree", "chmod_subtree"),
+        "chown_subtree": ("subtree", "chown_subtree"),
+        "block_report": ("ops", "process_block_report"),
+    }
+
     def execute(self, op: str, *args, **kw) -> OpResult:
         if not self.alive:
             raise StoreError(f"namenode {self.nn_id} is down")
-        fn: Callable[..., OpResult] = {
-            "create": self.ops.create,
-            "read": self.ops.get_block_locations,
-            "ls": self.ops.listing,
-            "stat": self.ops.stat,
-            "mkdir": self.ops.mkdir,
-            "mkdirs": self.ops.mkdirs,
-            "delete_file": self.ops.delete_file,
-            "rename_file": self.ops.rename_file,
-            "add_block": self.ops.add_block,
-            "complete_block": self.ops.complete_block,
-            "append": self.ops.append_file,
-            "chmod_file": self.ops.chmod_file,
-            "chown_file": self.ops.chown_file,
-            "set_replication": self.ops.set_replication,
-            "content_summary": self.ops.content_summary,
-            "set_quota": self.ops.set_quota,
-            "delete_subtree": self.subtree.delete_subtree,
-            "rename_subtree": self.subtree.rename_subtree,
-            "chmod_subtree": self.subtree.chmod_subtree,
-            "chown_subtree": self.subtree.chown_subtree,
-            "block_report": self.ops.process_block_report,
-        }[op]
+        holder, meth = self._DISPATCH[op]
+        fn: Callable[..., OpResult] = getattr(getattr(self, holder), meth)
         res = fn(*args, **kw)
         self.ops_served += 1
+        self.agg_cost.merge(res.cost)
         return res
+
+    def execute_wop(self, wop: WorkloadOp) -> OpResult:
+        """Execute a generated :class:`WorkloadOp`, supplying deterministic
+        default arguments for the ops whose records carry none."""
+        op = wop.op
+        if op in ("rename_file", "rename_subtree"):
+            return self.execute(op, wop.path, wop.path2 or wop.path + ".mv")
+        if op in ("chmod_file", "chmod_subtree"):
+            return self.execute(op, wop.path, 0o640)
+        if op in ("chown_file", "chown_subtree"):
+            return self.execute(op, wop.path, "wluser")
+        if op == "set_replication":
+            return self.execute(op, wop.path, 2)
+        return self.execute(op, wop.path)
+
+    # ------------------------------------------------------------------
+    # batched execution (pipeline hot path)
+    # ------------------------------------------------------------------
+    def _safe_exec(self, wop: WorkloadOp, *, retries: int = 8,
+                   backoff: float = 0.002) -> OpOutcome:
+        """Execute one op, mapping FS errors to outcomes. Ops that hit a
+        live subtree lock voluntarily aborted (§6.3) — retry them with
+        backoff exactly as the HopsFS client does, instead of failing."""
+        err = "SubtreeLockedError"
+        for attempt in range(retries):
+            try:
+                return OpOutcome(self.execute_wop(wop))
+            except SubtreeLockedError:
+                time.sleep(backoff * (attempt + 1))
+            except StoreError as e:
+                return OpOutcome(None, type(e).__name__)
+        return OpOutcome(None, err)
+
+    def execute_batch(self, wops: Sequence[WorkloadOp]) -> List[OpOutcome]:
+        """Execute a pulled batch. Maximal runs of consecutive same-type
+        batchable read ops are executed through the grouped path (batched
+        PK validation per partition group); everything else runs through
+        the exact sequential path, in order. Because only read-only ops are
+        reordered *within* a run, the store ends in the same state as
+        strictly sequential execution of the batch."""
+        if not self.alive:
+            raise StoreError(f"namenode {self.nn_id} is down")
+        results: List[Optional[OpOutcome]] = [None] * len(wops)
+        i = 0
+        while i < len(wops):
+            op = wops[i].op
+            j = i + 1
+            if op in BATCHABLE_READ_OPS:
+                while j < len(wops) and wops[j].op == op:
+                    j += 1
+                if j - i > 1:
+                    self._execute_read_run(op, wops, i, j, results)
+                else:
+                    results[i] = self._safe_exec(wops[i])
+            else:
+                results[i] = self._safe_exec(wops[i])
+            i = j
+        self.batches_executed += 1
+        return results  # type: ignore[return-value]
+
+    def _execute_read_run(self, op: str, wops: Sequence[WorkloadOp],
+                          lo: int, hi: int,
+                          results: List[Optional[OpOutcome]]) -> None:
+        """A run of same-type read ops: ops whose full path chain hits the
+        hint cache are grouped by target partition (vectorized phash over
+        the hinted inode ids) and executed one shared transaction per
+        partition group; cache misses fall back to the sequential path."""
+        cache = self.ops.cache
+        hits: List[Tuple[int, List[str], List[Tuple[int, str]], int]] = []
+        for idx in range(lo, hi):
+            comps = split_path(wops[idx].path)
+            resolved = (cache.resolve_pks_and_id(comps)
+                        if (cache is not None and comps) else None)
+            if resolved is None:
+                results[idx] = self._safe_exec(wops[idx])
+            else:
+                pks, tid = resolved
+                hits.append((idx, comps, pks, tid))
+        if not hits:
+            return
+        parts = _partitions_for([h[3] for h in hits],
+                                self.ops.store.n_partitions)
+        groups: Dict[int, List[Tuple[int, List[str],
+                                     List[Tuple[int, str]], int]]] = {}
+        for h, p in zip(hits, parts):
+            groups.setdefault(p, []).append(h)
+        for _, group in sorted(groups.items()):
+            self._read_group_txn(op, wops, group, results)
+
+    def _read_group_txn(self, op: str, wops: Sequence[WorkloadOp],
+                        group: Sequence[Tuple[int, List[str],
+                                              List[Tuple[int, str]], int]],
+                        results: List[Optional[OpOutcome]]) -> None:
+        """One shared distribution-aware transaction for a same-partition
+        group: ONE batched exchange validates every op's ancestor chain,
+        lock-reads every target, and folds in the dependent lease reads;
+        per-op file scans then run inside the same transaction. Stale hints
+        are invalidated and the op re-runs sequentially (§5.1.1)."""
+        fsops = self.ops
+        fallback: List[int] = []
+        try:
+            txn = Transaction(fsops.store,
+                              partition_hint=("inode", group[0][3]),
+                              distribution_aware=fsops.dat)
+        except StoreError:
+            for idx, *_ in group:
+                results[idx] = self._safe_exec(wops[idx])
+            return
+        try:
+            per_op: Dict[int, Tuple[bool, List[Dict[str, Any]],
+                                    Optional[Dict[str, Any]], int]] = {}
+            with txn.batch() as b:
+                for idx, comps, pks, _tid in group:
+                    got: List[Dict[str, Any]] = []
+                    ok = True
+                    parent = ROOT_ID
+                    for pk in pks[:-1]:
+                        r = b.read("inode", pk, READ_COMMITTED)
+                        if r is None or pk[0] != parent:
+                            ok = False
+                            break
+                        got.append(r)
+                        parent = r["id"]
+                    target = None
+                    if ok:
+                        target = b.read("inode", (parent, comps[-1]), SHARED)
+                        if target is not None and op in ("read", "stat"):
+                            # dependent lease read, same exchange (§5.1)
+                            b.read("lease",
+                                   (target.get("client") or "client",),
+                                   READ_COMMITTED)
+                    per_op[idx] = (ok, got, target, parent)
+            op_costs: Dict[int, OpCost] = {}
+            values: Dict[int, Any] = {}
+            errors: Dict[int, str] = {}
+            accounted = OpCost()
+            for idx, comps, pks, _tid in group:
+                ok, ancestors, target, parent_id = per_op[idx]
+                if not ok or target is None:
+                    # stale hints (rename/delete moved a row): repair + redo
+                    if cachev := fsops.cache:
+                        for pk in pks:
+                            cachev.invalidate(*pk)
+                    fallback.append(idx)
+                    continue
+                before = txn.cost.copy()
+                try:
+                    values[idx] = self._complete_read_op(txn, op, target)
+                    for row in ancestors:
+                        fsops._check_subtree_lock(row, txn)
+                    fsops._check_subtree_lock(target, txn)
+                    if fsops.cache:
+                        # repair under the VALIDATED ids — a recreated
+                        # ancestor keeps its composite PK but gets a new
+                        # inode id, and the hinted ids may be stale
+                        for pk, row in zip(pks, ancestors):
+                            fsops.cache.put(pk[0], pk[1], row["id"])
+                        fsops.cache.put(parent_id, comps[-1], target["id"])
+                    op_costs[idx] = txn.cost.diff(before)
+                    accounted.merge(op_costs[idx])
+                except SubtreeLockedError:
+                    # voluntary abort (§6.3): re-run sequentially w/ retry
+                    values.pop(idx, None)
+                    fallback.append(idx)
+                except StoreError as e:
+                    errors[idx] = type(e).__name__
+                    values.pop(idx, None)
+            total = txn.commit()
+            # The shared validation batch, commit flush, and any reads done
+            # for ops that errored/fell back are attributed to the FIRST
+            # successful op, so Σ outcome costs == the cost aggregated per
+            # namenode. (Like the sequential path, cost of a transaction
+            # that served no op at all is dropped from the accounting.)
+            unattributed = total.diff(accounted)
+            served = OpCost()
+            first_done = True
+            for idx, *_ in group:
+                if idx in values:
+                    cost = op_costs[idx]
+                    if first_done:
+                        cost.merge(unattributed)
+                        first_done = False
+                    results[idx] = OpOutcome(
+                        OpResult(values[idx], cost), batched=True)
+                    served.merge(cost)
+                    self.ops_served += 1
+                    self.batched_ops += 1
+                elif idx in errors:
+                    results[idx] = OpOutcome(None, errors[idx],
+                                             batched=True)
+            self.agg_cost.merge(served)
+        except StoreError:
+            txn.abort()
+            fallback = [idx for idx, *_ in group]
+        for idx in fallback:
+            results[idx] = self._safe_exec(wops[idx])
+
+    def _complete_read_op(self, txn: Transaction, op: str,
+                          target: Dict[str, Any]) -> Any:
+        """The per-op payload phase — the SAME fs.py helpers the sequential
+        ops use, so batched and sequential execution cannot diverge."""
+        if op == "stat":
+            return self.ops.stat_payload(target)
+        if op == "ls":
+            return self.ops.listing_payload(txn, target)
+        return self.ops.read_payload(txn, target)   # read
 
 
 class NamenodeCluster:
@@ -144,3 +419,214 @@ class Client:
                     continue
                 raise
         raise last  # type: ignore[misc]
+
+
+# ---------------------------------------------------------------------------
+# batched multi-namenode request pipeline
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PipelineStats:
+    """Result of one :class:`RequestPipeline` run. ``per_nn_cost`` is each
+    namenode's committed-transaction cost during this run; the pipeline
+    conserves accounting: merging ``per_nn_cost`` over namenodes equals
+    ``total_cost`` equals the merge of every successful outcome's cost."""
+    outcomes: List[OpOutcome]
+    per_nn_cost: Dict[int, OpCost]
+    per_nn_ops: Dict[int, int]
+    total_cost: OpCost
+    ok: int
+    failed: int
+    wall_s: float
+    batch_size: int
+    n_batches: int
+
+    @property
+    def throughput(self) -> float:
+        return self.ok / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def batched_fraction(self) -> float:
+        if not self.outcomes:
+            return 0.0
+        return sum(1 for o in self.outcomes if o.batched) / len(self.outcomes)
+
+
+class RequestPipeline:
+    """Shared client queue feeding a fleet of namenodes in fixed batches.
+
+    ``concurrent=False`` drains the queue round-robin on the calling thread
+    — fully deterministic (ops execute in submission order regardless of
+    namenode count or batch size), which is what the state-equivalence
+    tests rely on. ``concurrent=True`` runs one worker thread per alive
+    namenode against the same queue, exercising real row-lock contention
+    on the shared store."""
+
+    def __init__(self, cluster: NamenodeCluster, *, batch_size: int = 16,
+                 concurrent: bool = False):
+        self.cluster = cluster
+        self.batch_size = max(1, batch_size)
+        self.concurrent = concurrent
+
+    def run(self, wops: Sequence[WorkloadOp]) -> PipelineStats:
+        wops = list(wops)
+        outcomes: List[Optional[OpOutcome]] = [None] * len(wops)
+        q: deque = deque(range(len(wops)))
+        qlock = threading.Lock()
+        n_batches = [0]
+        alive = self.cluster.alive_namenodes()
+        if not alive:
+            raise StoreError("no alive namenodes")
+        cost0 = {nn.nn_id: nn.agg_cost.copy()
+                 for nn in self.cluster.namenodes}
+        served0 = {nn.nn_id: nn.ops_served for nn in self.cluster.namenodes}
+
+        def pull() -> List[int]:
+            with qlock:
+                k = min(self.batch_size, len(q))
+                return [q.popleft() for _ in range(k)]
+
+        def requeue(idxs: List[int]) -> None:
+            with qlock:
+                q.extendleft(reversed(idxs))
+
+        def run_one(nn: Namenode, idxs: List[int]) -> bool:
+            """One batch on one namenode; False if the NN died mid-run (the
+            batch is requeued for the survivors — §7.6.1 failover)."""
+            try:
+                res = nn.execute_batch([wops[i] for i in idxs])
+            except StoreError:
+                requeue(idxs)
+                return False
+            retry: List[int] = []
+            for i, oc in zip(idxs, res):
+                if not oc.ok and oc.error == "StoreError" and not nn.alive:
+                    # op was in flight when this NN died: fail over (§7.6.1)
+                    retry.append(i)
+                else:
+                    outcomes[i] = oc
+            if retry:
+                requeue(retry)
+            with qlock:
+                n_batches[0] += 1
+            return not retry
+
+        def drain(nn: Namenode) -> None:
+            while True:
+                idxs = pull()
+                if not idxs:
+                    return
+                if not run_one(nn, idxs):
+                    return
+
+        t0 = time.perf_counter()
+        if self.concurrent:
+            # re-drain with the survivors if a dying namenode requeued its
+            # batch after the other workers already saw an empty queue
+            while True:
+                live = self.cluster.alive_namenodes()
+                with qlock:
+                    pending = bool(q)
+                if not pending or not live:
+                    break
+                workers = [threading.Thread(target=drain, args=(nn,))
+                           for nn in live]
+                for w in workers:
+                    w.start()
+                for w in workers:
+                    w.join()
+        else:
+            rr = 0
+            while q:
+                alive = self.cluster.alive_namenodes()
+                if not alive:
+                    break
+                nn = alive[rr % len(alive)]
+                rr += 1
+                idxs = pull()
+                run_one(nn, idxs)
+        wall = time.perf_counter() - t0
+        # ops left without an outcome (every namenode died mid-run) fail
+        # the way a client with no namenodes to fail over to would
+        for i, oc in enumerate(outcomes):
+            if oc is None:
+                outcomes[i] = OpOutcome(None, "StoreError")
+
+        per_nn_cost = {nn.nn_id: nn.agg_cost.diff(cost0[nn.nn_id])
+                       for nn in self.cluster.namenodes}
+        per_nn_ops = {nn.nn_id: nn.ops_served - served0[nn.nn_id]
+                      for nn in self.cluster.namenodes}
+        total = OpCost()
+        ok = failed = 0
+        for oc in outcomes:
+            if oc.ok:
+                ok += 1
+                total.merge(oc.result.cost)  # type: ignore[union-attr]
+            else:
+                failed += 1
+        return PipelineStats(outcomes=outcomes,  # type: ignore[arg-type]
+                             per_nn_cost=per_nn_cost, per_nn_ops=per_nn_ops,
+                             total_cost=total, ok=ok, failed=failed,
+                             wall_s=wall, batch_size=self.batch_size,
+                             n_batches=n_batches[0])
+
+
+def namespace_snapshot(store: MetadataStore) -> Dict[str, Tuple]:
+    """Logical namespace view: full path -> (is_dir, size, perm, owner,
+    repl, n_blocks). Physical identifiers (inode/block ids, per-namenode
+    mtime clocks) are deliberately absent, so two runs that dispatched ops
+    to different namenodes — and therefore drew from different id-allocator
+    blocks — can still be compared for namespace equivalence."""
+    rows: Dict[int, Dict[str, Any]] = {}
+    for part in store.table("inode").parts:
+        for row in part.values():
+            rows[row["id"]] = row
+    blocks_per_inode: Dict[int, int] = {}
+    for part in store.table("block").parts:
+        for row in part.values():
+            blocks_per_inode[row["inode_id"]] = \
+                blocks_per_inode.get(row["inode_id"], 0) + 1
+
+    paths: Dict[int, str] = {ROOT_ID: ""}
+
+    def path_of(iid: int) -> Optional[str]:
+        if iid in paths:
+            return paths[iid]
+        row = rows.get(iid)
+        if row is None:
+            return None
+        parent = path_of(row["parent_id"])
+        if parent is None:
+            return None
+        p = parent + "/" + row["name"]
+        paths[iid] = p
+        return p
+
+    snap: Dict[str, Tuple] = {}
+    for iid, row in rows.items():
+        if iid == ROOT_ID:
+            continue
+        p = path_of(iid)
+        if p is None:
+            continue
+        snap[p] = (row["is_dir"], row["size"], row["perm"], row["owner"],
+                   row["repl"], blocks_per_inode.get(iid, 0))
+    return snap
+
+
+def materialize_namespace(nn: Namenode, ns) -> int:
+    """Ensure a :class:`~repro.core.workload.SyntheticNamespace`'s dirs and
+    files exist in the live store so trace replay targets resolve.
+    Idempotent; returns the number of namespace paths ensured present."""
+    for d in ns.dirs:
+        try:
+            nn.ops.mkdirs(d)
+        except FSError:
+            pass
+    for f in ns.files:
+        try:
+            nn.ops.create(f)
+        except FSError:
+            pass
+    return len(ns.dirs) + len(ns.files)

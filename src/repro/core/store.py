@@ -163,15 +163,24 @@ class OpCost:
         return (self.pk_rc + self.pk_r + self.pk_w + self.batches
                 + self.ppis + self.is_scans + self.fts)
 
+    _FIELDS = ("pk_rc", "pk_r", "pk_w", "batches", "batch_rows", "ppis",
+               "is_scans", "fts", "local_rt", "remote_rt", "rows_touched")
+
+    def copy(self) -> "OpCost":
+        return OpCost(**{f: getattr(self, f) for f in self._FIELDS})
+
+    def diff(self, earlier: "OpCost") -> "OpCost":
+        """Cost accrued since the `earlier` snapshot (batched pipeline uses
+        this to attribute per-op shares of a shared transaction)."""
+        return OpCost(**{f: getattr(self, f) - getattr(earlier, f)
+                         for f in self._FIELDS})
+
     def merge(self, other: "OpCost") -> None:
-        for f in ("pk_rc", "pk_r", "pk_w", "batches", "batch_rows", "ppis",
-                  "is_scans", "fts", "local_rt", "remote_rt", "rows_touched"):
+        for f in self._FIELDS:
             setattr(self, f, getattr(self, f) + getattr(other, f))
 
     def as_dict(self) -> Dict[str, int]:
-        d = {f: getattr(self, f) for f in (
-            "pk_rc", "pk_r", "pk_w", "batches", "batch_rows", "ppis",
-            "is_scans", "fts", "local_rt", "remote_rt", "rows_touched")}
+        d = {f: getattr(self, f) for f in self._FIELDS}
         d["round_trips"] = self.round_trips
         return d
 
@@ -373,3 +382,23 @@ class MetadataStore:
 
     def table(self, name: str) -> Table:
         return self.tables[name]
+
+    # -- introspection ------------------------------------------------------
+    def dump_state(self, *, exclude_cols: Sequence[str] = ()
+                   ) -> Dict[str, List[Tuple[Any, Any]]]:
+        """Deterministic snapshot of every table (rows sorted by PK).
+
+        Used by the batched-pipeline tests to assert that batched execution
+        leaves the store in exactly the state sequential execution does.
+        ``exclude_cols`` drops columns that legitimately differ between runs
+        with different namenode counts (e.g. per-namenode mtime clocks)."""
+        ex = set(exclude_cols)
+        out: Dict[str, List[Tuple[Any, Any]]] = {}
+        for name, t in self.tables.items():
+            rows = []
+            for part in t.parts:
+                for pk, row in part.items():
+                    rows.append((pk, tuple(sorted(
+                        (k, v) for k, v in row.items() if k not in ex))))
+            out[name] = sorted(rows, key=lambda r: repr(r[0]))
+        return out

@@ -34,6 +34,26 @@ TABLE1_MIX: List[Tuple[str, float, float]] = [
 
 READ_ONLY_OPS = {"read", "ls", "stat", "content_summary"}
 
+# Spotify operational trace mix (paper §7.2): the throughput-scaling
+# experiment replays the production trace rather than the steady-state
+# Table 1 mix — getBlockLocations dominates (~67%), listStatus is ~12%.
+# Same (op, weight_pct, fraction_on_directories) schema as TABLE1_MIX.
+SPOTIFY_TRACE_MIX: List[Tuple[str, float, float]] = [
+    ("read",            67.0, 0.0),    # getBlockLocations
+    ("ls",              12.0, 0.95),   # listStatus
+    ("stat",            10.0, 0.25),   # getFileInfo
+    ("create",           3.5, 0.0),
+    ("add_block",        2.0, 0.0),
+    ("delete",           1.5, 0.03),
+    ("rename",           1.0, 0.0),
+    ("mkdirs",           1.0, 1.0),
+    ("set_permissions",  0.5, 0.25),
+    ("set_owner",        0.5, 1.0),
+    ("set_replication",  0.5, 0.0),
+    ("content_summary",  0.3, 0.5),
+    ("append",           0.2, 0.0),
+]
+
 
 @dataclass
 class NamespaceSpec:
@@ -104,70 +124,150 @@ class WorkloadOp:
 
 
 class SpotifyWorkload:
-    """Stream of WorkloadOps distributed per Table 1."""
+    """Stream of WorkloadOps distributed per an op mix (Table 1 by default;
+    pass ``mix=SPOTIFY_TRACE_MIX`` for the §7.2 trace-replay mix)."""
 
-    def __init__(self, ns: SyntheticNamespace, seed: int = 13):
+    def __init__(self, ns: SyntheticNamespace, seed: int = 13,
+                 mix: Sequence[Tuple[str, float, float]] = TABLE1_MIX):
         self.ns = ns
         self.rng = random.Random(seed)
-        self._ops = [m[0] for m in TABLE1_MIX]
-        self._weights = [m[1] for m in TABLE1_MIX]
-        self._dir_frac = {m[0]: m[2] for m in TABLE1_MIX}
+        self.mix = list(mix)
+        self._ops = [m[0] for m in self.mix]
+        self._weights = [m[1] for m in self.mix]
+        self._dir_frac = {m[0]: m[2] for m in self.mix}
         self._create_seq = 0
+        # liveness tracking: a real trace doesn't read files it already
+        # deleted/renamed, so destructive ops retire their targets from
+        # the sampling pool
+        self._dead: set = set()
+        self._dead_dirs: set = set()
+
+    # -- liveness-aware sampling ----------------------------------------
+    def _is_dead(self, path: str) -> bool:
+        """Dead iff the path itself or any ancestor directory was retired.
+        Checked against sets, O(path depth) — depth is bounded (~7), while
+        the dead pools grow with trace length."""
+        if path in self._dead:
+            return True
+        prefix = ""
+        for seg in path.split("/"):
+            if not seg:
+                continue
+            prefix += "/" + seg
+            if prefix in self._dead_dirs:
+                return True
+        return False
+
+    def _live_file(self) -> str:
+        for _ in range(32):
+            f = self.ns.sample_file(self.rng)
+            if not self._is_dead(f):
+                return f
+        return self.ns.sample_file(self.rng)
+
+    def _live_dir(self) -> str:
+        for _ in range(32):
+            d = self.ns.sample_dir(self.rng)
+            if not self._is_dead(d):
+                return d
+        return self.ns.sample_dir(self.rng)
 
     def next_op(self) -> WorkloadOp:
         op = self.rng.choices(self._ops, weights=self._weights, k=1)[0]
         on_dir = self.rng.random() < self._dir_frac[op]
         if op in ("mkdirs",):
-            d = self.ns.sample_dir(self.rng)
+            d = self._live_dir()
             return WorkloadOp("mkdirs", f"{d}/new{self.rng.randrange(1 << 30):x}",
                               on_dir=True)
         if op == "create":
             self._create_seq += 1
-            d = self.ns.sample_dir(self.rng)
+            d = self._live_dir()
             return WorkloadOp("create", f"{d}/w{self._create_seq:08d}")
         if op == "add_block":
-            return WorkloadOp("add_block", self.ns.sample_file(self.rng))
+            return WorkloadOp("add_block", self._live_file())
         if op == "rename":
-            src = self.ns.sample_file(self.rng)
+            src = self._live_file()
+            self._dead.add(src)
             return WorkloadOp("rename_file", src, src + ".mv", on_dir=on_dir)
         if op == "delete":
             if on_dir:
-                return WorkloadOp("delete_subtree",
-                                  self.ns.sample_dir(self.rng), on_dir=True)
-            return WorkloadOp("delete_file", self.ns.sample_file(self.rng))
+                d = self._live_dir()
+                self._dead_dirs.add(d)
+                return WorkloadOp("delete_subtree", d, on_dir=True)
+            f = self._live_file()
+            self._dead.add(f)
+            return WorkloadOp("delete_file", f)
         if op == "set_permissions":
-            p = (self.ns.sample_dir(self.rng) if on_dir
-                 else self.ns.sample_file(self.rng))
+            p = self._live_dir() if on_dir else self._live_file()
             return WorkloadOp("chmod_subtree" if on_dir else "chmod_file",
                               p, on_dir=on_dir)
         if op == "set_owner":
-            p = (self.ns.sample_dir(self.rng) if on_dir
-                 else self.ns.sample_file(self.rng))
+            p = self._live_dir() if on_dir else self._live_file()
             return WorkloadOp("chown_subtree" if on_dir else "chown_file",
                               p, on_dir=on_dir)
         if op == "set_replication":
-            return WorkloadOp("set_replication",
-                              self.ns.sample_file(self.rng))
+            return WorkloadOp("set_replication", self._live_file())
         if op == "ls":
-            p = (self.ns.sample_dir(self.rng) if on_dir
-                 else self.ns.sample_file(self.rng))
+            p = self._live_dir() if on_dir else self._live_file()
             return WorkloadOp("ls", p, on_dir=on_dir)
         if op == "stat":
-            p = (self.ns.sample_dir(self.rng) if on_dir
-                 else self.ns.sample_file(self.rng))
+            p = self._live_dir() if on_dir else self._live_file()
             return WorkloadOp("stat", p, on_dir=on_dir)
         if op == "content_summary":
-            p = (self.ns.sample_dir(self.rng) if on_dir
-                 else self.ns.sample_file(self.rng))
+            p = self._live_dir() if on_dir else self._live_file()
             return WorkloadOp("content_summary", p, on_dir=on_dir)
         if op == "append":
-            return WorkloadOp("append", self.ns.sample_file(self.rng))
+            return WorkloadOp("append", self._live_file())
         # default: read
-        return WorkloadOp("read", self.ns.sample_file(self.rng))
+        return WorkloadOp("read", self._live_file())
+
+    def make_trace(self, n_ops: int) -> List[WorkloadOp]:
+        """Materialize ``n_ops`` ops up-front as a replayable trace."""
+        return [self.next_op() for _ in range(n_ops)]
 
     def mix_histogram(self, n: int = 100_000) -> Dict[str, float]:
         counts: Dict[str, int] = {}
         for _ in range(n):
             o = self.next_op()
             counts[o.op] = counts.get(o.op, 0) + 1
+        return {k: 100.0 * v / n for k, v in sorted(counts.items())}
+
+
+def make_spotify_trace(ns: SyntheticNamespace, n_ops: int, *,
+                       seed: int = 17,
+                       mix: Sequence[Tuple[str, float, float]]
+                       = SPOTIFY_TRACE_MIX) -> List[WorkloadOp]:
+    """Generate a fixed Spotify-style trace (§7.2). The same trace replayed
+    at every namenode count keeps throughput curves comparable — exactly the
+    replay methodology of the paper's Fig 7 scaling experiment."""
+    return SpotifyWorkload(ns, seed=seed, mix=mix).make_trace(n_ops)
+
+
+class TraceReplay:
+    """Replays a pre-generated trace cyclically through the DES / pipeline
+    client interface (``next_op``). Deterministic: op ``i`` issued by the
+    replay is always ``trace[i % len(trace)]`` irrespective of namenode
+    count, client count, or batching."""
+
+    def __init__(self, trace: Sequence[WorkloadOp]):
+        if not trace:
+            raise ValueError("empty trace")
+        self.trace = list(trace)
+        self._i = 0
+        self.issued = 0
+
+    def __len__(self) -> int:
+        return len(self.trace)
+
+    def next_op(self) -> WorkloadOp:
+        op = self.trace[self._i]
+        self._i = (self._i + 1) % len(self.trace)
+        self.issued += 1
+        return op
+
+    def mix_histogram(self) -> Dict[str, float]:
+        counts: Dict[str, int] = {}
+        for o in self.trace:
+            counts[o.op] = counts.get(o.op, 0) + 1
+        n = len(self.trace)
         return {k: 100.0 * v / n for k, v in sorted(counts.items())}

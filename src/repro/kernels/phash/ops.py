@@ -2,6 +2,8 @@
 import functools
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from .kernel import phash as _phash
 
@@ -9,3 +11,30 @@ from .kernel import phash as _phash
 @functools.partial(jax.jit, static_argnames=("n_partitions", "interpret"))
 def phash(keys, n_partitions: int = 64, interpret: bool = True):
     return _phash(keys, n_partitions=n_partitions, interpret=interpret)
+
+
+def phash_partitions(keys, n_partitions: int = 64, *,
+                     interpret: bool = True) -> np.ndarray:
+    """Partition ids for a whole batch of integer keys at once.
+
+    This is the vectorized path->partition step of the batched request
+    pipeline: a namenode hashes every hinted inode id in a pulled batch in
+    one kernel launch instead of per-op Python hashing. Results match
+    ``repro.core.store._hash_key(key) % n_partitions`` exactly for integer
+    keys (both sides operate on the low 32 bits).
+
+    Keys are padded to a power-of-two length (>= 8) so the 1-D grid always
+    tiles evenly and jit recompiles are bounded to O(log N) shapes.
+    """
+    arr = np.asarray(keys, dtype=np.int64) & 0xFFFFFFFF
+    n = arr.shape[0]
+    if n == 0:
+        return np.zeros(0, dtype=np.int32)
+    padded = 8
+    while padded < n:
+        padded *= 2
+    buf = np.zeros(padded, dtype=np.uint32)
+    buf[:n] = arr.astype(np.uint32)
+    out = phash(jnp.asarray(buf), n_partitions=n_partitions,
+                interpret=interpret)
+    return np.asarray(out)[:n]

@@ -49,7 +49,8 @@ def pipeline_apply(layer_fn: Callable[[Any, jax.Array], jax.Array],
         # params_local: [1, layers_per_stage, ...] (this stage's block)
         params_me = jax.tree.map(lambda a: a[0], params_local)
         sid = jax.lax.axis_index(stage_axis)
-        n_stages = jax.lax.axis_size(stage_axis)
+        n_stages = S          # static mesh extent (jax.lax.axis_size is
+                              # not available on older jax releases)
         T = M + S - 1
         buf = jnp.zeros_like(xs[0])          # activation entering this stage
         outs = jnp.zeros_like(xs)

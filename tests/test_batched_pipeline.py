@@ -1,0 +1,184 @@
+"""Batched multi-namenode request pipeline (paper §2.2, §7.2).
+
+The two contract properties from the issue:
+  1. batched execution leaves the store in EXACTLY the state sequential
+     execution does (strict full-table equality on a single namenode;
+     logical-namespace equality across namenode counts, where physical
+     ids legitimately differ);
+  2. OpCost accounting is conserved across batching: the merge of per-
+     namenode aggregates == the pipeline's total == the merge of every
+     successful op's cost.
+Plus: the vectorized phash partition grouping agrees with the store's
+partitioner, batching actually saves round trips, the batched DES scales
+with namenode count, and the trace generator matches the §7.2 mix.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (MetadataStore, NamenodeCluster, OpCost,
+                        RequestPipeline, format_fs, materialize_namespace,
+                        namespace_snapshot)
+from repro.core.cluster_sim import BatchedHopsFSSim, profile_ops
+from repro.core.store import _hash_key
+from repro.core.workload import (NamespaceSpec, SPOTIFY_TRACE_MIX,
+                                 SpotifyWorkload, SyntheticNamespace,
+                                 TraceReplay, make_spotify_trace)
+
+
+def _build(n_namenodes: int, *, n_dirs: int = 16, files_per_dir: int = 4):
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    cluster = NamenodeCluster(store, n_namenodes)
+    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=n_dirs,
+                            files_per_dir=files_per_dir)
+    materialize_namespace(cluster.namenodes[0], ns)
+    return store, cluster, ns
+
+
+def _trace(ns, n_ops=300, seed=5):
+    return make_spotify_trace(ns, n_ops, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# 1. state equivalence
+# ---------------------------------------------------------------------------
+
+def test_batched_equals_sequential_state_single_nn():
+    """Strict equality: with one namenode, batched execution must leave
+    every table byte-identical to sequential execution (same mtimes, same
+    ids — nothing may be reordered observably)."""
+    ns_ref = SyntheticNamespace(NamespaceSpec(), n_dirs=16, files_per_dir=4)
+    trace = _trace(ns_ref)
+    store_seq, cluster_seq, _ = _build(1)
+    seq = RequestPipeline(cluster_seq, batch_size=1).run(trace)
+    store_bat, cluster_bat, _ = _build(1)
+    bat = RequestPipeline(cluster_bat, batch_size=8).run(trace)
+    assert store_seq.dump_state() == store_bat.dump_state()
+    # same per-op outcome stream too
+    assert [(o.ok, o.error) for o in seq.outcomes] == \
+           [(o.ok, o.error) for o in bat.outcomes]
+    assert bat.batched_fraction > 0.2     # batching actually engaged
+
+
+def test_batched_equals_sequential_namespace_multi_nn():
+    """Across namenode counts the physical ids differ (per-NN id-allocator
+    blocks) but the logical namespace must be identical."""
+    ns_ref = SyntheticNamespace(NamespaceSpec(), n_dirs=16, files_per_dir=4)
+    trace = _trace(ns_ref)
+    store_seq, cluster_seq, _ = _build(1)
+    RequestPipeline(cluster_seq, batch_size=1).run(trace)
+    store_bat, cluster_bat, _ = _build(4)
+    RequestPipeline(cluster_bat, batch_size=8).run(trace)
+    assert namespace_snapshot(store_seq) == namespace_snapshot(store_bat)
+
+
+# ---------------------------------------------------------------------------
+# 2. cost conservation
+# ---------------------------------------------------------------------------
+
+def test_opcost_conserved_across_batching():
+    _, cluster, ns = _build(4)
+    stats = RequestPipeline(cluster, batch_size=8).run(_trace(ns))
+    per_nn = OpCost()
+    for c in stats.per_nn_cost.values():
+        per_nn.merge(c)
+    per_op = OpCost()
+    for o in stats.outcomes:
+        if o.ok:
+            per_op.merge(o.result.cost)
+    assert per_nn.as_dict() == stats.total_cost.as_dict() == per_op.as_dict()
+    # every op got an outcome, and namenode op counters agree
+    assert stats.ok + stats.failed == len(stats.outcomes)
+    assert sum(stats.per_nn_ops.values()) == stats.ok
+
+
+def test_batching_saves_round_trips():
+    ns_ref = SyntheticNamespace(NamespaceSpec(), n_dirs=16, files_per_dir=4)
+    trace = _trace(ns_ref)
+    _, cluster_seq, _ = _build(1)
+    seq = RequestPipeline(cluster_seq, batch_size=1).run(trace)
+    _, cluster_bat, _ = _build(1)
+    bat = RequestPipeline(cluster_bat, batch_size=16).run(trace)
+    assert bat.total_cost.round_trips < seq.total_cost.round_trips
+    # reads dominate the §7.2 mix => savings should be substantial
+    assert bat.total_cost.round_trips <= 0.95 * seq.total_cost.round_trips
+
+
+def test_concurrent_pipeline_namespace_consistent():
+    """Threaded namenodes over the shared store: every op completes and
+    the namespace matches a sequential run of the same trace (the trace's
+    mutations target distinct paths, so interleaving is benign)."""
+    ns_ref = SyntheticNamespace(NamespaceSpec(), n_dirs=16, files_per_dir=4)
+    trace = _trace(ns_ref, n_ops=200)
+    store_seq, cluster_seq, _ = _build(1)
+    RequestPipeline(cluster_seq, batch_size=1).run(trace)
+    store_con, cluster_con, _ = _build(4)
+    stats = RequestPipeline(cluster_con, batch_size=8,
+                            concurrent=True).run(trace)
+    assert stats.ok + stats.failed == len(trace)
+    assert namespace_snapshot(store_con) == namespace_snapshot(store_seq)
+
+
+# ---------------------------------------------------------------------------
+# 3. vectorized partition grouping (phash kernel path)
+# ---------------------------------------------------------------------------
+
+def test_vectorized_partitions_match_store():
+    from repro.core.namenode import _partitions_for
+    store = MetadataStore(n_datanodes=4)
+    ids = [1, 2, 3, 999, 12345, 2**31 - 1, 64, 65]
+    expect = [store.table("inode").partition_of(i) for i in ids]
+    # scalar path (small batch) and forced kernel path must both agree
+    assert _partitions_for(ids, store.n_partitions) == expect
+    assert _partitions_for(ids, store.n_partitions, min_batch=1) == expect
+    assert expect == [_hash_key(i) % store.n_partitions for i in ids]
+
+
+# ---------------------------------------------------------------------------
+# 4. trace generation + DES scaling
+# ---------------------------------------------------------------------------
+
+def test_spotify_trace_mix():
+    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=30)
+    wl = SpotifyWorkload(ns, seed=3, mix=SPOTIFY_TRACE_MIX)
+    hist = wl.mix_histogram(20_000)
+    assert 64.0 < hist.get("read", 0) < 70.0          # ~67% getBlockLocations
+    assert 10.0 < hist.get("ls", 0) < 14.0            # ~12% listStatus
+
+
+def test_trace_replay_deterministic():
+    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=10)
+    trace = make_spotify_trace(ns, 50, seed=9)
+    r1, r2 = TraceReplay(trace), TraceReplay(trace)
+    a = [r1.next_op() for _ in range(120)]
+    b = [r2.next_op() for _ in range(120)]
+    assert a == b
+    assert a[:50] == trace and a[50:100] == trace      # cyclic
+
+
+def test_batched_sim_throughput_scales_with_namenodes():
+    profiles = profile_ops()
+    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=30)
+    trace = make_spotify_trace(ns, 1000, seed=11)
+    tps = []
+    for n_nn in (1, 4):
+        sim = BatchedHopsFSSim(n_namenodes=n_nn, n_ndb=8,
+                               profiles=profiles, batch_size=16, seed=1)
+        sim.start_clients(150 * n_nn, TraceReplay(trace))
+        tps.append(sim.run(0.15).throughput)
+    assert tps[1] > 2.0 * tps[0]
+
+
+def test_batched_sim_batching_engages_under_load():
+    profiles = profile_ops()
+    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=30)
+    trace = make_spotify_trace(ns, 1000, seed=11)
+    sim = BatchedHopsFSSim(n_namenodes=1, n_ndb=4, profiles=profiles,
+                           batch_size=16, seed=1)
+    sim.start_clients(400, TraceReplay(trace))
+    res = sim.run(0.15)
+    assert res.completed > 0
+    assert sim.batched_ops > 0.2 * res.completed
+    # nn-side counter ticks at batch finish; client-side `completed` half an
+    # RTT later, so in-flight ops at the horizon leave nn counters ahead
+    assert sum(sim.nn_ops_completed) >= res.completed

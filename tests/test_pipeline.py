@@ -18,8 +18,11 @@ def test_pipeline_matches_sequential():
     if n < 1:
         pytest.skip("no devices")
     S = 1                                  # stage axis size on this host
-    mesh = jax.make_mesh((S,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = jax.make_mesh((S,), ("stage",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    else:  # older jax: meshes are Auto by default
+        mesh = jax.make_mesh((S,), ("stage",))
     L_per, M, mb, d = 3, 4, 2, 8
     key = jax.random.PRNGKey(0)
     w = jax.random.normal(key, (S, L_per, d, d)) * 0.3

@@ -17,8 +17,11 @@ SCRIPT = textwrap.dedent("""
     from repro.parallel.pipeline import pipeline_apply
 
     S, L_per, M, mb, d = 4, 2, 8, 2, 8
-    mesh = jax.make_mesh((S,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = jax.make_mesh((S,), ("stage",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    else:  # older jax: meshes are Auto by default
+        mesh = jax.make_mesh((S,), ("stage",))
     w = jax.random.normal(jax.random.PRNGKey(0), (S, L_per, d, d)) * 0.3
     x = jax.random.normal(jax.random.PRNGKey(1), (M, mb, d))
 

@@ -1,8 +1,14 @@
-"""Property-based tests (hypothesis) on system invariants."""
-import hypothesis.strategies as st
+"""Property-based tests (hypothesis) on system invariants.
+
+Skipped cleanly when `hypothesis` is not installed (it is a dev-only
+dependency, see requirements-dev.txt) — the tier-1 suite must not fail
+on environments that only have the runtime deps."""
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import HealthCheck, given, settings  # noqa: E402
 
 from repro.core import (HopsFSOps, InodeHintCache, MetadataStore, format_fs)
 from repro.core.hdfs_baseline import HDFSNamenode
