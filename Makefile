@@ -1,11 +1,22 @@
-# Tier-1 tests, benchmarks, and docs checks — one invocation each.
+# Tier-1 tests, lint, example smoke, benchmarks, and docs checks.
 PY        ?= python
 PYTHONPATH := src
 
-.PHONY: test bench bench-all bench-quick docs-lint
+.PHONY: test pytest lint smoke bench bench-all bench-quick docs-lint
 
-test:                    ## tier-1 suite (ROADMAP verify command)
+test: lint smoke           ## default flow: lint + example smoke + tier-1 suite
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -x -q
+
+pytest:                  ## tier-1 suite only (ROADMAP verify command)
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -x -q
+
+lint:                    ## pyflakes if installed, else the AST fallback
+	PYTHONPATH=$(PYTHONPATH) $(PY) scripts/lint.py
+
+smoke:                   ## run the fast examples headless
+	PYTHONPATH=$(PYTHONPATH) $(PY) examples/quickstart.py
+	PYTHONPATH=$(PYTHONPATH) $(PY) examples/dfs_client.py
+	PYTHONPATH=$(PYTHONPATH) $(PY) examples/batched_pipeline.py
 
 bench:                   ## Fig 7-style trace replay -> BENCH_throughput.json
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.trace_replay

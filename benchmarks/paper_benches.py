@@ -7,17 +7,16 @@ functional numbers are wall-clock on the real store.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 import numpy as np
 
-from repro.core import (EXCLUSIVE, READ_COMMITTED, HopsFSOps, MetadataStore,
-                        SubtreeOps, Transaction, format_fs)
-from repro.core.cluster_sim import (DEFAULT_PARAMS, HDFSSim, HopsFSSim,
-                                    profile_ops)
+from repro.core import (READ_COMMITTED, HopsFSOps, MetadataStore, SubtreeOps,
+                        Transaction, format_fs)
+from repro.core.cluster_sim import HDFSSim, HopsFSSim, profile_ops
 from repro.core.costmodel import (capacity_headline,
                                   create_depth10_roundtrips, table2, table3)
-from repro.core.hdfs_baseline import HDFSHACluster, HDFSNamenode
+from repro.core.hdfs_baseline import HDFSNamenode
 from repro.core.tables import make_inode
 from repro.core.workload import (NamespaceSpec, SpotifyWorkload,
                                  SyntheticNamespace, TABLE1_MIX)

@@ -17,7 +17,6 @@ from repro.configs import get_config                      # noqa: E402
 from repro.launch.analytic import (analytic_bytes,        # noqa: E402
                                    analytic_collective_bytes)
 from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402
-from repro.launch.inputs import cell_policy               # noqa: E402
 from repro.parallel.sharding import MeshPolicy            # noqa: E402
 
 RESULTS = ROOT / "results" / "dryrun"

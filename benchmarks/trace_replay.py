@@ -8,9 +8,10 @@ JSON. Two layers are exercised:
 
   * the **DES** (`BatchedHopsFSSim`): cluster-scale throughput/latency with
     per-op DB round-trip profiles measured from the functional store;
-  * the **functional pipeline** (`RequestPipeline`): real transactions on
-    the real store, proving the batched executor's round-trip savings and
-    that batched == sequential final state.
+  * the **functional pipeline**, driven through the typed `DFSClient`
+    facade (`DFSClient.run_trace` -> `RequestPipeline`): real transactions
+    on the real store, proving the batched executor's round-trip savings
+    and that batched == sequential final state.
 
   PYTHONPATH=src python -m benchmarks.trace_replay [--quick] \
       [--out BENCH_throughput.json] [--namenodes 1,4,16] [--batch-size 16]
@@ -28,7 +29,7 @@ from typing import Dict, List, Tuple
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core import (MetadataStore, NamenodeCluster, RequestPipeline,
+from repro.core import (DFSClient, MetadataStore, NamenodeCluster,
                         format_fs, materialize_namespace, namespace_snapshot)
 from repro.core.cluster_sim import BatchedHopsFSSim, profile_ops
 from repro.core.workload import (NamespaceSpec, SPOTIFY_TRACE_MIX,
@@ -67,7 +68,9 @@ def functional_batching_report(trace, *, n_namenodes: int = 4,
                                n_dirs: int = 20) -> Dict:
     """Run the *functional* pipeline twice (sequential vs batched) on
     identical stores and report measured round-trip savings + state
-    equality — ties the DES's collapse model to real transactions."""
+    equality — ties the DES's collapse model to real transactions.
+    Driven through the typed `DFSClient` facade, the client-facing entry
+    point of the op registry."""
     def run(bs: int):
         store = MetadataStore(n_datanodes=4)
         format_fs(store)
@@ -75,7 +78,7 @@ def functional_batching_report(trace, *, n_namenodes: int = 4,
         ns = SyntheticNamespace(NamespaceSpec(), n_dirs=n_dirs,
                                 files_per_dir=4)
         materialize_namespace(cluster.namenodes[0], ns)
-        stats = RequestPipeline(cluster, batch_size=bs).run(trace)
+        stats = DFSClient(cluster).run_trace(trace, batch_size=bs)
         return store, stats
 
     store_seq, seq = run(1)

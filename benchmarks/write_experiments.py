@@ -15,7 +15,7 @@ sys.path.insert(0, str(ROOT / "src"))
 sys.path.insert(0, str(ROOT))
 
 from benchmarks.roofline import load_cells, table_markdown   # noqa: E402
-from repro.configs import ARCHS, LONG_CONTEXT_OK, SHAPES, cells  # noqa: E402
+from repro.configs import cells
 
 RESULTS = ROOT / "results" / "dryrun"
 

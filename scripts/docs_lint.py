@@ -17,7 +17,8 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
-DOCS = ["README.md", "docs/ARCHITECTURE.md", "docs/BENCHMARKS.md"]
+DOCS = ["README.md", "docs/ARCHITECTURE.md", "docs/API.md",
+        "docs/BENCHMARKS.md"]
 MIN_BYTES = 1500
 REF_PREFIXES = ("src/", "tests/", "benchmarks/", "examples/", "docs/",
                 "scripts/")

@@ -12,12 +12,10 @@ to host memory; serialization + manifest writes happen on a worker thread.
 """
 from __future__ import annotations
 
-import json
 import threading
 from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
 
-import jax
 import numpy as np
 
 from ..metaplane import MetadataPlane

@@ -4,6 +4,9 @@ transactional, in-memory store (the paper's contribution).
 Public surface:
   MetadataStore        — NDB-equivalent partitioned store w/ node groups
   Transaction          — 3-phase txn template (lock/execute/update) + OpCost
+  REGISTRY / OpSpec / register_op — the typed operation protocol (one
+                         declaration per op: handler, arg schema, flags)
+  DFSClient            — HDFS-style typed facade with composable middleware
   HopsFSOps            — inode operations (Fig 4 template, Table 3 costs)
   SubtreeOps           — subtree operations protocol (§6)
   NamenodeCluster / Client — stateless namenodes + selection policies
@@ -12,14 +15,20 @@ Public surface:
   HDFSNamenode / HDFSHACluster — the HDFS baseline (§2.1)
   profile_ops / HopsFSSim / HDFSSim — measured-cost DES (§7)
 """
+from .dfs_client import (BlockLocation, ConcatSummary, ContentSummary,
+                         DFSClient, DeleteSummary, FileStatus,
+                         TruncateSummary)
 from .fs import (FSError, FileAlreadyExists, FileNotFound, HopsFSOps,
                  OpResult, SubtreeLockedError, format_fs, split_path)
 from .hdfs_baseline import HDFSHACluster, HDFSNamenode
 from .hint_cache import InodeHintCache
 from .leader import LeaderElection
+from .middleware import (CallContext, compose, failover, subtree_retry)
 from .namenode import (BATCHABLE_READ_OPS, Client, Namenode, NamenodeCluster,
                        OpOutcome, PipelineStats, RequestPipeline,
                        materialize_namespace, namespace_snapshot)
+from .ops_registry import (ArgSpec, OpSpec, OpRegistry, REGISTRY, REQUIRED,
+                           WorkloadOp, register_op)
 from .store import (EXCLUSIVE, READ_COMMITTED, SHARED, LockTimeout,
                     MetadataStore, NodeGroupDown, OpCost, StoreError)
 from .subtree import SubtreeOps, TreeNode
@@ -31,6 +40,11 @@ __all__ = [
     "TreeNode", "NamenodeCluster", "Namenode", "Client", "LeaderElection",
     "RequestPipeline", "PipelineStats", "OpOutcome", "BATCHABLE_READ_OPS",
     "materialize_namespace", "namespace_snapshot",
+    "REGISTRY", "OpRegistry", "OpSpec", "ArgSpec", "REQUIRED",
+    "register_op", "WorkloadOp",
+    "DFSClient", "FileStatus", "BlockLocation", "ContentSummary",
+    "DeleteSummary", "TruncateSummary", "ConcatSummary",
+    "CallContext", "compose", "failover", "subtree_retry",
     "HDFSNamenode", "HDFSHACluster", "InodeHintCache", "format_fs",
     "split_path", "run_with_retry", "FSError", "FileNotFound",
     "FileAlreadyExists", "SubtreeLockedError", "StoreError", "LockTimeout",

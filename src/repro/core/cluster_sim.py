@@ -26,15 +26,14 @@ from __future__ import annotations
 
 import heapq
 import random
-import zlib
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Tuple
 
 from .fs import HopsFSOps
-from .namenode import BATCHABLE_READ_OPS
+from .ops_registry import REGISTRY
 from .store import MetadataStore, OpCost
-from .workload import READ_ONLY_OPS, SpotifyWorkload, WorkloadOp
+from .workload import SpotifyWorkload, WorkloadOp
 
 # ---------------------------------------------------------------------------
 # calibration constants (seconds) — AWS c3.8xlarge-ish, virtualized network
@@ -459,8 +458,6 @@ class BatchedHopsFSSim(HopsFSSim):
     throughput-scaling curve replayed by ``benchmarks/trace_replay.py``.
     """
 
-    _BATCHABLE = frozenset(BATCHABLE_READ_OPS)
-
     def __init__(self, *, batch_size: int = 16, **kw):
         super().__init__(**kw)
         self.batch_size = max(1, batch_size)
@@ -543,8 +540,11 @@ class BatchedHopsFSSim(HopsFSSim):
         rts: List[Tuple[str, bool]] = []
         for op, _ in batch:
             prof = self.profiles.get(op.op) or self.profiles["read"]
-            if op.op in self._BATCHABLE:
-                part = zlib.crc32(op.path.encode()) % self.N_PARTITIONS
+            spec = REGISTRY.get(op.op)
+            if spec is not None and spec.batchable:   # live registry check
+                # path -> partition via the OpSpec's hint derivation, the
+                # same rule the functional pipeline groups against
+                part = spec.sim_partition(op.path, self.N_PARTITIONS)
                 groups.setdefault((op.op, part), []).append(prof)
             else:
                 rts.extend(self._build_rts(prof))
@@ -607,7 +607,8 @@ class HDFSSim:
 
     def _run_op(self, op: WorkloadOp, done: Callable[[], None]) -> None:
         p = self.p
-        is_read = op.op in READ_ONLY_OPS
+        op_spec = REGISTRY.get(op.op)
+        is_read = op_spec is not None and op_spec.read_only
 
         def after_rpc():
             if self.sim.t < self.down_until:
@@ -621,8 +622,8 @@ class HDFSSim:
             cpu = p.hdfs_cpu_read if is_read else p.hdfs_cpu_write
             hold = p.hdfs_lock_read_hold if is_read \
                 else p.hdfs_lock_write_hold
-            if op.op in ("delete_subtree", "chmod_subtree",
-                         "chown_subtree", "rename_subtree"):
+            spec = REGISTRY.get(op.op)
+            if spec is not None and spec.subtree:
                 hold *= 40      # large in-heap subtree mutation
 
             def fin():

@@ -13,8 +13,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Optional
 
-from .tables import (HDFS_FILE_BYTES_BASE, HOPSFS_FILE_BYTES_R2,
-                     NDB_MAX_DATANODES, NDB_MAX_RAM_PER_NODE_GB,
+from .tables import (NDB_MAX_DATANODES, NDB_MAX_RAM_PER_NODE_GB,
                      hdfs_capacity_files, hopsfs_capacity_files)
 
 

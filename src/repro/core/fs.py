@@ -118,6 +118,7 @@ _PPIS_DEL_EMPTY = ("block", "inv")
 _PPIS_DEL_FULL = ("block", "replica", "urb", "prb", "ruc", "cr", "inv")
 _PPIS_ADDBLK_EMPTY = ("block", "ruc")
 _PPIS_ADDBLK_FULL = ("block", "replica", "urb", "prb", "ruc", "inv")
+_PPIS_TRUNC = ("block", "replica", "ruc", "inv")
 
 
 class HopsFSOps:
@@ -736,6 +737,137 @@ class HopsFSOps:
                 self.cache.put(drp.parent["id"], dc[-1], snode["id"])
             cost = txn.commit()
         return OpResult(None, cost)
+
+    def truncate(self, path: str, new_size: int = 0) -> OpResult:
+        """HDFS-style truncate: drop every block fully beyond ``new_size``,
+        shrink the boundary block, update the inode size.  Registered purely
+        through the op registry — no namenode/DES dispatch edits (the
+        extensibility proof for the typed operation protocol)."""
+        if new_size < 0:
+            raise FSError(f"negative truncate size {new_size}")
+        comps = split_path(path)
+        with self._begin(self._hint_for(comps, parent=False)) as txn:
+            rp = self._resolve(
+                txn, comps, last_lock=EXCLUSIVE, revalidate=True, path=path,
+                aux=(("lease", lambda p, t:
+                      ((t.get("client") or "client",) if t else None),
+                      READ_COMMITTED),))
+            node = rp.target
+            if node is None or node["is_dir"]:
+                raise FileNotFound(path)
+            if new_size >= node["size"]:
+                # nothing to drop; still a (cheap) committed no-op like HDFS
+                cost = txn.commit()
+                return OpResult({"size": node["size"], "removed_blocks": 0},
+                                cost)
+            related = self._file_scan(txn, _PPIS_TRUNC, node["id"],
+                                      EXCLUSIVE)
+            blocks = sorted(related.get("block", []),
+                            key=lambda b: b["index"])
+            reps = related.get("replica", [])
+            removed = 0
+            offset = 0
+            for b in blocks:
+                end = offset + b["size"]
+                if offset >= new_size:           # fully beyond: drop block
+                    txn.delete("block", (b["block_id"],))
+                    for r in reps:
+                        if r["block_id"] == b["block_id"]:
+                            txn.delete("replica", (r["block_id"],
+                                                   r["datanode_id"]))
+                            txn.write("inv", {"block_id": b["block_id"],
+                                              "datanode_id":
+                                              r["datanode_id"],
+                                              "inode_id": node["id"]})
+                    removed += 1
+                elif end > new_size:             # boundary block: shrink
+                    nb = dict(b)
+                    nb["size"] = new_size - offset
+                    txn.write("block", nb)
+                offset = end
+            node = dict(node)
+            node["size"] = new_size
+            node["mtime"] = next(self.clock)
+            txn.write("inode", node)
+            cost = txn.commit()
+        return OpResult({"size": new_size, "removed_blocks": removed}, cost)
+
+    def concat(self, target: str, srcs: Sequence[str]) -> OpResult:
+        """HDFS-style concat: move every source file's blocks onto the
+        target (re-indexed after its existing blocks) and delete the source
+        inodes, all in ONE transaction.  Block/replica rows are partitioned
+        by inode id (§4.2), so re-owning a block is a delete+insert exactly
+        like a rename across parents.  Paths are locked in total order
+        (§5 "Cyclic Deadlocks")."""
+        if not srcs:
+            raise FSError("concat: no source files")
+        if target in srcs:
+            raise FSError("concat: target cannot be a source")
+        if len(set(srcs)) != len(srcs):
+            raise FSError("concat: duplicate source")
+        tc = split_path(target)
+        with self._begin(self._hint_for(tc, parent=False)) as txn:
+            resolved: Dict[str, ResolvedPath] = {}
+            ordered = sorted([target, *srcs], key=split_path)
+            for i, p in enumerate(ordered):
+                resolved[p] = self._resolve(txn, split_path(p),
+                                            last_lock=EXCLUSIVE,
+                                            lock_parent=True,
+                                            revalidate=(i == 0), path=p)
+            trp = resolved[target]
+            tnode = trp.target
+            if tnode is None or tnode["is_dir"]:
+                raise FileNotFound(target)
+            tblocks = sorted(
+                self._file_scan(txn, ("block",), tnode["id"],
+                                EXCLUSIVE).get("block", []),
+                key=lambda b: b["index"])
+            next_index = len(tblocks)
+            moved = 0
+            grown = 0
+            touched_parents = {trp.parent["id"]}
+            for src in srcs:
+                srp = resolved[src]
+                snode = srp.target
+                if snode is None or snode["is_dir"]:
+                    raise FileNotFound(src)
+                related = self._file_scan(txn, _PPIS_CREATE_FULL,
+                                          snode["id"], EXCLUSIVE)
+                # partition-key update: the store relocates each row to the
+                # target inode's shard (internal delete+insert, §4.2).
+                # EVERY file-related row is re-owned — replica-state rows
+                # (urb/prb/ruc/cr/er/inv) included — so deleting the source
+                # inode orphans nothing.
+                for b in sorted(related.pop("block", []),
+                                key=lambda x: x["index"]):
+                    nb = dict(b)
+                    nb["inode_id"], nb["index"] = tnode["id"], next_index
+                    txn.write("block", nb)
+                    next_index += 1
+                    moved += 1
+                for tname, rws in related.items():
+                    for r in rws:
+                        nr = dict(r)
+                        nr["inode_id"] = tnode["id"]
+                        txn.write(tname, nr)
+                txn.delete("inode", (snode["parent_id"], snode["name"]))
+                grown += snode["size"]
+                touched_parents.add(srp.parent["id"])
+                if self.cache:
+                    self.cache.invalidate(snode["parent_id"], snode["name"])
+            tnode = dict(tnode)
+            tnode["size"] += grown
+            tnode["mtime"] = next(self.clock)
+            txn.write("inode", tnode)
+            for p in ordered:
+                prow = resolved[p].parent
+                if prow["id"] in touched_parents:
+                    touched_parents.discard(prow["id"])
+                    pr = dict(prow)
+                    pr["mtime"] = next(self.clock)
+                    txn.write("inode", pr)
+            cost = txn.commit()
+        return OpResult({"blocks_moved": moved, "size": tnode["size"]}, cost)
 
     # ------------------------------------------------------------------
     # block reports (§7.8)

@@ -14,7 +14,7 @@ resolution and repairs the cache. Entries go stale rarely — rename/move are
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from .tables import ROOT_ID
 

@@ -11,7 +11,7 @@ driver), which makes the protocol deterministic and testable.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from .store import MetadataStore
 from .transactions import Transaction

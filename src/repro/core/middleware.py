@@ -1,0 +1,99 @@
+"""Composable client-side call middleware (one implementation, three users).
+
+The retry/failover behaviour that HopsFS clients implement — voluntary
+re-try after a subtree-lock abort (§6.3) and transparent failover to
+another namenode when one dies (§7.6.1) — used to be duplicated between
+``Namenode._safe_exec``, ``Client.execute`` and ``RequestPipeline.run``.
+It now lives here as middleware over a plain call chain:
+
+    handler  = compose([failover(...), subtree_retry(...)], terminal)
+    result   = handler(CallContext(op=..., wop=...))
+
+A *terminal* handler performs one attempt (picking a namenode and invoking
+the op through the registry) and records the namenode it used on the
+context; middleware around it decide whether an exception is retryable.
+``DFSClient`` accepts a custom middleware stack, so policies (more
+aggressive backoff, circuit breaking, tracing) compose without touching
+the namenode or the registry.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence
+
+from .fs import SubtreeLockedError
+from .ops_registry import WorkloadOp
+from .store import StoreError
+
+
+@dataclass
+class CallContext:
+    """State threaded through one logical call (possibly many attempts)."""
+    op: str
+    wop: Optional[WorkloadOp] = None
+    namenode: Any = None        # namenode used by the LAST attempt
+    attempts: int = 0
+    retries: int = 0            # subtree-abort + failover retries
+
+
+Handler = Callable[[CallContext], Any]
+Middleware = Callable[[Handler], Handler]
+
+
+def compose(middleware: Sequence[Middleware], terminal: Handler) -> Handler:
+    """Wrap ``terminal`` with the middleware, first entry outermost."""
+    h = terminal
+    for mw in reversed(list(middleware)):
+        h = mw(h)
+    return h
+
+
+def subtree_retry(retries: int = 8, backoff: float = 0.002,
+                  sleep: Callable[[float], None] = time.sleep) -> Middleware:
+    """Ops that hit a live subtree lock voluntarily aborted (§6.3); retry
+    them with linear backoff exactly as the HopsFS client does, surfacing
+    :class:`SubtreeLockedError` only once the budget is exhausted."""
+    def mw(nxt: Handler) -> Handler:
+        def handler(ctx: CallContext) -> Any:
+            last: Optional[Exception] = None
+            for attempt in range(max(1, retries)):
+                try:
+                    return nxt(ctx)
+                except SubtreeLockedError as e:
+                    last = e
+                    ctx.retries += 1
+                    if backoff:
+                        sleep(backoff * (attempt + 1))
+            raise last  # type: ignore[misc]
+        return handler
+    return mw
+
+
+def failover(attempts: int = 8,
+             on_failover: Optional[Callable[[CallContext], None]] = None
+             ) -> Middleware:
+    """Transparent namenode failover (§7.6.1): a :class:`StoreError` from a
+    namenode that is now DEAD means the op was in flight when it died —
+    retry elsewhere. Errors from a live namenode are genuine outcomes
+    (FileNotFound, quota, ...) and propagate unchanged."""
+    def mw(nxt: Handler) -> Handler:
+        def handler(ctx: CallContext) -> Any:
+            last: Optional[Exception] = None
+            for _ in range(max(1, attempts)):
+                try:
+                    return nxt(ctx)
+                except SubtreeLockedError:
+                    raise               # inner middleware's business
+                except StoreError as e:
+                    nn = ctx.namenode
+                    if nn is not None and not getattr(nn, "alive", True):
+                        ctx.retries += 1
+                        last = e
+                        if on_failover is not None:
+                            on_failover(ctx)
+                        continue
+                    raise
+            raise last  # type: ignore[misc]
+        return handler
+    return mw

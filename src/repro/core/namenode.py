@@ -23,23 +23,29 @@ from __future__ import annotations
 import random
 import threading
 import time
+import warnings
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .fs import (FSError, HopsFSOps, OpResult, SubtreeLockedError,
                  split_path)
 from .leader import LeaderElection
+from .middleware import CallContext, compose, failover, subtree_retry
+from .ops_registry import REGISTRY, WorkloadOp
 from .store import (MetadataStore, OpCost, READ_COMMITTED, SHARED,
                     StoreError, _hash_key)
 from .subtree import SubtreeOps
 from .tables import ROOT_ID
 from .transactions import Transaction
-from .workload import WorkloadOp
 
 # read-only op types the batched executor may group (no mutation => any
-# ordering within a run of them is equivalent to sequential execution)
-BATCHABLE_READ_OPS = ("read", "stat", "ls")
+# ordering within a run of them is equivalent to sequential execution).
+# Derived from the op registry — the registry's `batchable` flag is the
+# single source of truth; this name survives for importers as an
+# import-time snapshot (live code paths consult REGISTRY directly, so ops
+# registered later batch too).
+BATCHABLE_READ_OPS = REGISTRY.batchable_ops()
 
 _phash_usable = True
 
@@ -92,59 +98,52 @@ class Namenode:
         self.agg_cost = OpCost()     # committed-txn cost served by this NN
         self.batches_executed = 0
         self.batched_ops = 0
+        # prebuilt default retry chain — the batch hot path must not
+        # recompose middleware per op
+        self._safe_handler = compose([subtree_retry()],
+                                     lambda ctx: self.invoke(ctx.wop))
 
     def is_leader(self) -> bool:
         return self.election.leader() == self.nn_id
 
-    # unified dispatch used by the workload driver / DES / benchmarks;
-    # class-level so the pipeline hot path doesn't rebuild it per call
-    _DISPATCH: Dict[str, Tuple[str, str]] = {
-        "create": ("ops", "create"),
-        "read": ("ops", "get_block_locations"),
-        "ls": ("ops", "listing"),
-        "stat": ("ops", "stat"),
-        "mkdir": ("ops", "mkdir"),
-        "mkdirs": ("ops", "mkdirs"),
-        "delete_file": ("ops", "delete_file"),
-        "rename_file": ("ops", "rename_file"),
-        "add_block": ("ops", "add_block"),
-        "complete_block": ("ops", "complete_block"),
-        "append": ("ops", "append_file"),
-        "chmod_file": ("ops", "chmod_file"),
-        "chown_file": ("ops", "chown_file"),
-        "set_replication": ("ops", "set_replication"),
-        "content_summary": ("ops", "content_summary"),
-        "set_quota": ("ops", "set_quota"),
-        "delete_subtree": ("subtree", "delete_subtree"),
-        "rename_subtree": ("subtree", "rename_subtree"),
-        "chmod_subtree": ("subtree", "chmod_subtree"),
-        "chown_subtree": ("subtree", "chown_subtree"),
-        "block_report": ("ops", "process_block_report"),
-    }
-
-    def execute(self, op: str, *args, **kw) -> OpResult:
+    # -- registry-dispatched execution ---------------------------------
+    def perform(self, op: str, *args, **kw) -> OpResult:
+        """Execute one op by registry name with explicit arguments — the
+        canonical positional entry point (DFSClient and Client use it)."""
         if not self.alive:
             raise StoreError(f"namenode {self.nn_id} is down")
-        holder, meth = self._DISPATCH[op]
-        fn: Callable[..., OpResult] = getattr(getattr(self, holder), meth)
-        res = fn(*args, **kw)
+        res = REGISTRY[op].resolve(self)(*args, **kw)
         self.ops_served += 1
         self.agg_cost.merge(res.cost)
         return res
 
+    def invoke(self, wop: WorkloadOp) -> OpResult:
+        """Execute one :class:`WorkloadOp` record: the record's own
+        ``args`` overlaid on the :class:`~.ops_registry.OpSpec` defaults,
+        so workload-supplied arguments (perm, owner, repl, ...) flow
+        end-to-end instead of being hardcoded here."""
+        if not self.alive:
+            raise StoreError(f"namenode {self.nn_id} is down")
+        spec = REGISTRY[wop.op]
+        paths, kw = spec.call_args(wop)
+        res = spec.resolve(self)(*paths, **kw)
+        self.ops_served += 1
+        self.agg_cost.merge(res.cost)
+        return res
+
+    # -- deprecated string-dispatch shims ------------------------------
+    def execute(self, op: str, *args, **kw) -> OpResult:
+        """Deprecated: use :meth:`perform` (or the ``DFSClient`` facade)."""
+        warnings.warn("Namenode.execute(op, ...) is deprecated; use "
+                      "Namenode.perform or the DFSClient facade",
+                      DeprecationWarning, stacklevel=2)
+        return self.perform(op, *args, **kw)
+
     def execute_wop(self, wop: WorkloadOp) -> OpResult:
-        """Execute a generated :class:`WorkloadOp`, supplying deterministic
-        default arguments for the ops whose records carry none."""
-        op = wop.op
-        if op in ("rename_file", "rename_subtree"):
-            return self.execute(op, wop.path, wop.path2 or wop.path + ".mv")
-        if op in ("chmod_file", "chmod_subtree"):
-            return self.execute(op, wop.path, 0o640)
-        if op in ("chown_file", "chown_subtree"):
-            return self.execute(op, wop.path, "wluser")
-        if op == "set_replication":
-            return self.execute(op, wop.path, 2)
-        return self.execute(op, wop.path)
+        """Deprecated: use :meth:`invoke`."""
+        warnings.warn("Namenode.execute_wop(wop) is deprecated; use "
+                      "Namenode.invoke", DeprecationWarning, stacklevel=2)
+        return self.invoke(wop)
 
     # ------------------------------------------------------------------
     # batched execution (pipeline hot path)
@@ -152,17 +151,20 @@ class Namenode:
     def _safe_exec(self, wop: WorkloadOp, *, retries: int = 8,
                    backoff: float = 0.002) -> OpOutcome:
         """Execute one op, mapping FS errors to outcomes. Ops that hit a
-        live subtree lock voluntarily aborted (§6.3) — retry them with
-        backoff exactly as the HopsFS client does, instead of failing."""
-        err = "SubtreeLockedError"
-        for attempt in range(retries):
-            try:
-                return OpOutcome(self.execute_wop(wop))
-            except SubtreeLockedError:
-                time.sleep(backoff * (attempt + 1))
-            except StoreError as e:
-                return OpOutcome(None, type(e).__name__)
-        return OpOutcome(None, err)
+        live subtree lock voluntarily aborted (§6.3) — retried with backoff
+        by the shared ``subtree_retry`` middleware, exactly as the HopsFS
+        client does, instead of failing."""
+        if (retries, backoff) == (8, 0.002):
+            handler = self._safe_handler      # hot path: prebuilt chain
+        else:
+            handler = compose(
+                [subtree_retry(retries=retries, backoff=backoff)],
+                lambda ctx: self.invoke(ctx.wop))
+        try:
+            return OpOutcome(handler(CallContext(op=wop.op, wop=wop,
+                                                 namenode=self)))
+        except StoreError as e:      # includes surfaced SubtreeLockedError
+            return OpOutcome(None, type(e).__name__)
 
     def execute_batch(self, wops: Sequence[WorkloadOp]) -> List[OpOutcome]:
         """Execute a pulled batch. Maximal runs of consecutive same-type
@@ -178,7 +180,8 @@ class Namenode:
         while i < len(wops):
             op = wops[i].op
             j = i + 1
-            if op in BATCHABLE_READ_OPS:
+            spec = REGISTRY.get(op)
+            if spec is not None and spec.batchable:   # live registry check
                 while j < len(wops) and wops[j].op == op:
                     j += 1
                 if j - i > 1:
@@ -230,6 +233,7 @@ class Namenode:
         per-op file scans then run inside the same transaction. Stale hints
         are invalidated and the op re-runs sequentially (§5.1.1)."""
         fsops = self.ops
+        spec = REGISTRY[op]
         fallback: List[int] = []
         try:
             txn = Transaction(fsops.store,
@@ -257,7 +261,7 @@ class Namenode:
                     target = None
                     if ok:
                         target = b.read("inode", (parent, comps[-1]), SHARED)
-                        if target is not None and op in ("read", "stat"):
+                        if target is not None and spec.lease_read:
                             # dependent lease read, same exchange (§5.1)
                             b.read("lease",
                                    (target.get("client") or "client",),
@@ -278,7 +282,7 @@ class Namenode:
                     continue
                 before = txn.cost.copy()
                 try:
-                    values[idx] = self._complete_read_op(txn, op, target)
+                    values[idx] = spec.batch_payload(fsops, txn, target)
                     for row in ancestors:
                         fsops._check_subtree_lock(row, txn)
                     fsops._check_subtree_lock(target, txn)
@@ -328,16 +332,6 @@ class Namenode:
         for idx in fallback:
             results[idx] = self._safe_exec(wops[idx])
 
-    def _complete_read_op(self, txn: Transaction, op: str,
-                          target: Dict[str, Any]) -> Any:
-        """The per-op payload phase — the SAME fs.py helpers the sequential
-        ops use, so batched and sequential execution cannot diverge."""
-        if op == "stat":
-            return self.ops.stat_payload(target)
-        if op == "ls":
-            return self.ops.listing_payload(txn, target)
-        return self.ops.read_payload(txn, target)   # read
-
 
 class NamenodeCluster:
     """A fleet of stateless namenodes over one store, plus the election."""
@@ -374,7 +368,9 @@ class NamenodeCluster:
 
 class Client:
     """HopsFS client with namenode selection policies (§3) and transparent
-    retry on namenode failure (§7.6.1) or subtree-lock conflicts (§6.3)."""
+    retry on namenode failure (§7.6.1) or subtree-lock conflicts (§6.3) —
+    both implemented by the shared :mod:`~repro.core.middleware` stack the
+    ``DFSClient`` facade uses."""
 
     def __init__(self, cluster: NamenodeCluster, policy: str = "sticky",
                  seed: int = 0):
@@ -385,6 +381,12 @@ class Client:
         self._rr = self.rng.randrange(1 << 16)
         self._sticky: Optional[int] = None
         self.retries = 0
+
+        def _on_failover(ctx: CallContext) -> None:
+            self._sticky = None
+
+        self._middleware = [failover(on_failover=_on_failover),
+                            subtree_retry(backoff=0.0)]
 
     def _pick(self) -> Namenode:
         alive = self.cluster.alive_namenodes()
@@ -403,22 +405,17 @@ class Client:
         return self.cluster.namenodes[self._sticky]
 
     def execute(self, op: str, *args, **kw) -> OpResult:
-        last: Optional[Exception] = None
-        for _ in range(8):
+        def terminal(ctx: CallContext) -> OpResult:
             nn = self._pick()
-            try:
-                return nn.execute(op, *args, **kw)
-            except SubtreeLockedError as e:      # voluntary abort: retry
-                last = e
-                self.retries += 1
-            except StoreError as e:
-                if not nn.alive:                  # failover: pick another NN
-                    self.retries += 1
-                    self._sticky = None
-                    last = e
-                    continue
-                raise
-        raise last  # type: ignore[misc]
+            ctx.namenode = nn
+            ctx.attempts += 1
+            return nn.perform(op, *args, **kw)
+
+        ctx = CallContext(op=op)
+        try:
+            return compose(self._middleware, terminal)(ctx)
+        finally:
+            self.retries += ctx.retries
 
 
 # ---------------------------------------------------------------------------

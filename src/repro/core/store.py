@@ -24,7 +24,7 @@ from __future__ import annotations
 import threading
 import zlib
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .tables import ALL_TABLES, TableSchema, pk_of
 
@@ -210,6 +210,13 @@ class Table:
         self.idx: Dict[str, Dict[Any, Set[Tuple[Any, ...]]]] = {
             c: {} for c in schema.indexes}
         self.n_rows = 0
+        # pk -> partition, maintained only for tables whose partition key
+        # is NOT part of the PK (block/replica/...): NDB resolves such PKs
+        # through its distribution hash; here an O(1) map replaces the
+        # all-partition search on get/delete and detects partition-key
+        # updates on put
+        self._pk_loc: Optional[Dict[Tuple[Any, ...], int]] = (
+            None if schema.partition_key in schema.pk else {})
 
     # -- placement -----------------------------------------------------
     def partition_of(self, partition_key_value: Any) -> int:
@@ -218,17 +225,12 @@ class Table:
     def partition_of_pk(self, pk: Tuple[Any, ...]) -> int:
         # partition key is always a PK column prefix or derivable from a row;
         # for PKs we locate via the partition-key column position if it is in
-        # the PK, else we must consult the row (file-related tables carry
-        # inode_id both in row and pk where applicable).
+        # the PK, else via the pk-location map.
         s = self.schema
         if s.partition_key in s.pk:
             return self.partition_of(pk[s.pk.index(s.partition_key)])
-        # fall back: search (only used for tables where pk doesn't embed the
-        # partition key; all such lookups in HopsFS supply the pkey via hint)
-        for p, part in enumerate(self.parts):
-            if pk in part:
-                return p
-        return self.partition_of(pk)
+        p = self._pk_loc.get(pk)  # type: ignore[union-attr]
+        return p if p is not None else self.partition_of(pk)
 
     # -- row ops (no locking here; engine layer handles locks/costs) ----
     def get(self, pk: Tuple[Any, ...], part_hint: Optional[int] = None
@@ -242,16 +244,30 @@ class Table:
         p = self.partition_of(row[self.schema.partition_key])
         part = self.parts[p]
         old = part.get(pk)
+        if old is not None:
+            self._unindex(old, pk)
+        elif self._pk_loc is not None:
+            # A partition-key UPDATE (e.g. concat re-owning block/replica
+            # rows to the target file's inode id) moves the row between
+            # shards — NDB performs an internal delete+insert.  Evict the
+            # copy on the old shard so the PK stays unique cluster-wide.
+            old_p = self._pk_loc.get(pk)
+            if old_p is not None and old_p != p:
+                old = self.parts[old_p].pop(pk, None)
+                if old is not None:
+                    self._unindex(old, pk)
         if old is None:
             self.n_rows += 1
-        else:
-            self._unindex(old, pk)
         part[pk] = row
+        if self._pk_loc is not None:
+            self._pk_loc[pk] = p
         self._index(row, pk)
 
     def delete(self, pk: Tuple[Any, ...]) -> bool:
         p = self.partition_of_pk(pk)
         row = self.parts[p].pop(pk, None)
+        if self._pk_loc is not None:
+            self._pk_loc.pop(pk, None)
         if row is None:
             return False
         self._unindex(row, pk)

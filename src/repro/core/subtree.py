@@ -30,11 +30,11 @@ from __future__ import annotations
 
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from .fs import (FSError, FileAlreadyExists, FileNotFound, HopsFSOps,
                  OpResult, SubtreeLockedError, split_path)
-from .store import EXCLUSIVE, READ_COMMITTED, SHARED, OpCost
+from .store import EXCLUSIVE, OpCost
 from .transactions import Transaction
 
 

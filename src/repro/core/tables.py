@@ -27,8 +27,8 @@ canonical index identifiers used by scans and by cost accounting.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Schema descriptors

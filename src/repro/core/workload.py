@@ -12,8 +12,10 @@ Reproduces the Spotify HDFS trace characteristics:
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
+
+from .ops_registry import REGISTRY, WorkloadOp, synthesize
 
 # (op, weight_pct, fraction_on_directories)
 TABLE1_MIX: List[Tuple[str, float, float]] = [
@@ -32,7 +34,9 @@ TABLE1_MIX: List[Tuple[str, float, float]] = [
     ("stat",            17.0,  0.233),
 ]
 
-READ_ONLY_OPS = {"read", "ls", "stat", "content_summary"}
+# derived from the op registry (single source of truth for op semantics);
+# the name survives for importers
+READ_ONLY_OPS = REGISTRY.read_only_ops()
 
 # Spotify operational trace mix (paper §7.2): the throughput-scaling
 # experiment replays the production trace rather than the steady-state
@@ -115,17 +119,15 @@ class SyntheticNamespace:
         return rng.choice(self.dirs)
 
 
-@dataclass
-class WorkloadOp:
-    op: str
-    path: str
-    path2: Optional[str] = None
-    on_dir: bool = False
-
-
 class SpotifyWorkload:
     """Stream of WorkloadOps distributed per an op mix (Table 1 by default;
-    pass ``mix=SPOTIFY_TRACE_MIX`` for the §7.2 trace-replay mix)."""
+    pass ``mix=SPOTIFY_TRACE_MIX`` for the §7.2 trace-replay mix).
+
+    Op synthesis is driven by the registry's ``MIX_BINDINGS`` (this class
+    only implements the sampling context protocol: ``rng``, ``live_file``,
+    ``live_dir``, ``retire``, ``next_create_path``), so records carry real
+    arguments — sampled perms, owners, replication factors — end-to-end
+    instead of the executor hardcoding defaults."""
 
     def __init__(self, ns: SyntheticNamespace, seed: int = 13,
                  mix: Sequence[Tuple[str, float, float]] = TABLE1_MIX):
@@ -158,68 +160,33 @@ class SpotifyWorkload:
                 return True
         return False
 
-    def _live_file(self) -> str:
+    # -- sampling context protocol (consumed by registry MIX_BINDINGS) --
+    def live_file(self) -> str:
         for _ in range(32):
             f = self.ns.sample_file(self.rng)
             if not self._is_dead(f):
                 return f
         return self.ns.sample_file(self.rng)
 
-    def _live_dir(self) -> str:
+    def live_dir(self) -> str:
         for _ in range(32):
             d = self.ns.sample_dir(self.rng)
             if not self._is_dead(d):
                 return d
         return self.ns.sample_dir(self.rng)
 
+    def retire(self, path: str, *, is_dir: bool) -> None:
+        """A destructive op consumed this target: drop it from sampling."""
+        (self._dead_dirs if is_dir else self._dead).add(path)
+
+    def next_create_path(self) -> str:
+        self._create_seq += 1
+        return f"{self.live_dir()}/w{self._create_seq:08d}"
+
     def next_op(self) -> WorkloadOp:
-        op = self.rng.choices(self._ops, weights=self._weights, k=1)[0]
-        on_dir = self.rng.random() < self._dir_frac[op]
-        if op in ("mkdirs",):
-            d = self._live_dir()
-            return WorkloadOp("mkdirs", f"{d}/new{self.rng.randrange(1 << 30):x}",
-                              on_dir=True)
-        if op == "create":
-            self._create_seq += 1
-            d = self._live_dir()
-            return WorkloadOp("create", f"{d}/w{self._create_seq:08d}")
-        if op == "add_block":
-            return WorkloadOp("add_block", self._live_file())
-        if op == "rename":
-            src = self._live_file()
-            self._dead.add(src)
-            return WorkloadOp("rename_file", src, src + ".mv", on_dir=on_dir)
-        if op == "delete":
-            if on_dir:
-                d = self._live_dir()
-                self._dead_dirs.add(d)
-                return WorkloadOp("delete_subtree", d, on_dir=True)
-            f = self._live_file()
-            self._dead.add(f)
-            return WorkloadOp("delete_file", f)
-        if op == "set_permissions":
-            p = self._live_dir() if on_dir else self._live_file()
-            return WorkloadOp("chmod_subtree" if on_dir else "chmod_file",
-                              p, on_dir=on_dir)
-        if op == "set_owner":
-            p = self._live_dir() if on_dir else self._live_file()
-            return WorkloadOp("chown_subtree" if on_dir else "chown_file",
-                              p, on_dir=on_dir)
-        if op == "set_replication":
-            return WorkloadOp("set_replication", self._live_file())
-        if op == "ls":
-            p = self._live_dir() if on_dir else self._live_file()
-            return WorkloadOp("ls", p, on_dir=on_dir)
-        if op == "stat":
-            p = self._live_dir() if on_dir else self._live_file()
-            return WorkloadOp("stat", p, on_dir=on_dir)
-        if op == "content_summary":
-            p = self._live_dir() if on_dir else self._live_file()
-            return WorkloadOp("content_summary", p, on_dir=on_dir)
-        if op == "append":
-            return WorkloadOp("append", self._live_file())
-        # default: read
-        return WorkloadOp("read", self._live_file())
+        mix_name = self.rng.choices(self._ops, weights=self._weights, k=1)[0]
+        on_dir = self.rng.random() < self._dir_frac[mix_name]
+        return synthesize(mix_name, self, on_dir)
 
     def make_trace(self, n_ops: int) -> List[WorkloadOp]:
         """Materialize ``n_ops`` ops up-front as a replayable trace."""

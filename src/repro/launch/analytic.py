@@ -20,7 +20,7 @@ Conventions (documented in EXPERIMENTS.md §Methodology):
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Dict
 
 from ..configs import SHAPES
 from ..models.config import ModelConfig

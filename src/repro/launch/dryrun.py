@@ -34,7 +34,7 @@ import re
 import time
 import traceback
 from pathlib import Path
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,9 +42,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs import ARCHS, LONG_CONTEXT_OK, SHAPES, cells, get_config
-from ..models import abstract_params, init_cache_specs, param_specs
+from ..models import abstract_params, param_specs
 from ..models.config import ModelConfig
-from ..models.params import ParamSpec, axes_tree, count_params
+from ..models.params import axes_tree
 from ..parallel.sharding import MeshPolicy, logical_to_pspec
 from ..train.optimizer import adamw_abstract
 from ..train.step import decode_step_fn, prefill_step_fn, train_step_fn

@@ -9,9 +9,9 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import SHAPES
-from ..models import abstract_params, init_cache_specs, param_specs
+from ..models import init_cache_specs
 from ..models.config import ModelConfig
-from ..models.params import ParamSpec, axes_tree
+from ..models.params import axes_tree
 from ..parallel.sharding import MeshPolicy
 
 

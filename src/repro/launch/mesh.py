@@ -6,7 +6,6 @@ sets XLA_FLAGS for 512 placeholder devices).
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 

@@ -22,7 +22,6 @@ Variants (the §Perf iteration levers):
 """
 import argparse
 import json
-from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
 
 from ..configs import ARCHS, SHAPES, get_config

@@ -14,19 +14,15 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCHS, get_config, get_smoke_config
 from ..data import DataPipeline, synthetic_batch
 from ..metaplane import MetadataPlane
 from ..models import init_params, param_specs
-from ..models.params import axes_tree
-from ..parallel.sharding import MeshPolicy, logical_to_pspec
+from ..parallel.sharding import MeshPolicy
 from ..ckpt import CheckpointManager
 from ..runtime import FleetRuntime
 from ..train.optimizer import OptConfig, adamw_init

@@ -21,9 +21,8 @@ commit latency flat (benchmarks/bench_ckpt_metadata.py measures this).
 """
 from __future__ import annotations
 
-import json
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 from ..core import (Client, FileNotFound, MetadataStore, NamenodeCluster,
                     format_fs)

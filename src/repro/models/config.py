@@ -1,7 +1,7 @@
 """Model configuration covering all ten assigned architecture families."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 

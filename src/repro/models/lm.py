@@ -20,7 +20,6 @@ Interface (all pure functions):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -30,9 +29,9 @@ from jax.sharding import Mesh
 
 from ..parallel.sharding import MeshPolicy, shard_constraint
 from .config import ModelConfig
-from .layers import (apply_norm, attention_block, attn_specs, causal_mask,
-                     embed, embed_specs, lm_head, mlp_block, mlp_specs,
-                     norm_specs, _sdpa)
+from .layers import (apply_norm, attention_block, attn_specs, embed,
+                     embed_specs, lm_head, mlp_block, mlp_specs, norm_specs,
+                     _sdpa)
 from .mamba2 import mamba2_block, mamba2_specs
 from .moe import moe_apply, moe_specs
 from .params import ParamSpec

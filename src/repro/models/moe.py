@@ -23,7 +23,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..parallel.sharding import MeshPolicy, logical_to_pspec, shard_constraint
+from ..parallel.sharding import MeshPolicy, logical_to_pspec
 from .config import ModelConfig
 from .params import ParamSpec
 

@@ -13,7 +13,7 @@ mesh); this module is exercised by tests/test_pipeline.py and available as
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

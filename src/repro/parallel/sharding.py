@@ -16,7 +16,7 @@ whole system (this is what the §Perf hillclimb iterates on).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax

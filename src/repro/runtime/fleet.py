@@ -15,8 +15,8 @@ deterministically; launch/train.py wires it to real pjit steps.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
 
 from ..core.leader import LeaderElection
 from ..metaplane import MetadataPlane

@@ -9,17 +9,16 @@ lowering to the production mesh unchanged.
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models import forward, init_cache_specs, param_specs
+from ..models import forward, init_cache_specs
 from ..models.config import ModelConfig
-from ..models.params import ParamSpec, init_params
+from ..models.params import ParamSpec
 from ..parallel.sharding import MeshPolicy
 
 

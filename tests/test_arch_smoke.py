@@ -7,9 +7,8 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config, get_smoke_config
-from repro.models import (forward, init_cache_specs, init_params, loss_fn,
-                          param_specs)
-from repro.models.params import ParamSpec, count_params
+from repro.models import forward, init_cache_specs, init_params, param_specs
+from repro.models.params import ParamSpec
 from repro.parallel.sharding import MeshPolicy
 from repro.train.optimizer import OptConfig, adamw_init
 from repro.train.step import train_step_fn

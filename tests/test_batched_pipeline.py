@@ -12,8 +12,6 @@ Plus: the vectorized phash partition grouping agrees with the store's
 partitioner, batching actually saves round trips, the batched DES scales
 with namenode count, and the trace generator matches the §7.2 mix.
 """
-import numpy as np
-import pytest
 
 from repro.core import (MetadataStore, NamenodeCluster, OpCost,
                         RequestPipeline, format_fs, materialize_namespace,

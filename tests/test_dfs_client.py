@@ -1,0 +1,311 @@
+"""The HDFS-style `DFSClient` facade + composable middleware.
+
+Covers the error taxonomy end to end (FileNotFound, FileAlreadyExists,
+SubtreeLockedError retried-then-surfaced, NodeGroupDown, dead-namenode
+failover), typed results, deferred batching through `execute_batch`, and
+`run_trace` state equivalence with sequential execution.
+"""
+import pytest
+
+from repro.core import (DFSClient, FileAlreadyExists, FileNotFound,
+                        FileStatus, MetadataStore, NamenodeCluster,
+                        NodeGroupDown, StoreError, SubtreeLockedError,
+                        WorkloadOp, format_fs, materialize_namespace,
+                        namespace_snapshot, subtree_retry)
+from repro.core.workload import (NamespaceSpec, SyntheticNamespace,
+                                 make_spotify_trace)
+
+
+def _cluster(n_nn=2, n_datanodes=4):
+    store = MetadataStore(n_datanodes=n_datanodes)
+    format_fs(store)
+    return store, NamenodeCluster(store, n_nn)
+
+
+def _seed_file(dfs, path="/data/f", n_blocks=2, block_size=100):
+    dfs.mkdirs(path.rsplit("/", 1)[0])
+    dfs.create(path)
+    for _ in range(n_blocks):
+        bid = dfs.add_block(path)
+        dfs.complete_block(path, bid, size=block_size)
+
+
+# ---------------------------------------------------------------------------
+# typed results
+# ---------------------------------------------------------------------------
+
+def test_typed_results_roundtrip():
+    _, cluster = _cluster()
+    dfs = DFSClient(cluster)
+    _seed_file(dfs)
+    st = dfs.stat("/data/f")
+    assert isinstance(st, FileStatus)
+    assert (st.is_dir, st.size, st.path) == (False, 200, "/data/f")
+    blocks = dfs.open("/data/f")
+    assert [b.size for b in blocks] == [100, 100]
+    assert all(len(b.datanodes) >= 1 for b in blocks)
+    assert dfs.ls("/data") == ("f",)
+    cs = dfs.content_summary("/data")
+    assert cs.children == 1
+    assert dfs.exists("/data/f") and not dfs.exists("/data/nope")
+
+
+def test_facade_rename_delete_route_by_inode_type():
+    _, cluster = _cluster()
+    dfs = DFSClient(cluster)
+    _seed_file(dfs, "/a/b/f")
+    dfs.rename("/a/b/f", "/a/b/g")            # file -> rename_file
+    assert dfs.ls("/a/b") == ("g",)
+    dfs.rename("/a/b", "/a/c")                # dir -> subtree protocol
+    assert dfs.ls("/a/c") == ("g",)
+    with pytest.raises(Exception):
+        dfs.delete("/a/c")                    # dir without recursive
+    d = dfs.delete("/a/c", recursive=True)
+    assert d.deleted == 2 and d.recursive
+    assert dfs.ls("/a") == ()                 # /a survives, now empty
+    _seed_file(dfs, "/a/f2")
+    d = dfs.delete("/a/f2")                   # file -> delete_file
+    assert d.deleted == 1 and not d.recursive
+
+
+def test_facade_new_ops_truncate_concat():
+    _, cluster = _cluster()
+    dfs = DFSClient(cluster)
+    _seed_file(dfs, "/w/a")
+    _seed_file(dfs, "/w/b")
+    c = dfs.concat("/w/a", ["/w/b"])
+    assert (c.blocks_moved, c.size) == (2, 400)
+    assert not dfs.exists("/w/b")
+    t = dfs.truncate("/w/a", 250)
+    assert (t.size, t.removed_blocks) == (250, 1)
+    assert dfs.stat("/w/a").size == 250
+
+
+# ---------------------------------------------------------------------------
+# error taxonomy through the facade
+# ---------------------------------------------------------------------------
+
+def test_file_not_found_and_already_exists():
+    _, cluster = _cluster()
+    dfs = DFSClient(cluster)
+    dfs.mkdirs("/e")
+    with pytest.raises(FileNotFound):
+        dfs.stat("/e/missing")
+    with pytest.raises(FileNotFound):
+        dfs.open("/e/missing")
+    dfs.create("/e/f")
+    with pytest.raises(FileAlreadyExists):
+        dfs.create("/e/f")
+    with pytest.raises(FileAlreadyExists):
+        dfs.mkdir("/e")
+
+
+def test_subtree_locked_retried_then_surfaced():
+    store, cluster = _cluster(2)
+    dfs = DFSClient(cluster, subtree_retries=3, subtree_backoff=0.0)
+    dfs._selector._sticky = 0                 # pin to NN0
+    _seed_file(dfs, "/locked/f")
+    # NN1 (alive) holds the application-level subtree lock on /locked
+    t = store.table("inode")
+    row = dict(t.get((1, "locked")))
+    row["subtree_lock"] = 1
+    t.put(row)
+    with pytest.raises(SubtreeLockedError):
+        dfs.stat("/locked/f")
+    assert dfs.retries >= 3                   # retried, then surfaced
+    # lock released -> op succeeds again
+    row = dict(t.get((1, "locked")))
+    row["subtree_lock"] = None
+    t.put(row)
+    assert dfs.stat("/locked/f").size == 200
+
+
+def test_subtree_lock_of_dead_namenode_is_reclaimed():
+    store, cluster = _cluster(2)
+    dfs = DFSClient(cluster)
+    dfs._selector._sticky = 0
+    _seed_file(dfs, "/locked/f")
+    t = store.table("inode")
+    row = dict(t.get((1, "locked")))
+    row["subtree_lock"] = 1
+    t.put(row)
+    cluster.kill(1)
+    for _ in range(6):                        # liveness decays via ticks
+        cluster.tick()
+    assert dfs.stat("/locked/f").size == 200  # reclaim §6.2, no error
+
+
+def test_node_group_down_surfaces():
+    store, cluster = _cluster(2)
+    dfs = DFSClient(cluster)
+    _seed_file(dfs)
+    for dn in range(store.n_datanodes):
+        store.fail_datanode(dn)
+    with pytest.raises(NodeGroupDown):
+        dfs.stat("/data/f")
+    store.recover_datanode(0)
+    store.recover_datanode(2)
+
+
+def test_dead_namenode_failover_mid_op():
+    _, cluster = _cluster(3)
+    dfs = DFSClient(cluster)
+    _seed_file(dfs)
+    nn0 = cluster.namenodes[0]
+    dfs._selector._sticky = 0
+
+    real_stat = nn0.ops.stat
+
+    def dying_stat(path):
+        nn0.ops.stat = real_stat              # die once
+        nn0.alive = False
+        raise StoreError("namenode 0 lost mid-op")
+
+    nn0.ops.stat = dying_stat
+    st = dfs.stat("/data/f")                  # transparently fails over
+    assert st.size == 200
+    assert dfs.retries >= 1
+    assert dfs._selector._sticky != 0         # sticky re-selected
+
+
+def test_no_alive_namenodes_raises():
+    _, cluster = _cluster(2)
+    dfs = DFSClient(cluster)
+    dfs.mkdirs("/z")
+    cluster.kill(0)
+    cluster.kill(1)
+    with pytest.raises(StoreError):
+        dfs.stat("/z")
+
+
+def test_custom_middleware_stack():
+    calls = []
+
+    def tracing(nxt):
+        def handler(ctx):
+            calls.append(ctx.op)
+            return nxt(ctx)
+        return handler
+
+    _, cluster = _cluster()
+    dfs = DFSClient(cluster,
+                    middleware=[tracing, subtree_retry(retries=2,
+                                                       backoff=0.0)])
+    dfs.mkdirs("/m")
+    assert calls == ["mkdirs"]
+
+
+# ---------------------------------------------------------------------------
+# batching
+# ---------------------------------------------------------------------------
+
+def test_batch_context_returns_typed_results_and_errors():
+    _, cluster = _cluster()
+    dfs = DFSClient(cluster)
+    _seed_file(dfs)
+    with dfs.batch() as b:
+        h_stat = b.stat("/data/f")
+        h_ls = b.ls("/data")
+        h_open = b.open("/data/f")
+        h_missing = b.stat("/data/nope")
+        h_mut = b.submit("chmod_file", "/data/f", perm=0o600)
+    assert isinstance(h_stat.result(), FileStatus)
+    assert h_ls.result() == ("f",)
+    assert [bl.size for bl in h_open.result()] == [100, 100]
+    with pytest.raises(FileNotFound):
+        h_missing.result()
+    h_mut.result()                            # mutation applied in order
+    assert dfs.stat("/data/f").perm == 0o600
+
+
+def test_batch_unflushed_handle_raises():
+    _, cluster = _cluster()
+    dfs = DFSClient(cluster)
+    dfs.mkdirs("/b")
+    b = dfs.batch()
+    h = b.ls("/b")
+    with pytest.raises(RuntimeError):
+        h.result()
+    b.flush()
+    assert h.result() == ()
+
+
+def test_batch_reusable_after_explicit_flush():
+    _, cluster = _cluster()
+    dfs = DFSClient(cluster)
+    _seed_file(dfs, "/r/a")
+    _seed_file(dfs, "/r/b")
+    b = dfs.batch()
+    h1 = b.stat("/r/a")
+    b.flush()
+    h2 = b.stat("/r/b")
+    b.flush()
+    assert h1.result().path == "/r/a" and h1.result().size == 200
+    assert h2.result().path == "/r/b" and h2.result().size == 200
+
+
+def test_batch_fails_over_on_mid_batch_death():
+    """A namenode dying WHILE executing the batch records per-op
+    StoreError outcomes; flush must retry those on a survivor."""
+    _, cluster = _cluster(2)
+    dfs = DFSClient(cluster)
+    _seed_file(dfs)
+    dfs._selector._sticky = 0
+    nn0 = cluster.namenodes[0]
+
+    real_stat = nn0.ops.stat
+
+    def dying_stat(path):
+        nn0.ops.stat = real_stat
+        nn0.alive = False
+        raise StoreError("lost mid-batch")
+
+    nn0.ops.stat = dying_stat
+    with dfs.batch() as b:
+        h = b.stat("/data/f")
+    assert h.result().size == 200
+    assert dfs.retries >= 1
+
+
+def test_batch_fails_over_when_namenode_dies():
+    _, cluster = _cluster(2)
+    dfs = DFSClient(cluster)
+    _seed_file(dfs)
+    dfs._selector._sticky = 0
+    nn0 = cluster.namenodes[0]
+
+    real = nn0.execute_batch
+
+    def dying_batch(wops):
+        nn0.execute_batch = real
+        nn0.alive = False
+        raise StoreError("died holding the batch")
+
+    nn0.execute_batch = dying_batch
+    with dfs.batch() as b:
+        h = b.stat("/data/f")
+    assert h.result().size == 200
+
+
+# ---------------------------------------------------------------------------
+# run_trace: the Fig 7 methodology through the facade
+# ---------------------------------------------------------------------------
+
+def test_run_trace_matches_sequential_namespace():
+    ns_ref = SyntheticNamespace(NamespaceSpec(), n_dirs=12, files_per_dir=3)
+    trace = make_spotify_trace(ns_ref, 250, seed=7)
+
+    def run(batch_size, n_nn):
+        store = MetadataStore(n_datanodes=4)
+        format_fs(store)
+        cluster = NamenodeCluster(store, n_nn)
+        ns = SyntheticNamespace(NamespaceSpec(), n_dirs=12, files_per_dir=3)
+        materialize_namespace(cluster.namenodes[0], ns)
+        stats = DFSClient(cluster).run_trace(trace, batch_size=batch_size)
+        return store, stats
+
+    store_seq, seq = run(1, 1)
+    store_bat, bat = run(8, 2)
+    assert namespace_snapshot(store_seq) == namespace_snapshot(store_bat)
+    assert bat.ok + bat.failed == len(trace)
+    assert bat.total_cost.round_trips <= seq.total_cost.round_trips

@@ -1,0 +1,292 @@
+"""The typed operation protocol (op registry) — PR 2's tentpole contract.
+
+  * one declaration per op: every spec resolves to a real handler on a
+    live namenode, and the old parallel string tables are gone (derived
+    views only);
+  * workload records carry REAL arguments end-to-end (perm/owner/repl are
+    no longer hardcoded by the executor; spec defaults fill the gaps);
+  * extensibility: new ops (`truncate`, `concat`, and a test-registered
+    one) execute through every layer with zero dispatch edits;
+  * the deprecated `execute`/`execute_wop` shims still work, warning.
+"""
+import pytest
+
+from repro.core import (BATCHABLE_READ_OPS, MetadataStore, NamenodeCluster,
+                        OpResult, REGISTRY, RequestPipeline, WorkloadOp,
+                        format_fs, materialize_namespace, register_op)
+from repro.core.fs import HopsFSOps
+from repro.core.namenode import Namenode
+from repro.core.ops_registry import REQUIRED, ArgSpec, OpSpec
+from repro.core.workload import (READ_ONLY_OPS, NamespaceSpec,
+                                 SpotifyWorkload, SyntheticNamespace,
+                                 make_spotify_trace)
+
+
+def _cluster(n_nn=1):
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    return store, NamenodeCluster(store, n_nn)
+
+
+# ---------------------------------------------------------------------------
+# single source of truth
+# ---------------------------------------------------------------------------
+
+def test_every_spec_resolves_to_real_handler():
+    _, cluster = _cluster()
+    nn = cluster.namenodes[0]
+    for spec in REGISTRY:
+        fn = spec.resolve(nn)
+        assert callable(fn), spec.name
+        assert spec.holder in ("ops", "subtree")
+
+
+def test_old_string_tables_are_gone_or_derived():
+    assert not hasattr(Namenode, "_DISPATCH")
+    # the surviving names are registry-derived views
+    assert tuple(BATCHABLE_READ_OPS) == REGISTRY.batchable_ops()
+    assert READ_ONLY_OPS == REGISTRY.read_only_ops()
+    # semantics: batchable ops must be read-only; subtree flags line up
+    assert set(REGISTRY.batchable_ops()) <= REGISTRY.read_only_ops()
+    assert REGISTRY.subtree_ops() == {"delete_subtree", "rename_subtree",
+                                      "chmod_subtree", "chown_subtree"}
+    with pytest.raises(AssertionError):
+        OpSpec(name="bad", holder="ops", method="x", batchable=True)
+    with pytest.raises(AssertionError):   # batchable needs a payload phase
+        OpSpec(name="bad2", holder="ops", method="x", read_only=True,
+               batchable=True)
+    # every batchable spec declares its grouped payload phase
+    for name in REGISTRY.batchable_ops():
+        assert REGISTRY[name].batch_payload is not None
+
+
+def test_mix_synthesis_produces_registered_ops_with_args():
+    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=20)
+    wl = SpotifyWorkload(ns, seed=3)
+    trace = wl.make_trace(3000)
+    assert all(w.op in REGISTRY for w in trace)
+    perms = [w.args["perm"] for w in trace
+             if w.op in ("chmod_file", "chmod_subtree")]
+    owners = [w.args["owner"] for w in trace
+              if w.op in ("chown_file", "chown_subtree")]
+    repls = [w.args["repl"] for w in trace if w.op == "set_replication"]
+    assert perms and owners and repls        # records carry real arguments
+    assert len(set(owners)) > 1              # ... actually sampled
+    assert all(r in (1, 2, 3) for r in repls)
+
+
+def test_spec_defaults_and_required_args():
+    spec = REGISTRY["chmod_file"]
+    paths, kw = spec.call_args(WorkloadOp("chmod_file", "/f"))
+    assert paths == ["/f"] and kw == {"perm": 0o640}
+    paths, kw = spec.call_args(WorkloadOp("chmod_file", "/f",
+                                          args={"perm": 0o700}))
+    assert kw == {"perm": 0o700}
+    # rename's destination defaults off the source path
+    paths, _ = REGISTRY["rename_file"].call_args(WorkloadOp("rename_file",
+                                                            "/a"))
+    assert paths == ["/a", "/a.mv"]
+    with pytest.raises(TypeError):
+        REGISTRY["concat"].call_args(WorkloadOp("concat", "/t"))
+    assert ArgSpec("x", 7).value_for(WorkloadOp("op", "/p")) == 7
+    assert ArgSpec("x", REQUIRED).value_for(
+        WorkloadOp("op", "/p", args={"x": 1})) == 1
+
+
+# ---------------------------------------------------------------------------
+# workload arguments flow end-to-end
+# ---------------------------------------------------------------------------
+
+def test_workload_args_applied_not_hardcoded():
+    _, cluster = _cluster()
+    nn = cluster.namenodes[0]
+    nn.perform("mkdirs", "/w")
+    nn.perform("create", "/w/f")
+    nn.invoke(WorkloadOp("chmod_file", "/w/f", args={"perm": 0o711}))
+    nn.invoke(WorkloadOp("chown_file", "/w/f", args={"owner": "eve"}))
+    nn.invoke(WorkloadOp("set_replication", "/w/f", args={"repl": 1}))
+    st = nn.perform("stat", "/w/f").value
+    assert (st["perm"], st["owner"], st["repl"]) == (0o711, "eve", 1)
+    # no args => the OpSpec defaults (the old executor-hardcoded values)
+    nn.invoke(WorkloadOp("chmod_file", "/w/f"))
+    assert nn.perform("stat", "/w/f").value["perm"] == 0o640
+
+
+def test_generated_trace_args_survive_the_pipeline():
+    store, cluster = _cluster(2)
+    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=12, files_per_dir=3)
+    materialize_namespace(cluster.namenodes[0], ns)
+    trace = make_spotify_trace(ns, 400, seed=23)
+    chmods = [w for w in trace if w.op == "chmod_file"]
+    assert chmods, "trace should contain chmod_file ops"
+    RequestPipeline(cluster, batch_size=8).run(trace)
+    # the LAST chmod touching each path must have stamped its sampled perm
+    last_perm = {w.path: w.args["perm"] for w in chmods}
+    later_mutated = {w.path for w in trace
+                     if w.op in ("delete_file", "rename_file",
+                                 "delete_subtree", "concat")}
+    checked = 0
+    for path, perm in last_perm.items():
+        if path in later_mutated:
+            continue
+        try:
+            st = cluster.namenodes[0].perform("stat", path).value
+        except Exception:
+            continue                       # killed by an unrelated subtree op
+        assert st["perm"] == perm, path
+        checked += 1
+    assert checked > 0
+
+
+# ---------------------------------------------------------------------------
+# extensibility: new ops with zero dispatch edits
+# ---------------------------------------------------------------------------
+
+def test_truncate_and_concat_registered_without_dispatch_edits():
+    _, cluster = _cluster()
+    nn = cluster.namenodes[0]
+    nn.perform("mkdirs", "/d")
+    for name in ("a", "b"):
+        nn.perform("create", f"/d/{name}")
+        bid = nn.perform("add_block", f"/d/{name}").value
+        nn.perform("complete_block", f"/d/{name}", bid, size=100)
+    r = nn.invoke(WorkloadOp("concat", "/d/a", args={"srcs": ["/d/b"]}))
+    assert r.value == {"blocks_moved": 1, "size": 200}
+    assert nn.perform("ls", "/d").value == ["a"]
+    blocks = nn.perform("read", "/d/a").value
+    assert [b["size"] for b in blocks] == [100, 100]
+    r = nn.invoke(WorkloadOp("truncate", "/d/a", args={"new_size": 150}))
+    assert r.value == {"size": 150, "removed_blocks": 0}
+    r = nn.invoke(WorkloadOp("truncate", "/d/a"))       # default: to zero
+    assert r.value["size"] == 0
+    assert nn.perform("read", "/d/a").value == []
+
+
+def test_concat_moves_rows_across_partitions_consistently():
+    """concat is the first op that updates a partition key (block/replica
+    inode_id) without changing the PK — the store must relocate the row,
+    not duplicate it."""
+    store, cluster = _cluster()
+    nn = cluster.namenodes[0]
+    nn.perform("mkdirs", "/d")
+    for name in ("t", "s1", "s2"):
+        nn.perform("create", f"/d/{name}")
+        for _ in range(2):
+            bid = nn.perform("add_block", f"/d/{name}").value
+            nn.perform("complete_block", f"/d/{name}", bid, size=10)
+    n_before = store.table("block").n_rows
+    nn.invoke(WorkloadOp("concat", "/d/t", args={"srcs": ["/d/s1",
+                                                          "/d/s2"]}))
+    assert store.table("block").n_rows == n_before      # moved, not copied
+    blocks = nn.perform("read", "/d/t").value
+    assert len(blocks) == 6
+    assert nn.perform("stat", "/d/t").value["size"] == 60
+    # every block row findable (and unique) by PK across all partitions
+    t = store.table("block")
+    for b in blocks:
+        copies = sum(1 for part in t.parts if (b["block"],) in part)
+        assert copies == 1, b
+
+
+def test_runtime_registered_op_reaches_every_layer():
+    def touch(self, path: str) -> OpResult:
+        return self.chmod_file(path, 0o777)
+
+    HopsFSOps.touch_exec = touch
+    register_op("touch_exec", "ops", "touch_exec")
+    try:
+        store, cluster = _cluster(2)
+        nn = cluster.namenodes[0]
+        nn.perform("mkdirs", "/x")
+        nn.perform("create", "/x/f")
+        # positional layer
+        nn.perform("touch_exec", "/x/f")
+        # workload-record layer + batched pipeline layer
+        stats = RequestPipeline(cluster, batch_size=4).run(
+            [WorkloadOp("touch_exec", "/x/f")])
+        assert stats.ok == 1
+        assert nn.perform("stat", "/x/f").value["perm"] == 0o777
+    finally:
+        REGISTRY.unregister("touch_exec")
+        del HopsFSOps.touch_exec
+
+
+def test_runtime_registered_batchable_op_actually_batches():
+    """The batching layers consult the registry LIVE: a batchable op
+    registered after import groups through execute_batch like `stat`."""
+    from repro.core.ops_registry import _payload_stat
+
+    def stat_alias(self, path):
+        return self.stat(path)
+
+    HopsFSOps.stat_alias = stat_alias
+    register_op("stat_alias", "ops", "stat_alias", read_only=True,
+                batchable=True, batch_payload=_payload_stat,
+                lease_read=True)
+    try:
+        _, cluster = _cluster()
+        nn = cluster.namenodes[0]
+        nn.perform("mkdirs", "/ba")
+        for i in range(4):
+            nn.perform("create", f"/ba/f{i}")
+            nn.perform("stat", f"/ba/f{i}")      # warm the hint cache
+        wops = [WorkloadOp("stat_alias", f"/ba/f{i}") for i in range(4)]
+        outcomes = nn.execute_batch(wops)
+        assert all(o.ok for o in outcomes)
+        assert any(o.batched for o in outcomes)
+        # grouped payload == sequential payload
+        for i, o in enumerate(outcomes):
+            assert o.result.value == nn.perform("stat", f"/ba/f{i}").value
+    finally:
+        REGISTRY.unregister("stat_alias")
+        del HopsFSOps.stat_alias
+
+
+def test_concat_leaves_no_orphaned_file_related_rows():
+    """concat must re-own EVERY file-related row (inv/ruc/... included),
+    not just block+replica — a truncated source carries inv rows."""
+    store, cluster = _cluster()
+    nn = cluster.namenodes[0]
+    nn.perform("mkdirs", "/o")
+    for name in ("t", "s"):
+        nn.perform("create", f"/o/{name}")
+        for _ in range(2):
+            bid = nn.perform("add_block", f"/o/{name}").value
+            nn.perform("complete_block", f"/o/{name}", bid, size=10)
+    nn.perform("truncate", "/o/s", 10)       # drops a block -> inv rows
+    assert store.table("inv").n_rows > 0
+    sid = nn.perform("stat", "/o/s").value["id"]
+    nn.invoke(WorkloadOp("concat", "/o/t", args={"srcs": ["/o/s"]}))
+    for tname in ("block", "replica", "urb", "prb", "ruc", "cr", "er",
+                  "inv"):
+        for part in store.table(tname).parts:
+            for row in part.values():
+                assert row["inode_id"] != sid, (tname, row)
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError):
+        register_op("read", "ops", "get_block_locations")
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_execute_shims_warn_and_work():
+    _, cluster = _cluster()
+    nn = cluster.namenodes[0]
+    with pytest.deprecated_call():
+        nn.execute("mkdirs", "/s/t")
+    with pytest.deprecated_call():
+        res = nn.execute("ls", "/s")
+    assert res.value == ["t"]
+    with pytest.deprecated_call():
+        nn.execute_wop(WorkloadOp("create", "/s/t/f"))
+    # the shim applies registry defaults exactly like the old executor did
+    with pytest.deprecated_call():
+        nn.execute_wop(WorkloadOp("chmod_file", "/s/t/f"))
+    assert nn.perform("stat", "/s/t/f").value["perm"] == 0o640
+    with pytest.deprecated_call():
+        nn.execute_wop(WorkloadOp("rename_file", "/s/t/f"))
+    assert nn.perform("ls", "/s/t").value == ["f.mv"]

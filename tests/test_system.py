@@ -3,14 +3,12 @@ failover, elasticity, data pipeline, cluster DES, serving engine."""
 import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
 from repro.core import Client, MetadataStore, NamenodeCluster, format_fs
-from repro.core.cluster_sim import (DEFAULT_PARAMS, HDFSSim, HopsFSSim,
-                                    profile_ops)
+from repro.core.cluster_sim import HDFSSim, HopsFSSim, profile_ops
 from repro.core.workload import (NamespaceSpec, SpotifyWorkload,
                                  SyntheticNamespace)
 from repro.ckpt import CheckpointManager
