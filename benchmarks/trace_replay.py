@@ -43,16 +43,20 @@ DEFAULT_OUT = Path(__file__).resolve().parents[1] / "BENCH_throughput.json"
 
 def replay_des(trace, profiles, *, n_namenodes: int, n_ndb: int = 8,
                batch_size: int = 16, clients_per_nn: int = 200,
-               horizon: float = 0.3, seed: int = 1) -> Dict:
-    """Replay the trace at one namenode count on the batched-pipeline DES."""
+               horizon: float = 0.3, seed: int = 1,
+               planned: bool = False) -> Dict:
+    """Replay the trace at one namenode count on the batched-pipeline DES
+    (``planned=True`` mirrors the client-side batch planner: partition-
+    aligned, type-pure batch pulls instead of FIFO slices)."""
     sim = BatchedHopsFSSim(n_namenodes=n_namenodes, n_ndb=n_ndb,
                            profiles=profiles, batch_size=batch_size,
-                           seed=seed)
+                           seed=seed, planned=planned)
     sim.start_clients(clients_per_nn * n_namenodes, TraceReplay(trace))
     res = sim.run(horizon)
     return {
         "namenodes": n_namenodes,
         "clients": clients_per_nn * n_namenodes,
+        "planned": planned,
         "throughput_ops_s": round(res.throughput, 1),
         "latency_avg_ms": round(res.latency_avg() * 1e3, 3),
         "latency_p99_ms": round(res.latency_pct(99) * 1e3, 3),
@@ -66,40 +70,74 @@ def replay_des(trace, profiles, *, n_namenodes: int, n_ndb: int = 8,
 def functional_batching_report(trace, *, n_namenodes: int = 4,
                                batch_size: int = 16,
                                n_dirs: int = 20) -> Dict:
-    """Run the *functional* pipeline twice (sequential vs batched) on
-    identical stores and report measured round-trip savings + state
-    equality — ties the DES's collapse model to real transactions.
-    Driven through the typed `DFSClient` facade, the client-facing entry
-    point of the op registry."""
-    def run(bs: int):
+    """Run the *functional* pipeline three ways on identical stores —
+    sequential (batch=1), reactive (FIFO batches, opportunistic grouping),
+    and planned (client-side columnar batch planner: partition-aligned,
+    type-sorted batches with grouped reads AND writes) — and report
+    measured round-trip savings, batched fractions, local round-trip
+    share, and final-state equivalence. Ties the DES's collapse model to
+    real transactions; driven through the typed `DFSClient` facade."""
+    from repro.core import PlannedRequestPipeline
+
+    def build():
         store = MetadataStore(n_datanodes=4)
         format_fs(store)
         cluster = NamenodeCluster(store, n_namenodes)
         ns = SyntheticNamespace(NamespaceSpec(), n_dirs=n_dirs,
                                 files_per_dir=4)
         materialize_namespace(cluster.namenodes[0], ns)
-        stats = DFSClient(cluster).run_trace(trace, batch_size=bs)
-        return store, stats
+        return store, cluster
 
-    store_seq, seq = run(1)
-    store_bat, bat = run(batch_size)
-    # multi-NN dispatch differs between the two runs, so physical ids and
-    # per-NN mtime clocks differ; compare the logical namespace instead
-    # (the strict single-NN full-state equality lives in the test suite)
-    state_equal = (namespace_snapshot(store_seq)
-                   == namespace_snapshot(store_bat))
+    store_seq, cluster = build()
+    seq = DFSClient(cluster).run_trace(trace, batch_size=1)
+    store_rea, cluster = build()
+    rea = DFSClient(cluster).run_trace(trace, batch_size=batch_size)
+    store_pln, cluster = build()
+    planned_pipe = PlannedRequestPipeline(cluster, batch_size=batch_size)
+    pln = planned_pipe.run(trace)
+    plan = planned_pipe.plan_report
+    # multi-NN dispatch differs between runs, so physical ids and per-NN
+    # mtime clocks differ; compare the logical namespace instead (the
+    # strict single-NN full-state equality lives in the test suite)
+    snap_seq = namespace_snapshot(store_seq)
+    state_equal = (snap_seq == namespace_snapshot(store_rea)
+                   == namespace_snapshot(store_pln))
     rt_seq = seq.total_cost.round_trips
-    rt_bat = bat.total_cost.round_trips
+    rt_rea = rea.total_cost.round_trips
+    rt_pln = pln.total_cost.round_trips
+
+    def pct(saved, base):
+        return round(100 * (1 - saved / base), 2) if base else 0.0
+
     return {
         "batch_size": batch_size,
         "ops": len(seq.outcomes),
-        "ok": bat.ok,
-        "failed": bat.failed,
+        "ok": pln.ok,
+        "failed": pln.failed,
         "sequential_round_trips": rt_seq,
-        "batched_round_trips": rt_bat,
-        "round_trip_savings_pct": round(100 * (1 - rt_bat / rt_seq), 2)
-        if rt_seq else 0.0,
-        "batched_fraction": round(bat.batched_fraction, 3),
+        "batched_round_trips": rt_rea,       # back-compat: reactive mode
+        "reactive_round_trips": rt_rea,
+        "planned_round_trips": rt_pln,
+        "round_trip_savings_pct": pct(rt_rea, rt_seq),
+        "planned_savings_pct": pct(rt_pln, rt_seq),
+        "planned_vs_reactive_savings_pct": pct(rt_pln, rt_rea),
+        "batched_fraction": round(rea.batched_fraction, 3),
+        "planned_batched_fraction": round(pln.batched_fraction, 3),
+        "batched_read_fraction": round(pln.batched_read_fraction, 3),
+        "batched_write_fraction": round(pln.batched_write_fraction, 3),
+        "local_rt_fraction": {
+            "sequential": round(seq.local_rt_fraction, 3),
+            "reactive": round(rea.local_rt_fraction, 3),
+            "planned": round(pln.local_rt_fraction, 3),
+        },
+        "planner": {
+            "planned_ops": plan.planned_ops if plan else 0,
+            "pinned_ops": plan.pinned_ops if plan else 0,
+            "windows": plan.windows if plan else 0,
+            "kernel_launches": plan.kernel_launches if plan else 0,
+            "predicted_local_rt_share":
+                round(plan.predicted_local_share, 3) if plan else 0.0,
+        },
         "state_matches_sequential": state_equal,
     }
 
@@ -112,9 +150,16 @@ def run_replay(*, quick: bool = False, namenode_counts=(1, 4, 16),
     trace = make_spotify_trace(ns, trace_ops if not quick else 2000,
                                seed=seed)
     profiles = profile_ops()
-    points = [replay_des(trace, profiles, n_namenodes=n,
-                         batch_size=batch_size, horizon=horizon)
-              for n in namenode_counts]
+    points = []
+    for n in namenode_counts:
+        pt = replay_des(trace, profiles, n_namenodes=n,
+                        batch_size=batch_size, horizon=horizon)
+        planned_pt = replay_des(trace, profiles, n_namenodes=n,
+                                batch_size=batch_size, horizon=horizon,
+                                planned=True)
+        pt["planned_throughput_ops_s"] = planned_pt["throughput_ops_s"]
+        pt["planned_batched_ops"] = planned_pt["batched_ops"]
+        points.append(pt)
     # speedup vs the smallest namenode count actually measured (only
     # "vs 1 NN" when the sweep includes 1, e.g. the default 1,4,16)
     base_pt = min(points, key=lambda p: p["namenodes"])
@@ -162,6 +207,12 @@ def bench_trace_replay(quick: bool = False) -> List[Row]:
                  f"{f['round_trip_savings_pct']}% fewer DB round trips "
                  f"at batch={f['batch_size']} "
                  f"(state match: {f['state_matches_sequential']})"))
+    rows.append(("trace_replay.planner_savings", 0.0,
+                 f"planned {f['planned_vs_reactive_savings_pct']}% fewer "
+                 f"RTs vs reactive; batched "
+                 f"{f['planned_batched_fraction']} "
+                 f"(writes {f['batched_write_fraction']}), local RT "
+                 f"{f['local_rt_fraction']['planned']}"))
     return rows
 
 
@@ -186,8 +237,14 @@ def main() -> None:
               f"p99={pt['latency_p99_ms']:.1f} ms  "
               f"speedup={pt['speedup_vs_min_nn']}x")
     f = report["functional_batching"]
-    print(f"functional: {f['round_trip_savings_pct']}% round-trip savings, "
+    print(f"functional: {f['round_trip_savings_pct']}% round-trip savings "
+          f"(reactive), {f['planned_savings_pct']}% (planned; "
+          f"{f['planned_vs_reactive_savings_pct']}% vs reactive), "
           f"state_matches_sequential={f['state_matches_sequential']}")
+    lf = f["local_rt_fraction"]
+    print(f"local RT share: seq {lf['sequential']} -> reactive "
+          f"{lf['reactive']} -> planned {lf['planned']}; batched writes "
+          f"{f['batched_write_fraction']}")
     print(f"wrote {args.out}")
 
 

@@ -11,10 +11,14 @@ Public surface:
   SubtreeOps           — subtree operations protocol (§6)
   NamenodeCluster / Client — stateless namenodes + selection policies
   RequestPipeline      — batched multi-namenode request pipeline (§7.2)
+  BatchPlanner / PlannedRequestPipeline — client-side columnar batch
+                         planner: partition-aligned, type-sorted dealing
   LeaderElection       — DB-as-shared-memory leader election (§3)
   HDFSNamenode / HDFSHACluster — the HDFS baseline (§2.1)
   profile_ops / HopsFSSim / HDFSSim — measured-cost DES (§7)
 """
+from .batch_planner import (BatchPlanner, MultiCacheResolver, PlanReport,
+                            PlannedBatch, PlannedRequestPipeline)
 from .dfs_client import (BlockLocation, ConcatSummary, ContentSummary,
                          DFSClient, DeleteSummary, FileStatus,
                          TruncateSummary)
@@ -24,9 +28,10 @@ from .hdfs_baseline import HDFSHACluster, HDFSNamenode
 from .hint_cache import InodeHintCache
 from .leader import LeaderElection
 from .middleware import (CallContext, compose, failover, subtree_retry)
-from .namenode import (BATCHABLE_READ_OPS, Client, Namenode, NamenodeCluster,
-                       OpOutcome, PipelineStats, RequestPipeline,
-                       materialize_namespace, namespace_snapshot)
+from .namenode import (BATCHABLE_READ_OPS, Client, GROUP_MUTABLE_OPS,
+                       Namenode, NamenodeCluster, OpOutcome, PipelineStats,
+                       PlanHint, RequestPipeline, materialize_namespace,
+                       namespace_snapshot)
 from .ops_registry import (ArgSpec, OpSpec, OpRegistry, REGISTRY, REQUIRED,
                            WorkloadOp, register_op)
 from .store import (EXCLUSIVE, READ_COMMITTED, SHARED, LockTimeout,
@@ -39,6 +44,8 @@ __all__ = [
     "MetadataStore", "Transaction", "OpCost", "HopsFSOps", "SubtreeOps",
     "TreeNode", "NamenodeCluster", "Namenode", "Client", "LeaderElection",
     "RequestPipeline", "PipelineStats", "OpOutcome", "BATCHABLE_READ_OPS",
+    "GROUP_MUTABLE_OPS", "PlanHint", "BatchPlanner", "MultiCacheResolver",
+    "PlannedBatch", "PlannedRequestPipeline", "PlanReport",
     "materialize_namespace", "namespace_snapshot",
     "REGISTRY", "OpRegistry", "OpSpec", "ArgSpec", "REQUIRED",
     "register_op", "WorkloadOp",

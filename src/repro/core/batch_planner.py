@@ -1,0 +1,413 @@
+"""Client-side columnar batch planner + planned request pipeline.
+
+The paper's throughput headline (Fig 7) comes from *distribution-aware,
+batched* transactions (§2.2, §5.1). The reactive pipeline only discovers
+batching opportunities after the fact: fixed-size FIFO batches are dealt to
+namenodes and ``execute_batch`` groups whatever same-type, same-partition
+runs happen to be adjacent. This module moves that discovery to the CLIENT
+side of the metadata path (the λFS lesson — see PAPERS.md):
+
+  1. **lower**   — a trace window is lowered to struct-of-arrays form
+     (:func:`~repro.core.workload.lower_trace`): per-op type ids plus the
+     hint-cache chain resolution broken out per path component;
+  2. **hash**    — every op's component chain and hinted target are hashed
+     in ONE fused ``phash_chain`` Pallas launch
+     (:func:`~repro.kernels.phash.ops.phash_chains`), giving each op its
+     coordinator partition and a chain signature;
+  3. **pin**     — mutations whose paths collide (same path, or one a
+     path-prefix of another, subtree ops included), destructive ops, and
+     ops that did not resolve client-side are *pinned*: they keep their
+     submission order, because reordering them could change the final
+     namespace or spuriously fail an op. Read-only resolved ops are never
+     pinned (they cannot change final state);
+  4. **deal**    — free ops are sorted by (partition, type) and chunked
+     into partition-aligned, type-sorted batches routed to the namenode
+     slot owning that partition, each op carrying its client-side
+     resolution as a :class:`~repro.core.namenode.PlanHint`. The namenode
+     executors therefore see maximal groupable runs whose shared
+     distribution-aware transactions land on their coordinator's node
+     group (raising the local round-trip share, §7.7).
+
+Planned execution guarantees *final-state* equivalence with sequential
+execution (asserted by tests/test_batched_pipeline.py); per-op result
+streams may differ for reads reordered across mutations, exactly as with
+any concurrent client population. Deterministic mode executes the plan in
+order, so window-scoped conflict analysis suffices; concurrent mode
+interleaves windows across worker threads, so there EVERY mutation is
+pinned onto one ordered queue (reads, which cannot change final state,
+still deal partition-aligned to all workers).
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+from .namenode import (NamenodeCluster, OpOutcome, PipelineStats, PlanHint,
+                       RequestPipeline)
+from .ops_registry import REGISTRY, WorkloadOp
+from .store import StoreError
+from .workload import ColumnarTrace, lower_trace
+
+__all__ = ["BatchPlanner", "MultiCacheResolver", "PlannedBatch",
+           "PlannedRequestPipeline", "PlanReport"]
+
+
+class MultiCacheResolver:
+    """The client's hint view: the merge of every alive namenode's inode
+    hint cache, probed side-effect-free (no LRU churn, no skewed hit/miss
+    counters on the namenodes). In HopsFS terms this is the client-side
+    cache the namenodes' piggybacked hints would populate."""
+
+    def __init__(self, caches: Sequence[Any]):
+        self.caches = [c for c in caches if c is not None]
+
+    @classmethod
+    def of_cluster(cls, cluster: NamenodeCluster) -> "MultiCacheResolver":
+        return cls([nn.ops.cache for nn in cluster.alive_namenodes()])
+
+    def peek(self, parent_id: int, name: str) -> Optional[int]:
+        for c in self.caches:
+            v = c.peek(parent_id, name)
+            if v is not None:
+                return v
+        return None
+
+
+@dataclass
+class PlannedBatch:
+    """One dealt batch: trace indices, their client-side resolutions, the
+    namenode slot the dominant partition routes to, and whether the batch
+    is order-pinned (conflicting mutations: must run in plan order)."""
+    indices: List[int]
+    hints: List[Optional[PlanHint]]
+    nn_slot: int
+    ordered: bool = False
+
+
+@dataclass
+class PlanReport:
+    """Planner telemetry for the benchmark report. ``predicted_local`` /
+    ``predicted_total`` come from the kernel's per-component partitions:
+    the share of an op's own row accesses expected to land on its
+    coordinator's node group — the client-side forecast of the measured
+    ``local_rt`` split (§7.7)."""
+    ops: int = 0
+    planned_ops: int = 0        # ops dealt with a client-side resolution
+    pinned_ops: int = 0         # mutations kept in submission order
+    windows: int = 0
+    batches: int = 0
+    kernel_launches: int = 0    # fused phash_chain calls that succeeded
+    partitions_seen: Set[int] = field(default_factory=set)
+    predicted_local: int = 0
+    predicted_total: int = 0
+
+    @property
+    def predicted_local_share(self) -> float:
+        return (self.predicted_local / self.predicted_total
+                if self.predicted_total else 0.0)
+
+
+def _chain_partitions(ct: ColumnarTrace, n_partitions: int
+                      ) -> Tuple[Any, Any, Any, bool]:
+    """One fused kernel launch for the whole window; the numpy oracle for
+    small windows or while the Pallas stack is unavailable — same shared
+    probe + size gate + fallback policy as the namenodes' own
+    ``_partitions_for`` (identical results either way)."""
+    from .namenode import _with_phash_kernel
+
+    def kern():
+        from ..kernels.phash.ops import phash_chains
+        return phash_chains(ct.parent_ids, ct.name_hashes, ct.hint_ids,
+                            ct.depths, n_partitions)
+
+    def fallback():
+        from ..kernels.phash.ref import phash_chain_ref
+        return phash_chain_ref(ct.parent_ids, ct.name_hashes, ct.hint_ids,
+                               ct.depths, n_partitions)
+
+    (comp, hint_parts, sigs), used_kernel = _with_phash_kernel(
+        kern, fallback, n_keys=ct.n)
+    return comp, hint_parts, sigs, used_kernel
+
+
+class BatchPlanner:
+    """Plans a trace into partition-aligned, type-sorted batches.
+
+    ``window`` ops are planned at a time (default: enough for several
+    batches per alive namenode); planning never moves an op across a
+    window boundary, which bounds both reordering distance and the
+    columnar working set.
+    """
+
+    def __init__(self, cluster: NamenodeCluster, *, batch_size: int = 16,
+                 window: Optional[int] = None,
+                 pin_all_mutations: bool = False):
+        self.cluster = cluster
+        self.batch_size = max(1, batch_size)
+        n_slots = max(1, len(cluster.alive_namenodes()))
+        self.n_slots = n_slots
+        self.window = window or self.batch_size * n_slots * 8
+        # conflict pinning is window-scoped, which is sound only when the
+        # plan executes in order (one thread). Concurrent execution
+        # interleaves windows, so there every mutation is pinned — they
+        # all flow through ONE ordered queue while reads (which cannot
+        # change final state) still deal partition-aligned.
+        self.pin_all_mutations = pin_all_mutations
+        self.report = PlanReport()
+
+    # -- conflict pinning ----------------------------------------------
+    @staticmethod
+    def _mutation_paths(wop: WorkloadOp, spec: Any
+                       ) -> List[Tuple[str, ...]]:
+        out = [tuple(c for c in wop.path.split("/") if c)]
+        if spec is not None and spec.paths == 2:
+            p2 = wop.path2 if wop.path2 is not None else wop.path + ".mv"
+            out.append(tuple(c for c in p2.split("/") if c))
+        return out
+
+    def _pin_conflicts(self, wops: Sequence[WorkloadOp],
+                       idxs: Sequence[int]) -> Set[int]:
+        """Pin every mutation whose path collides with another mutation's
+        path in the window — equality, or prefix in either direction (a
+        ``mkdirs`` below a path another op creates/deletes must not cross
+        it). Checked exactly on the (minority) mutation set's component
+        tuples; read-only ops are never pinned."""
+        muts: List[Tuple[int, Any, List[Tuple[str, ...]]]] = []
+        for i in idxs:
+            spec = REGISTRY.get(wops[i].op)
+            if spec is not None and spec.read_only:
+                continue
+            muts.append((i, spec, self._mutation_paths(
+                wops[i], spec) if spec is not None else []))
+        path_count: Dict[Tuple[str, ...], int] = {}
+        prefix_count: Dict[Tuple[str, ...], int] = {}
+        for i, _spec, paths in muts:
+            for p in paths:
+                path_count[p] = path_count.get(p, 0) + 1
+                for k in range(1, len(p)):
+                    pref = p[:k]
+                    prefix_count[pref] = prefix_count.get(pref, 0) + 1
+        pinned: Set[int] = set()
+        for i, spec, paths in muts:
+            # unknown/0-path ops cannot be reasoned about; destructive ops
+            # (delete/rename/truncate/concat) must never be hopped over by
+            # a read that the trace issued before them: keep in order.
+            # pin_all_mutations (concurrent execution) pins every mutation
+            # — window-scoped conflict analysis cannot see across windows
+            # that interleave on worker threads.
+            if self.pin_all_mutations or spec is None or spec.paths == 0 \
+                    or spec.destructive:
+                pinned.add(i)
+                continue
+            for p in paths:
+                if path_count.get(p, 0) > 1 \
+                        or prefix_count.get(p, 0) > 0 \
+                        or any(p[:k] in path_count
+                               for k in range(1, len(p))):
+                    pinned.add(i)
+                    break
+        return pinned
+
+    # -- planning -------------------------------------------------------
+    def plan(self, wops: Sequence[WorkloadOp]) -> List[PlannedBatch]:
+        n_partitions = self.cluster.store.n_partitions
+        resolver = MultiCacheResolver.of_cluster(self.cluster)
+        batches: List[PlannedBatch] = []
+        self.report.ops += len(wops)
+        for lo in range(0, len(wops), self.window):
+            hi = min(lo + self.window, len(wops))
+            window = list(range(lo, hi))
+            ct = lower_trace([wops[i] for i in window], resolver)
+            # _sigs: the kernel's path-equality probe, no consumer here yet
+            comp_parts, hint_parts, _sigs, used_kernel = _chain_partitions(
+                ct, n_partitions)
+            if used_kernel:
+                self.report.kernel_launches += 1
+            pinned = self._pin_conflicts(wops, window)
+            # ops whose chain did NOT resolve client-side stay in
+            # submission order too — an unresolved read (or create) may
+            # target a path another op in this window creates, and
+            # hopping over that op would spuriously fail it. Unresolved
+            # ops cannot group anyway, so ordering them costs nothing.
+            for k, i in enumerate(window):
+                if not ct.resolved[k]:
+                    pinned.add(i)
+            hints: Dict[int, Optional[PlanHint]] = {}
+            parts: Dict[int, int] = {}
+            n_groups = self.cluster.store.n_groups
+            for k, i in enumerate(window):
+                parts[i] = int(hint_parts[k])
+                self.report.partitions_seen.add(parts[i])
+                if ct.resolved[k]:
+                    hints[i] = PlanHint(pks=ct.pks[k],
+                                        target_id=ct.target_ids[k],
+                                        hint_id=int(ct.hint_ids[k]))
+                    self.report.planned_ops += 1
+                    # client-side locality forecast: which of this op's
+                    # component rows share the coordinator's node group
+                    d = int(ct.depths[k])
+                    coord_g = parts[i] % n_groups
+                    self.report.predicted_local += sum(
+                        1 for j in range(d)
+                        if int(comp_parts[k, j]) % n_groups == coord_g)
+                    self.report.predicted_total += d
+                else:
+                    hints[i] = None
+            type_of = {i: int(ct.type_ids[k])
+                       for k, i in enumerate(window)}
+            # free ops: partition-aligned, type-sorted, submission-stable
+            free = [i for i in window if i not in pinned]
+            free.sort(key=lambda i: (parts[i], type_of[i], i))
+            for c in range(0, len(free), self.batch_size):
+                chunk = free[c:c + self.batch_size]
+                slot = parts[chunk[0]] % self.n_slots
+                batches.append(PlannedBatch(
+                    indices=chunk, hints=[hints[i] for i in chunk],
+                    nn_slot=slot))
+            # pinned mutations LAST, strictly in submission order: free
+            # reads of a window never spuriously fail against a
+            # destructive op the trace issued later (a read the trace
+            # issued after the delete may now succeed instead — benign,
+            # final state is unaffected by reads)
+            pin_order = [i for i in window if i in pinned]
+            self.report.pinned_ops += len(pin_order)
+            for c in range(0, len(pin_order), self.batch_size):
+                chunk = pin_order[c:c + self.batch_size]
+                batches.append(PlannedBatch(
+                    indices=chunk, hints=[hints[i] for i in chunk],
+                    nn_slot=0, ordered=True))
+            self.report.windows += 1
+        self.report.batches += len(batches)
+        return batches
+
+
+class PlannedRequestPipeline(RequestPipeline):
+    """A :class:`RequestPipeline` whose dealing is driven by the client-side
+    plan instead of FIFO slicing: each namenode receives partition-aligned,
+    type-sorted batches with planner hints attached, so ``execute_batch``
+    sees maximal groupable runs (reads AND group-mutable writes) and its
+    shared transactions land on their coordinator's node group.
+
+    ``concurrent=False`` executes batches in plan order (deterministic);
+    ``concurrent=True`` runs one worker per alive namenode over per-slot
+    queues — order-pinned batches all live on one queue, preserving their
+    relative order. Ops on a namenode that dies mid-batch fail over to the
+    survivors exactly like the reactive pipeline (§7.6.1)."""
+
+    def __init__(self, cluster: NamenodeCluster, *, batch_size: int = 16,
+                 concurrent: bool = False, window: Optional[int] = None):
+        super().__init__(cluster, batch_size=batch_size,
+                         concurrent=concurrent)
+        self.window = window
+        self.planner: Optional[BatchPlanner] = None
+
+    @property
+    def plan_report(self) -> Optional[PlanReport]:
+        return self.planner.report if self.planner else None
+
+    def run(self, wops: Sequence[WorkloadOp]) -> PipelineStats:
+        import time
+        wops = list(wops)
+        if not self.cluster.alive_namenodes():
+            raise StoreError("no alive namenodes")
+        self.planner = BatchPlanner(self.cluster,
+                                    batch_size=self.batch_size,
+                                    window=self.window,
+                                    pin_all_mutations=self.concurrent)
+        batches = self.planner.plan(wops)
+        outcomes: List[Optional[OpOutcome]] = [None] * len(wops)
+        residual: deque = deque()      # ops orphaned by namenode deaths
+        rlock = threading.Lock()
+        n_batches = [0]
+        cost0 = {nn.nn_id: nn.agg_cost.copy()
+                 for nn in self.cluster.namenodes}
+        served0 = {nn.nn_id: nn.ops_served
+                   for nn in self.cluster.namenodes}
+
+        def run_batch(nn, batch: PlannedBatch) -> bool:
+            """Execute one planned batch; False if the namenode died (its
+            unfinished ops go to the residual queue)."""
+            try:
+                res = nn.execute_batch([wops[i] for i in batch.indices],
+                                       hints=batch.hints)
+            except StoreError:
+                with rlock:
+                    residual.extend(batch.indices)
+                return False
+            died = []
+            for i, oc in zip(batch.indices, res):
+                if not oc.ok and oc.error == "StoreError" and not nn.alive:
+                    died.append(i)
+                else:
+                    outcomes[i] = oc
+            if died:
+                with rlock:
+                    residual.extend(died)
+            with rlock:
+                n_batches[0] += 1
+            return not died
+
+        t0 = time.perf_counter()
+        if not self.concurrent:
+            for batch in batches:
+                alive = self.cluster.alive_namenodes()
+                if not alive:
+                    break
+                run_batch(alive[batch.nn_slot % len(alive)], batch)
+        else:
+            alive = self.cluster.alive_namenodes()
+            queues: List[deque] = [deque() for _ in alive]
+            qlock = threading.Lock()
+            for batch in batches:
+                queues[batch.nn_slot % len(alive)].append(batch)
+
+            def pull(k: int) -> Optional[PlannedBatch]:
+                with qlock:
+                    if queues[k]:
+                        return queues[k].popleft()
+                    # steal UNORDERED work, longest donor first — ordered
+                    # batches (all on slot 0) are never stolen, but a
+                    # pinned tail there must not blind us to other donors
+                    for j in sorted(range(len(queues)),
+                                    key=lambda q: -len(queues[q])):
+                        if queues[j] and not queues[j][-1].ordered:
+                            return queues[j].pop()
+                    return None
+
+            def drain(k: int, nn) -> None:
+                while True:
+                    batch = pull(k)
+                    if batch is None:
+                        return
+                    if not run_batch(nn, batch):
+                        with qlock:                     # orphan my queue
+                            while queues[k]:
+                                b = queues[k].popleft()
+                                with rlock:
+                                    residual.extend(b.indices)
+                        return
+
+            workers = [threading.Thread(target=drain, args=(k, nn))
+                       for k, nn in enumerate(alive)]
+            for w in workers:
+                w.start()
+            for w in workers:
+                w.join()
+        # failover pass: re-deal orphaned ops to the survivors, reactive
+        while residual:
+            alive = self.cluster.alive_namenodes()
+            if not alive:
+                break
+            idxs = [residual.popleft()
+                    for _ in range(min(self.batch_size, len(residual)))]
+            run_batch(alive[n_batches[0] % len(alive)],
+                      PlannedBatch(indices=idxs,
+                                   hints=[None] * len(idxs), nn_slot=0))
+        wall = time.perf_counter() - t0
+        for i, oc in enumerate(outcomes):
+            if oc is None:
+                outcomes[i] = OpOutcome(None, "StoreError")
+        return self._finalize_stats(wops, outcomes, cost0, served0, wall,
+                                    n_batches[0])

@@ -450,18 +450,35 @@ class BatchedHopsFSSim(HopsFSSim):
     occupancy exactly as it amortizes round trips). Mirroring the
     functional :meth:`~repro.core.namenode.Namenode.execute_batch`, the
     PK/batch path-validation round trips of each *batchable read group*
-    inside a batch collapse into one batched exchange, while per-op scan
-    round trips (PPIS/IS/FTS) and every mutating op's full profile are
-    unchanged. Batches form adaptively: an idle fleet serves singleton
-    batches (no added latency); under saturation the queue depth grows and
-    batching kicks in — the behaviour that produces the Fig 7-style
-    throughput-scaling curve replayed by ``benchmarks/trace_replay.py``.
+    and each *group-mutable mutation group* inside a batch collapse into
+    one batched exchange, while per-op scan round trips (PPIS/IS/FTS), the
+    mutations' per-row write round trips, and every other op's full
+    profile are unchanged. Batches form adaptively: an idle fleet serves
+    singleton batches (no added latency); under saturation the queue depth
+    grows and batching kicks in — the behaviour that produces the Fig
+    7-style throughput-scaling curve replayed by
+    ``benchmarks/trace_replay.py``.
+
+    ``planned=True`` mirrors the client-side batch planner
+    (:mod:`~repro.core.batch_planner`): instead of FIFO slices, pending
+    ops are bucketed by (op type, hint partition) — the OpSpec's own hint
+    rule — and each pulled batch drains the largest bucket, so namenodes
+    see partition-aligned, type-pure batches whose validation exchanges
+    collapse maximally.
     """
 
-    def __init__(self, *, batch_size: int = 16, **kw):
+    def __init__(self, *, batch_size: int = 16, planned: bool = False,
+                 **kw):
         super().__init__(**kw)
         self.batch_size = max(1, batch_size)
+        self.planned = planned
         self.queue: deque = deque()        # (WorkloadOp, done_cb)
+        self.buckets: Dict[object, deque] = {}
+        self._bucket_seqs: Dict[object, deque] = {}  # enqueue seq per item
+        self.pending = 0
+        self._pulls = 0
+        self._seq = 0
+        self._front_seq = 0                # counts down: requeue priority
         self._inflight = [0] * len(self.nn_handlers)
         self.nn_ops_completed = [0] * len(self.nn_handlers)
         self.batches_executed = 0
@@ -474,22 +491,88 @@ class BatchedHopsFSSim(HopsFSSim):
         def issue():
             op = workload.next_op()
             t0 = self.sim.t
-            self.queue.append((op, lambda: self._done(t0, issue)))
+            self._enqueue((op, lambda: self._done(t0, issue)))
             self._dispatch()
         self.sim.after(jitter, issue)
+
+    # -- queueing ------------------------------------------------------
+    def _enqueue(self, item, *, front: bool = False) -> None:
+        if not self.planned:
+            (self.queue.appendleft if front
+             else self.queue.append)(item)
+            return
+        op = item[0]
+        spec = REGISTRY.get(op.op)
+        if spec is not None and (spec.batchable or spec.group_mutable):
+            key: object = (op.op,
+                           spec.sim_partition(op.path, self.N_PARTITIONS))
+        else:
+            key = None                     # unplannable: FIFO bucket
+        dq = self.buckets.setdefault(key, deque())
+        sq = self._bucket_seqs.setdefault(key, deque())
+        if front:
+            self._front_seq -= 1
+            dq.appendleft(item)
+            sq.appendleft(self._front_seq)
+        else:
+            self._seq += 1
+            dq.append(item)
+            sq.append(self._seq)
+        self.pending += 1
+
+    def _requeue(self, item) -> None:
+        # a failed batch's ops keep retry priority at the queue front
+        self._enqueue(item, front=True)
+
+    def _has_work(self) -> bool:
+        return bool(self.queue) or self.pending > 0
+
+    # every Nth planned pull serves the bucket whose HEAD op has waited
+    # longest instead of the largest bucket — the real BatchPlanner bounds
+    # reordering to a window, so the DES mirror must not let cold
+    # (op, partition) buckets starve behind continuously-refilled hot ones
+    PULL_AGING = 4
+
+    def _pull_batch(self):
+        if not self.planned:
+            k = min(self.batch_size, len(self.queue))
+            return [self.queue.popleft() for _ in range(k)]
+        if not self.buckets:
+            return []
+        self._pulls += 1
+        if self._pulls % self.PULL_AGING == 0:
+            # oldest-waiting head op (requeued ops carry negative seqs,
+            # so failed batches regain priority first)
+            key = min(self.buckets,
+                      key=lambda b: self._bucket_seqs[b][0])
+        else:
+            # drain the largest bucket: partition-aligned dealing
+            key = max(self.buckets, key=lambda b: len(self.buckets[b]))
+        dq = self.buckets[key]
+        sq = self._bucket_seqs[key]
+        k = min(self.batch_size, len(dq))
+        out = [dq.popleft() for _ in range(k)]
+        for _ in range(k):
+            sq.popleft()
+        if not dq:
+            del self.buckets[key]
+            del self._bucket_seqs[key]
+        self.pending -= k
+        return out
 
     # -- dispatch ------------------------------------------------------
     def _dispatch(self) -> None:
         progress = True
-        while self.queue and progress:
+        while self._has_work() and progress:
             progress = False
             for nn in self._alive_nns():
-                if not self.queue:
+                if not self._has_work():
                     break
                 if self._inflight[nn] >= self.p.nn_handlers:
                     continue
-                k = min(self.batch_size, len(self.queue))
-                batch = [self.queue.popleft() for _ in range(k)]
+                batch = self._pull_batch()
+                if not batch:
+                    break
                 self._inflight[nn] += 1
                 self._run_batch(nn, batch)
                 progress = True
@@ -503,7 +586,7 @@ class BatchedHopsFSSim(HopsFSSim):
                 self._inflight[nn] -= 1
                 self.failed_ops += len(batch)
                 for item in reversed(batch):
-                    self.queue.appendleft(item)
+                    self._requeue(item)
                 self.sim.after(0.05, self._dispatch)
                 return
             self.nn_handlers[nn].acquire(with_handler)
@@ -530,36 +613,47 @@ class BatchedHopsFSSim(HopsFSSim):
 
     def _merged_rts(self, batch) -> List[Tuple[str, bool]]:
         """Round trips for a batch, collapsed exactly as the functional
-        ``Namenode._execute_read_run`` does: same-type read ops are grouped
-        by the TARGET'S PARTITION (path-hashed), and each multi-op
-        partition group's pk+batch validation round trips become ONE
-        batched exchange (§5.1); singleton groups, per-op scans, and every
-        mutating op keep their full profiles. Zipf-popular files landing on
-        the same partition are what make groups collapse."""
+        ``Namenode.execute_batch`` does: same-type groupable ops are
+        grouped by the HINT PARTITION (path-hashed via the OpSpec hint
+        rule), and each multi-op group's validation round trips become ONE
+        batched exchange (§5.1) — for batchable reads that absorbs the
+        pk+batch validation reads; for group-mutable mutations it absorbs
+        the batch-kind exchanges while the per-row write round trips (pk)
+        and per-op scans survive. Singleton groups and every other op keep
+        their full profiles. Zipf-popular files landing on the same
+        partition are what make reactive groups collapse; planned mode
+        makes the batches partition-pure so they collapse maximally."""
         groups: Dict[Tuple[str, int], List[RTProfile]] = {}
         rts: List[Tuple[str, bool]] = []
         for op, _ in batch:
             prof = self.profiles.get(op.op) or self.profiles["read"]
             spec = REGISTRY.get(op.op)
-            if spec is not None and spec.batchable:   # live registry check
+            if spec is not None and (spec.batchable
+                                     or spec.group_mutable):
                 # path -> partition via the OpSpec's hint derivation, the
                 # same rule the functional pipeline groups against
                 part = spec.sim_partition(op.path, self.N_PARTITIONS)
                 groups.setdefault((op.op, part), []).append(prof)
             else:
                 rts.extend(self._build_rts(prof))
-        for profs in groups.values():
+        for (opname, _part), profs in groups.items():
             if len(profs) == 1:
                 rts.extend(self._build_rts(profs[0]))
                 continue
+            spec = REGISTRY.get(opname)
+            is_read = spec is not None and spec.batchable
             loc = sum(pr.local for pr in profs)
             rem = sum(pr.remote for pr in profs)
             frac_local = loc / (loc + rem) if (loc + rem) else 0.0
-            # ONE batched exchange replaces the group's pk+batch RTs (§5.1)
+            # ONE batched exchange replaces the group's validation RTs
             rts.append(("batch", self.rng.random() < frac_local))
             for pr in profs:
-                for kind, cnt in (("ppis", pr.ppis), ("is", pr.is_scans),
-                                  ("fts", pr.fts)):
+                kinds = (("ppis", pr.ppis), ("is", pr.is_scans),
+                         ("fts", pr.fts))
+                if not is_read:
+                    # mutations keep their per-row write round trips
+                    kinds = (("pk", pr.pk),) + kinds
+                for kind, cnt in kinds:
                     for _ in range(cnt):
                         rts.append((kind,
                                     self.rng.random() < frac_local))

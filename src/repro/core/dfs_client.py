@@ -265,9 +265,20 @@ class DFSClient:
         return BatchCall(self)
 
     def run_trace(self, wops: Sequence[WorkloadOp], *, batch_size: int = 16,
-                  concurrent: bool = False) -> PipelineStats:
-        """Replay a trace through the shared-queue batched request
-        pipeline over this client's cluster (the Fig 7 methodology)."""
+                  concurrent: bool = False, planned: bool = False,
+                  window: Optional[int] = None) -> PipelineStats:
+        """Replay a trace through the batched request pipeline over this
+        client's cluster (the Fig 7 methodology). ``planned=True`` routes
+        through the client-side columnar batch planner
+        (:mod:`~repro.core.batch_planner`): partition-aligned, type-sorted
+        batches with client-side path resolutions attached, instead of
+        reactive FIFO dealing."""
+        if planned:
+            from .batch_planner import PlannedRequestPipeline
+            return PlannedRequestPipeline(self.cluster,
+                                          batch_size=batch_size,
+                                          concurrent=concurrent,
+                                          window=window).run(wops)
         return RequestPipeline(self.cluster, batch_size=batch_size,
                                concurrent=concurrent).run(wops)
 

@@ -362,6 +362,27 @@ class HopsFSOps:
     # ==================================================================
     # operations
     # ==================================================================
+    # -- execute-phase apply helpers, shared with the grouped WRITE path
+    # -- (namenode._write_group_txn) so batched and sequential mutations
+    # -- cannot diverge: every check precedes the first txn.write, and all
+    # -- shared-row reads (quota) go through the cache-aware txn.peek
+    def mkdir_apply(self, txn: Transaction, parent: Dict[str, Any],
+                    target: Optional[Dict[str, Any]], name: str,
+                    path: str, *, perm: int = 0o755) -> int:
+        if target is not None:
+            raise FileAlreadyExists(path)
+        if not parent["is_dir"]:
+            raise FSError(f"not a directory: parent of {path}")
+        new_id = self.inode_ids.next_id()
+        txn.write("inode", make_inode(new_id, parent["id"], name, True,
+                                      perm=perm, mtime=next(self.clock)))
+        parent = dict(parent)
+        parent["mtime"] = next(self.clock)
+        txn.write("inode", parent)
+        if self.cache:
+            self.cache.put(parent["id"], name, new_id)
+        return new_id
+
     def mkdir(self, path: str, *, perm: int = 0o755) -> OpResult:
         comps = split_path(path)
         if not comps:
@@ -369,19 +390,8 @@ class HopsFSOps:
         with self._begin(self._hint_for(comps, parent=True)) as txn:
             rp = self._resolve(txn, comps, last_lock=EXCLUSIVE,
                                lock_parent=True, path=path)
-            if rp.target is not None:
-                raise FileAlreadyExists(path)
-            if not rp.parent["is_dir"]:
-                raise FSError(f"not a directory: parent of {path}")
-            new_id = self.inode_ids.next_id()
-            txn.write("inode", make_inode(new_id, rp.parent["id"], comps[-1],
-                                          True, perm=perm,
-                                          mtime=next(self.clock)))
-            parent = dict(rp.parent)
-            parent["mtime"] = next(self.clock)
-            txn.write("inode", parent)
-            if self.cache:
-                self.cache.put(rp.parent["id"], comps[-1], new_id)
+            new_id = self.mkdir_apply(txn, rp.parent, rp.target, comps[-1],
+                                      path, perm=perm)
             cost = txn.commit()
         return OpResult(new_id, cost)
 
@@ -400,6 +410,45 @@ class HopsFSOps:
                 continue
         return OpResult(last, agg)
 
+    def create_apply(self, txn: Transaction, parent: Dict[str, Any],
+                     target: Optional[Dict[str, Any]], name: str,
+                     path: str, *, repl: int = 3, client: str = "client",
+                     overwrite: bool = False) -> int:
+        if target is not None and not overwrite:
+            raise FileAlreadyExists(path)
+        if not parent["is_dir"]:
+            raise FSError(f"not a directory: parent of {path}")
+        fid = (target["id"] if target is not None
+               else self.inode_ids.next_id())
+        tables = (_PPIS_CREATE_FULL
+                  if target is not None and target["size"] > 0
+                  else _PPIS_CREATE_EMPTY)
+        related = self._file_scan(txn, tables, fid, EXCLUSIVE)
+        if target is not None:  # overwrite: clear old file metadata
+            for tname, rws in related.items():
+                schema = self.store.table(tname).schema
+                for r in rws:
+                    txn.delete(tname, tuple(r[c] for c in schema.pk))
+        txn.write("inode", make_inode(fid, parent["id"], name,
+                                      False, repl=repl,
+                                      mtime=next(self.clock),
+                                      client=client))
+        parent2 = dict(parent)
+        parent2["mtime"] = next(self.clock)
+        txn.write("inode", parent2)
+        txn.write("lease", {"holder": client,
+                            "last_renewed": next(self.clock)})
+        txn.write("lease_path", {"inode_id": fid, "holder": client})
+        q = txn.peek("quota", (parent["id"],))
+        qrow = dict(q) if q else {"inode_id": parent["id"],
+                                  "ns_quota": -1, "ns_used": 0,
+                                  "ss_quota": -1, "ss_used": 0}
+        qrow["ns_used"] = qrow.get("ns_used", 0) + 1
+        txn.write("quota", qrow)
+        if self.cache:
+            self.cache.put(parent["id"], name, fid)
+        return fid
+
     def create(self, path: str, *, repl: int = 3, client: str = "client",
                overwrite: bool = False) -> OpResult:
         comps = split_path(path)
@@ -409,39 +458,9 @@ class HopsFSOps:
                 revalidate=True, path=path,
                 aux=(("lease", lambda p, t: (client,), READ_COMMITTED),
                      ("quota", lambda p, t: (p,), READ_COMMITTED)))
-            if rp.target is not None and not overwrite:
-                raise FileAlreadyExists(path)
-            if not rp.parent["is_dir"]:
-                raise FSError(f"not a directory: parent of {path}")
-            fid = (rp.target["id"] if rp.target is not None
-                   else self.inode_ids.next_id())
-            tables = (_PPIS_CREATE_FULL
-                      if rp.target is not None and rp.target["size"] > 0
-                      else _PPIS_CREATE_EMPTY)
-            related = self._file_scan(txn, tables, fid, EXCLUSIVE)
-            if rp.target is not None:  # overwrite: clear old file metadata
-                for tname, rws in related.items():
-                    schema = self.store.table(tname).schema
-                    for r in rws:
-                        txn.delete(tname, tuple(r[c] for c in schema.pk))
-            txn.write("inode", make_inode(fid, rp.parent["id"], comps[-1],
-                                          False, repl=repl,
-                                          mtime=next(self.clock),
-                                          client=client))
-            parent = dict(rp.parent)
-            parent["mtime"] = next(self.clock)
-            txn.write("inode", parent)
-            txn.write("lease", {"holder": client,
-                                "last_renewed": next(self.clock)})
-            txn.write("lease_path", {"inode_id": fid, "holder": client})
-            q = self.store.table("quota").get((rp.parent["id"],))
-            qrow = dict(q) if q else {"inode_id": rp.parent["id"],
-                                      "ns_quota": -1, "ns_used": 0,
-                                      "ss_quota": -1, "ss_used": 0}
-            qrow["ns_used"] = qrow.get("ns_used", 0) + 1
-            txn.write("quota", qrow)
-            if self.cache:
-                self.cache.put(rp.parent["id"], comps[-1], fid)
+            fid = self.create_apply(txn, rp.parent, rp.target, comps[-1],
+                                    path, repl=repl, client=client,
+                                    overwrite=overwrite)
             cost = txn.commit()
         return OpResult(fid, cost)
 
@@ -572,6 +591,28 @@ class HopsFSOps:
 
     info = stat
 
+    def setattr_apply(self, txn: Transaction,
+                      node: Optional[Dict[str, Any]], path: str,
+                      mutate: Callable[[Dict[str, Any]], None]) -> None:
+        if node is None:
+            raise FileNotFound(path)
+        if node["is_dir"]:
+            # no active subtree op may exist below: all-shard IS on the
+            # subtree-ops table (Table 3: "i is a dir ? IS : PPIS")
+            txn.index_scan("ongoing_subtree_ops", "namenode_id",
+                           self.nn_id)
+        else:
+            self._file_scan(txn, ("block",), node["id"], READ_COMMITTED)
+        node = dict(node)
+        mutate(node)
+        node["mtime"] = next(self.clock)
+        txn.write("inode", node)
+        q = txn.peek("quota", (node["parent_id"],))
+        txn.write("quota", dict(q) if q else
+                  {"inode_id": node["parent_id"], "ns_quota": -1,
+                   "ns_used": 0, "ss_quota": -1, "ss_used": 0})
+        return None
+
     def _simple_update(self, path: str,
                        mutate: Callable[[Dict[str, Any]], None]) -> OpResult:
         """chmod/chown/setrepl on FILES (and the phase-3 root-only update for
@@ -584,24 +625,7 @@ class HopsFSOps:
                       ((t.get("client") or "client",) if t else None),
                       READ_COMMITTED),
                      ("quota", lambda p, t: (p,), READ_COMMITTED)))
-            node = rp.target
-            if node is None:
-                raise FileNotFound(path)
-            if node["is_dir"]:
-                # no active subtree op may exist below: all-shard IS on the
-                # subtree-ops table (Table 3: "i is a dir ? IS : PPIS")
-                txn.index_scan("ongoing_subtree_ops", "namenode_id",
-                               self.nn_id)
-            else:
-                self._file_scan(txn, ("block",), node["id"], READ_COMMITTED)
-            node = dict(node)
-            mutate(node)
-            node["mtime"] = next(self.clock)
-            txn.write("inode", node)
-            q = self.store.table("quota").get((node["parent_id"],))
-            txn.write("quota", dict(q) if q else
-                      {"inode_id": node["parent_id"], "ns_quota": -1,
-                       "ns_used": 0, "ss_quota": -1, "ss_used": 0})
+            self.setattr_apply(txn, rp.target, path, mutate)
             cost = txn.commit()
         return OpResult(None, cost)
 

@@ -46,6 +46,12 @@ class InodeHintCache:
         if len(self._lru) > self.capacity:
             self._lru.popitem(last=False)
 
+    def peek(self, parent_id: int, name: str) -> Optional[int]:
+        """Probe without touching LRU order or hit/miss counters — the
+        client-side batch planner reads namenode caches through this so
+        planning never skews a namenode's own cache statistics."""
+        return self._lru.get((parent_id, name))
+
     def invalidate(self, parent_id: int, name: str) -> None:
         if self._lru.pop((parent_id, name), None) is not None:
             self.invalidations += 1

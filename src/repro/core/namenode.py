@@ -26,15 +26,15 @@ import time
 import warnings
 from collections import deque
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 from .fs import (FSError, HopsFSOps, OpResult, SubtreeLockedError,
                  split_path)
 from .leader import LeaderElection
 from .middleware import CallContext, compose, failover, subtree_retry
-from .ops_registry import REGISTRY, WorkloadOp
-from .store import (MetadataStore, OpCost, READ_COMMITTED, SHARED,
-                    StoreError, _hash_key)
+from .ops_registry import GroupWriteCtx, REGISTRY, WorkloadOp
+from .store import (EXCLUSIVE, MetadataStore, OpCost, READ_COMMITTED,
+                    SHARED, StoreError, _hash_key)
 from .subtree import SubtreeOps
 from .tables import ROOT_ID
 from .transactions import Transaction
@@ -47,7 +47,9 @@ from .transactions import Transaction
 # registered later batch too).
 BATCHABLE_READ_OPS = REGISTRY.batchable_ops()
 
-_phash_usable = True
+#: mutation op names the grouped WRITE path may share a transaction across
+#: (same import-time-snapshot convention as BATCHABLE_READ_OPS)
+GROUP_MUTABLE_OPS = REGISTRY.group_mutable_ops()
 
 # Below this many keys the scalar hash beats an interpret-mode Pallas call
 # (kernel dispatch overhead dominates); on accelerator-backed deployments
@@ -56,20 +58,88 @@ _phash_usable = True
 PHASH_MIN_BATCH = 512
 
 
+class _KernelProbe:
+    """Availability gate for the vectorized phash path.
+
+    A kernel failure disables the vectorized path only TEMPORARILY: after
+    ``reprobe_every`` eligible calls the kernel is probed again, so a
+    transient failure (jit cache eviction, accelerator hiccup, OOM) can
+    never latch the scalar fallback for the life of the process — which is
+    exactly what the module-global bool this replaces used to do."""
+
+    def __init__(self, reprobe_every: int = 64):
+        self.reprobe_every = reprobe_every
+        self.failures = 0                  # consecutive probe failures
+        self._calls_since_failure = 0
+
+    def usable(self) -> bool:
+        if self.failures == 0:
+            return True
+        self._calls_since_failure += 1
+        if self._calls_since_failure >= self.reprobe_every:
+            self._calls_since_failure = 0  # bounded re-probe
+            return True
+        return False
+
+    def succeeded(self) -> None:
+        self.failures = 0
+        self._calls_since_failure = 0
+
+    def failed(self) -> None:
+        self.failures += 1
+        self._calls_since_failure = 0
+
+
+_phash_probe = _KernelProbe()
+
+
+def _with_phash_kernel(kernel_fn: Any, fallback_fn: Any, *, n_keys: int,
+                       min_batch: int = PHASH_MIN_BATCH
+                       ) -> Tuple[Any, bool]:
+    """Run a phash kernel under the shared availability probe: size-gated
+    (below ``min_batch`` the scalar/numpy path wins on dispatch overhead),
+    per-call fallback, bounded re-probe. The SINGLE implementation of the
+    fallback policy for namenode-side grouping and the client-side batch
+    planner — returns (result, used_kernel)."""
+    if n_keys >= max(2, min_batch) and _phash_probe.usable():
+        try:
+            out = kernel_fn()
+        except Exception:
+            _phash_probe.failed()
+        else:
+            _phash_probe.succeeded()
+            return out, True
+    return fallback_fn(), False
+
+
 def _partitions_for(ids: Sequence[int], n_partitions: int, *,
                     min_batch: int = PHASH_MIN_BATCH) -> List[int]:
     """Batch path->partition hashing: the phash Pallas kernel for large
-    batches, the scalar store hash below ``min_batch`` (or if the kernel
-    stack is unavailable). Both implement the identical mix, so placement
-    always agrees with ``MetadataStore`` partitioning."""
-    global _phash_usable
-    if _phash_usable and len(ids) >= max(2, min_batch):
-        try:
-            from ..kernels.phash.ops import phash_partitions
-            return [int(p) for p in phash_partitions(ids, n_partitions)]
-        except Exception:
-            _phash_usable = False
-    return [_hash_key(i) % n_partitions for i in ids]
+    batches, the scalar store hash below ``min_batch`` (or while the kernel
+    stack is unavailable — per-call fallback with bounded re-probe). Both
+    implement the identical mix, so placement always agrees with
+    ``MetadataStore`` partitioning."""
+    def kern() -> List[int]:
+        from ..kernels.phash.ops import phash_partitions
+        return [int(p) for p in phash_partitions(ids, n_partitions)]
+
+    out, _ = _with_phash_kernel(
+        kern, lambda: [_hash_key(i) % n_partitions for i in ids],
+        n_keys=len(ids), min_batch=min_batch)
+    return out
+
+
+@dataclass(frozen=True)
+class PlanHint:
+    """Client-side path resolution shipped with a planned batch (λFS-style
+    client-side routing): the composite-PK chain of the op's path, the
+    target inode id when the leaf resolved client-side, and the
+    partition-hint inode id the planner grouped on. The executor treats
+    these exactly like its own hint-cache output — validated against real
+    rows inside the transaction, never trusted."""
+    pks: Tuple[Tuple[int, str], ...]
+    target_id: Optional[int]
+    hint_id: int
 
 
 @dataclass
@@ -98,6 +168,7 @@ class Namenode:
         self.agg_cost = OpCost()     # committed-txn cost served by this NN
         self.batches_executed = 0
         self.batched_ops = 0
+        self.batched_write_ops = 0   # mutations served by grouped txns
         # prebuilt default retry chain — the batch hot path must not
         # recompose middleware per op
         self._safe_handler = compose([subtree_retry()],
@@ -166,13 +237,18 @@ class Namenode:
         except StoreError as e:      # includes surfaced SubtreeLockedError
             return OpOutcome(None, type(e).__name__)
 
-    def execute_batch(self, wops: Sequence[WorkloadOp]) -> List[OpOutcome]:
+    def execute_batch(self, wops: Sequence[WorkloadOp],
+                      hints: Optional[Sequence[Optional[PlanHint]]] = None
+                      ) -> List[OpOutcome]:
         """Execute a pulled batch. Maximal runs of consecutive same-type
-        batchable read ops are executed through the grouped path (batched
-        PK validation per partition group); everything else runs through
-        the exact sequential path, in order. Because only read-only ops are
-        reordered *within* a run, the store ends in the same state as
-        strictly sequential execution of the batch."""
+        groupable ops are executed through the grouped paths — batchable
+        reads via one shared transaction per partition group, group-mutable
+        mutations via one shared run transaction with total-order locking
+        and submission-order execute phases — and everything else runs
+        through the exact sequential path, in order. Either way the store
+        ends in the same state as strictly sequential execution of the
+        batch. ``hints`` optionally carries the planner's client-side path
+        resolutions (one entry per op, None where unplanned)."""
         if not self.alive:
             raise StoreError(f"namenode {self.nn_id} is down")
         results: List[Optional[OpOutcome]] = [None] * len(wops)
@@ -181,11 +257,19 @@ class Namenode:
             op = wops[i].op
             j = i + 1
             spec = REGISTRY.get(op)
-            if spec is not None and spec.batchable:   # live registry check
+            groupable = spec is not None and (
+                spec.batchable
+                or (spec.group_mutable and spec.group_apply is not None))
+            if groupable:                             # live registry check
                 while j < len(wops) and wops[j].op == op:
                     j += 1
                 if j - i > 1:
-                    self._execute_read_run(op, wops, i, j, results)
+                    if spec.batchable:
+                        self._execute_read_run(op, wops, i, j, results,
+                                               hints)
+                    else:
+                        self._execute_write_run(op, wops, i, j, results,
+                                                hints)
                 else:
                     results[i] = self._safe_exec(wops[i])
             else:
@@ -196,17 +280,24 @@ class Namenode:
 
     def _execute_read_run(self, op: str, wops: Sequence[WorkloadOp],
                           lo: int, hi: int,
-                          results: List[Optional[OpOutcome]]) -> None:
+                          results: List[Optional[OpOutcome]],
+                          hints: Optional[Sequence[Optional[PlanHint]]]
+                          = None) -> None:
         """A run of same-type read ops: ops whose full path chain hits the
-        hint cache are grouped by target partition (vectorized phash over
-        the hinted inode ids) and executed one shared transaction per
-        partition group; cache misses fall back to the sequential path."""
+        hint cache (or arrived with a planner hint) are grouped by target
+        partition (vectorized phash over the hinted inode ids) and executed
+        one shared transaction per partition group; cache misses fall back
+        to the sequential path."""
         cache = self.ops.cache
         hits: List[Tuple[int, List[str], List[Tuple[int, str]], int]] = []
         for idx in range(lo, hi):
             comps = split_path(wops[idx].path)
             resolved = (cache.resolve_pks_and_id(comps)
                         if (cache is not None and comps) else None)
+            if resolved is None and hints is not None and comps:
+                h = hints[idx]
+                if h is not None and h.target_id is not None:
+                    resolved = (list(h.pks), h.target_id)
             if resolved is None:
                 results[idx] = self._safe_exec(wops[idx])
             else:
@@ -222,6 +313,40 @@ class Namenode:
             groups.setdefault(p, []).append(h)
         for _, group in sorted(groups.items()):
             self._read_group_txn(op, wops, group, results)
+
+    def _commit_group(self, txn: Transaction, order: Sequence[int],
+                      values: Dict[int, Any], op_costs: Dict[int, OpCost],
+                      errors: Dict[int, str], accounted: OpCost,
+                      results: List[Optional[OpOutcome]], *,
+                      writes: bool = False) -> None:
+        """Commit a grouped transaction and attribute its cost per op —
+        the single source of the conserved-accounting invariant for BOTH
+        the grouped read and grouped write paths: each op keeps its own
+        ``OpCost.diff`` share; the shared validation batch, commit flush,
+        and any reads done for ops that errored or fell back are charged
+        to the FIRST successful op, so Σ outcome costs == the cost
+        aggregated per namenode. (Like the sequential path, the cost of a
+        transaction that served no op at all is dropped.)"""
+        total = txn.commit()
+        unattributed = total.diff(accounted)
+        served = OpCost()
+        first_done = True
+        for idx in order:
+            if idx in values:
+                cost = op_costs[idx]
+                if first_done:
+                    cost.merge(unattributed)
+                    first_done = False
+                results[idx] = OpOutcome(OpResult(values[idx], cost),
+                                         batched=True)
+                served.merge(cost)
+                self.ops_served += 1
+                self.batched_ops += 1
+                if writes:
+                    self.batched_write_ops += 1
+            elif idx in errors:
+                results[idx] = OpOutcome(None, errors[idx], batched=True)
+        self.agg_cost.merge(served)
 
     def _read_group_txn(self, op: str, wops: Sequence[WorkloadOp],
                         group: Sequence[Tuple[int, List[str],
@@ -302,35 +427,235 @@ class Namenode:
                 except StoreError as e:
                     errors[idx] = type(e).__name__
                     values.pop(idx, None)
-            total = txn.commit()
-            # The shared validation batch, commit flush, and any reads done
-            # for ops that errored/fell back are attributed to the FIRST
-            # successful op, so Σ outcome costs == the cost aggregated per
-            # namenode. (Like the sequential path, cost of a transaction
-            # that served no op at all is dropped from the accounting.)
-            unattributed = total.diff(accounted)
-            served = OpCost()
-            first_done = True
-            for idx, *_ in group:
-                if idx in values:
-                    cost = op_costs[idx]
-                    if first_done:
-                        cost.merge(unattributed)
-                        first_done = False
-                    results[idx] = OpOutcome(
-                        OpResult(values[idx], cost), batched=True)
-                    served.merge(cost)
-                    self.ops_served += 1
-                    self.batched_ops += 1
-                elif idx in errors:
-                    results[idx] = OpOutcome(None, errors[idx],
-                                             batched=True)
-            self.agg_cost.merge(served)
+            self._commit_group(txn, [idx for idx, *_ in group], values,
+                               op_costs, errors, accounted, results)
         except StoreError:
             txn.abort()
             fallback = [idx for idx, *_ in group]
         for idx in fallback:
             results[idx] = self._safe_exec(wops[idx])
+
+    # ------------------------------------------------------------------
+    # grouped WRITE path (§5 three-phase template shared across a run)
+    # ------------------------------------------------------------------
+    def _execute_write_run(self, op: str, wops: Sequence[WorkloadOp],
+                           lo: int, hi: int,
+                           results: List[Optional[OpOutcome]],
+                           hints: Optional[Sequence[Optional[PlanHint]]]
+                           = None) -> None:
+        """A run of same-type group-mutable mutations: ops whose ancestor
+        chain resolves (hint cache, else planner hints) share ONE
+        transaction whose coordinator lands on the partition most ops in
+        the run hash to (vectorized phash — for planner-aligned batches the
+        whole run shares that partition, so the DAT hint is exact).
+        Execute phases apply in submission order, so grouped execution
+        stays observably identical to sequential execution; everything
+        unresolvable falls back to the sequential path, in order."""
+        cache = self.ops.cache
+        spec = REGISTRY[op]
+        segment: List[Tuple[int, List[str], List[Tuple[int, str]], int,
+                            Dict[str, Any]]] = []
+
+        def flush_segment() -> None:
+            if not segment:
+                return
+            items = list(segment)
+            segment.clear()
+            parts = _partitions_for([it[3] for it in items],
+                                    self.ops.store.n_partitions)
+            counts: Dict[int, int] = {}
+            for p in parts:
+                counts[p] = counts.get(p, 0) + 1
+            coord = max(counts, key=lambda p: (counts[p], -p))
+            hint_key = items[parts.index(coord)][3]
+            fallback: List[int] = []
+            self._write_group_txn(spec, wops, items, hint_key, results,
+                                  fallback)
+            for i in sorted(set(fallback)):
+                if results[i] is None:
+                    results[i] = self._safe_exec(wops[i])
+
+        # the run is split into maximal SEGMENTS of consecutive resolvable
+        # ops: a cache-miss op executes sequentially AT ITS SUBMISSION
+        # POSITION (after the segment before it, before everything after),
+        # so resolvability differences can never reorder mutations
+        for idx in range(lo, hi):
+            wop = wops[idx]
+            comps = split_path(wop.path)
+            resolved: Optional[Tuple[List[Tuple[int, str]], int]] = None
+            if comps and cache is not None:
+                if spec.hint == "parent":
+                    pks = cache.resolve_pks(comps)
+                    if pks is not None:
+                        resolved = (pks, pks[-1][0])
+                else:
+                    resolved = cache.resolve_pks_and_id(comps)
+            if resolved is None and hints is not None and comps:
+                h = hints[idx]
+                if h is not None:
+                    resolved = (list(h.pks), h.hint_id)
+            if resolved is None:
+                flush_segment()
+                results[idx] = self._safe_exec(wop)
+            else:
+                _, kw = spec.call_args(wop)
+                segment.append((idx, comps, resolved[0], resolved[1], kw))
+        flush_segment()
+
+    def _write_group_txn(self, spec: Any, wops: Sequence[WorkloadOp],
+                         items: Sequence[Tuple[int, List[str],
+                                               List[Tuple[int, str]], int,
+                                               Dict[str, Any]]],
+                         hint_key: int,
+                         results: List[Optional[OpOutcome]],
+                         fallback: List[int]) -> None:
+        """One shared distribution-aware transaction for a run of
+        mutations, following the Fig 4 template across the whole group:
+
+        LOCK    — ONE batched exchange: every op's ancestor chain at
+                  read-committed, then every op's exclusive (parent,
+                  target) locks in GLOBAL root-down path order (§5 "Cyclic
+                  Deadlocks" — two namenodes grouping overlapping paths
+                  acquire in the same order), then the dependent aux reads
+                  (lease/quota) of the ops' lock phases.
+        EXECUTE — per-op ``group_apply`` (the same fs.py apply helpers the
+                  sequential handlers run) in SUBMISSION order, on
+                  cache-fresh rows, so ops in one group observe each
+                  other exactly as sequential execution interleaves them.
+        UPDATE  — one commit flushes every op's dirty rows; per-op cost
+                  attributed via ``OpCost.diff`` snapshots, the shared
+                  validation/commit cost to the first successful op.
+
+        Stale hints are invalidated and the op re-runs sequentially
+        (§5.1.1); a transaction-level failure aborts (discarding every
+        in-cache effect) and the whole group re-runs sequentially."""
+        fsops = self.ops
+        lock_parent = spec.hint == "parent"
+        root_pk = (0, "")
+        try:
+            txn = Transaction(fsops.store,
+                              partition_hint=("inode", hint_key),
+                              distribution_aware=fsops.dat)
+        except StoreError:
+            fallback.extend(idx for idx, *_ in items)
+            return
+        try:
+            chains: Dict[int, Tuple[bool, List[Dict[str, Any]], int]] = {}
+            rows: Dict[Tuple[int, str],
+                       Tuple[Tuple[int, str],
+                             Optional[Dict[str, Any]]]] = {}
+            with txn.batch() as b:
+                for idx, comps, pks, _hint, kw in items:
+                    ok = True
+                    got: List[Dict[str, Any]] = []
+                    parent = ROOT_ID
+                    for pk in pks[:-1]:
+                        r = b.read("inode", pk, READ_COMMITTED)
+                        if r is None or pk[0] != parent:
+                            ok = False
+                            break
+                        got.append(r)
+                        parent = r["id"]
+                    chains[idx] = (ok, got, parent)
+                # exclusive locks for every op, globally sorted root-down
+                lock_list: List[Tuple[Tuple[str, ...], Tuple[int, str],
+                                      int, str]] = []
+                for idx, comps, pks, _hint, kw in items:
+                    ok, _got, parent_id = chains[idx]
+                    if not ok:
+                        continue
+                    if lock_parent:
+                        ppk = pks[-2] if len(pks) >= 2 else root_pk
+                        lock_list.append((tuple(comps[:-1]), ppk, idx,
+                                          "parent"))
+                    lock_list.append((tuple(comps),
+                                      (parent_id, comps[-1]), idx,
+                                      "target"))
+                for path_key, pk, idx, kind in sorted(
+                        lock_list, key=lambda e: e[0]):
+                    rows[(idx, kind)] = (pk, b.read("inode", pk, EXCLUSIVE))
+                if spec.group_aux is not None:
+                    for idx, comps, pks, _hint, kw in items:
+                        ok, _got, parent_id = chains[idx]
+                        if not ok:
+                            continue
+                        target = rows[(idx, "target")][1]
+                        for tname, pk, lk in spec.group_aux(kw, parent_id,
+                                                            target):
+                            b.read(tname, pk, lk)
+            # ---- validation + subtree checks + cache repair ------------
+            valid: List[Tuple[int, List[str], Dict[str, Any],
+                              Tuple[int, str], Tuple[int, str]]] = []
+            for idx, comps, pks, _hint, kw in items:
+                ok, got, parent_id = chains[idx]
+                parent_pk = (pks[-2] if len(pks) >= 2 else root_pk)
+                if ok and lock_parent and rows[(idx, "parent")][1] is None:
+                    ok = False
+                if not ok:
+                    if cachev := fsops.cache:
+                        for pk in pks:
+                            cachev.invalidate(*pk)
+                    fallback.append(idx)
+                    continue
+                target_pk, target = rows[(idx, "target")]
+                try:
+                    for row in got:
+                        fsops._check_subtree_lock(row, txn)
+                    if lock_parent:
+                        fsops._check_subtree_lock(rows[(idx, "parent")][1],
+                                                  txn)
+                    if target is not None:
+                        fsops._check_subtree_lock(target, txn)
+                except SubtreeLockedError:
+                    fallback.append(idx)        # voluntary abort (§6.3)
+                    continue
+                if fsops.cache:
+                    # repair under the VALIDATED ids (cf. the read path)
+                    for pk, row in zip(pks, got):
+                        fsops.cache.put(pk[0], pk[1], row["id"])
+                    if target is not None:
+                        fsops.cache.put(parent_id, comps[-1], target["id"])
+                valid.append((idx, comps, kw, parent_pk, target_pk))
+            # ---- EXECUTE phase, strictly in submission order -----------
+            op_costs: Dict[int, OpCost] = {}
+            values: Dict[int, Any] = {}
+            errors: Dict[int, str] = {}
+            accounted = OpCost()
+            for idx, comps, kw, parent_pk, target_pk in sorted(valid):
+                parent_row = txn.peek("inode", parent_pk)
+                target_row = txn.peek("inode", target_pk)
+                before = txn.cost.copy()
+                before_dirty = len(txn.dirty)
+                try:
+                    ctx = GroupWriteCtx(parent=parent_row,
+                                        target=target_row,
+                                        comps=list(comps),
+                                        path=wops[idx].path, kw=kw)
+                    values[idx] = spec.group_apply(fsops, txn, ctx)
+                    op_costs[idx] = txn.cost.diff(before)
+                    accounted.merge(op_costs[idx])
+                except SubtreeLockedError:
+                    # apply helpers check before writing, so a clean raise
+                    # leaves no trace; anything that DID write must not be
+                    # half-committed — abort the whole group instead
+                    # (sequential execution aborts that op's transaction)
+                    if len(txn.dirty) != before_dirty:
+                        raise
+                    fallback.append(idx)
+                except StoreError as e:
+                    if len(txn.dirty) != before_dirty:
+                        raise
+                    errors[idx] = type(e).__name__
+            self._commit_group(txn, [idx for idx, *_ in items], values,
+                               op_costs, errors, accounted, results,
+                               writes=True)
+        except StoreError:
+            # transaction-level failure: discard every in-cache effect and
+            # re-run the whole group sequentially
+            txn.abort()
+            fallback.extend(idx for idx, *_ in items)
+            for idx, *_ in items:
+                results[idx] = None
 
 
 class NamenodeCluster:
@@ -438,6 +763,8 @@ class PipelineStats:
     wall_s: float
     batch_size: int
     n_batches: int
+    batched_read_ops: int = 0     # read-only ops served by grouped txns
+    batched_write_ops: int = 0    # mutations served by grouped txns
 
     @property
     def throughput(self) -> float:
@@ -448,6 +775,28 @@ class PipelineStats:
         if not self.outcomes:
             return 0.0
         return sum(1 for o in self.outcomes if o.batched) / len(self.outcomes)
+
+    @property
+    def batched_read_fraction(self) -> float:
+        """Share of ops served by a grouped READ transaction."""
+        return self.batched_read_ops / len(self.outcomes) \
+            if self.outcomes else 0.0
+
+    @property
+    def batched_write_fraction(self) -> float:
+        """Share of ops served by a grouped WRITE transaction — zero before
+        the grouped write path existed, so batched_fraction strictly above
+        batched_read_fraction is the write path engaging."""
+        return self.batched_write_ops / len(self.outcomes) \
+            if self.outcomes else 0.0
+
+    @property
+    def local_rt_fraction(self) -> float:
+        """Share of DB round trips answered by the transaction
+        coordinator's own node group (DAT effectiveness, §7.7)."""
+        loc = self.total_cost.local_rt
+        tot = loc + self.total_cost.remote_rt
+        return loc / tot if tot else 0.0
 
 
 class RequestPipeline:
@@ -549,7 +898,16 @@ class RequestPipeline:
         for i, oc in enumerate(outcomes):
             if oc is None:
                 outcomes[i] = OpOutcome(None, "StoreError")
+        return self._finalize_stats(wops, outcomes, cost0, served0, wall,
+                                    n_batches[0])
 
+    def _finalize_stats(self, wops: Sequence[WorkloadOp],
+                        outcomes: Sequence[Optional[OpOutcome]],
+                        cost0: Dict[int, OpCost], served0: Dict[int, int],
+                        wall: float, n_batches: int) -> PipelineStats:
+        """Conserved-accounting roll-up shared by the reactive and planned
+        pipelines: per-namenode cost deltas, total cost over successful
+        outcomes, and the batched read/write op split."""
         per_nn_cost = {nn.nn_id: nn.agg_cost.diff(cost0[nn.nn_id])
                        for nn in self.cluster.namenodes}
         per_nn_ops = {nn.nn_id: nn.ops_served - served0[nn.nn_id]
@@ -562,11 +920,25 @@ class RequestPipeline:
                 total.merge(oc.result.cost)  # type: ignore[union-attr]
             else:
                 failed += 1
-        return PipelineStats(outcomes=outcomes,  # type: ignore[arg-type]
+        b_reads = b_writes = 0
+        for wop, oc in zip(wops, outcomes):
+            # only SERVED ops count toward the read/write batched split,
+            # matching the per-namenode batched_ops/batched_write_ops
+            # counters (a grouped op that errored is not "served by" the
+            # grouped transaction)
+            if oc is not None and oc.batched and oc.ok:
+                s = REGISTRY.get(wop.op)
+                if s is not None and s.read_only:
+                    b_reads += 1
+                else:
+                    b_writes += 1
+        return PipelineStats(outcomes=list(outcomes),  # type: ignore
                              per_nn_cost=per_nn_cost, per_nn_ops=per_nn_ops,
                              total_cost=total, ok=ok, failed=failed,
                              wall_s=wall, batch_size=self.batch_size,
-                             n_batches=n_batches[0])
+                             n_batches=n_batches,
+                             batched_read_ops=b_reads,
+                             batched_write_ops=b_writes)
 
 
 def namespace_snapshot(store: MetadataStore) -> Dict[str, Tuple]:
@@ -588,16 +960,22 @@ def namespace_snapshot(store: MetadataStore) -> Dict[str, Tuple]:
     paths: Dict[int, str] = {ROOT_ID: ""}
 
     def path_of(iid: int) -> Optional[str]:
-        if iid in paths:
-            return paths[iid]
-        row = rows.get(iid)
-        if row is None:
-            return None
-        parent = path_of(row["parent_id"])
-        if parent is None:
-            return None
-        p = parent + "/" + row["name"]
-        paths[iid] = p
+        # iterative ancestor walk: deep namespaces (depth >> 1000) would
+        # blow Python's recursion limit with the naive recursive form
+        chain: List[Tuple[int, Dict[str, Any]]] = []
+        seen: Set[int] = set()
+        cur = iid
+        while cur not in paths:
+            row = rows.get(cur)
+            if row is None or cur in seen:    # orphan or corrupt cycle
+                return None
+            seen.add(cur)
+            chain.append((cur, row))
+            cur = row["parent_id"]
+        p = paths[cur]
+        for cid, row in reversed(chain):
+            p = p + "/" + row["name"]
+            paths[cid] = p
         return p
 
     snap: Dict[str, Tuple] = {}

@@ -33,6 +33,7 @@ from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple)
 
+from .store import READ_COMMITTED
 from .tables import ROOT_ID
 
 #: sentinel: the argument has no default and MUST be supplied by the caller
@@ -71,6 +72,18 @@ class ArgSpec:
         return self.default(wop) if callable(self.default) else self.default
 
 
+@dataclass
+class GroupWriteCtx:
+    """Validated lock-phase state handed to a :attr:`OpSpec.group_apply`
+    execute phase: the (cache-fresh) parent and target rows, the path
+    components, and the op's keyword arguments."""
+    parent: Dict[str, Any]
+    target: Optional[Dict[str, Any]]
+    comps: List[str]
+    path: str
+    kw: Dict[str, Any]
+
+
 @dataclass(frozen=True)
 class OpSpec:
     """Declaration of one file-system operation."""
@@ -90,6 +103,22 @@ class OpSpec:
     # the op's lock phase folds a dependent lease read into the validation
     # exchange (§5.1) — mirrored by the grouped executor
     lease_read: bool = False
+    # removes or moves namespace rows (delete/rename/truncate/concat):
+    # the batch planner never reorders these across other ops — a read
+    # hopping over one would spuriously fail
+    destructive: bool = False
+    # mutations the grouped WRITE path may share a transaction across
+    # (create/mkdirs/setattr-class): group_apply is the execute phase,
+    # (fsops, txn, GroupWriteCtx) -> value, and MUST be built from the same
+    # fs.py helpers the sequential handler uses. group_aux lists the
+    # dependent lock-phase reads folded into the shared validation exchange,
+    # (kw, parent_id, target_row) -> [(table, pk, lock), ...].
+    group_mutable: bool = False
+    group_apply: Optional[Callable[[Any, Any, GroupWriteCtx], Any]] = None
+    group_aux: Optional[Callable[[Dict[str, Any], int,
+                                  Optional[Dict[str, Any]]],
+                                 List[Tuple[str, Tuple[Any, ...], str]]]] \
+        = None
 
     def __post_init__(self) -> None:
         assert self.paths in (0, 1, 2)
@@ -98,6 +127,13 @@ class OpSpec:
             f"{self.name}: only read-only ops may be batched"
         assert not (self.batchable and self.batch_payload is None), \
             f"{self.name}: batchable ops must declare batch_payload"
+        assert not (self.group_mutable and self.read_only), \
+            f"{self.name}: group_mutable is for mutations (use batchable)"
+        assert not (self.group_mutable and
+                    (self.group_apply is None or self.paths != 1
+                     or self.subtree)), \
+            f"{self.name}: group_mutable needs group_apply and a single " \
+            f"non-subtree path"
 
     # -- execution ------------------------------------------------------
     def resolve(self, namenode: Any) -> Callable[..., Any]:
@@ -184,6 +220,9 @@ class OpRegistry:
     def batchable_ops(self) -> Tuple[str, ...]:
         return tuple(s.name for s in self if s.batchable)
 
+    def group_mutable_ops(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self if s.group_mutable)
+
     def subtree_ops(self) -> frozenset:
         return frozenset(s.name for s in self if s.subtree)
 
@@ -196,7 +235,10 @@ def register_op(name: str, holder: str, method: str, *,
                 read_only: bool = False, batchable: bool = False,
                 subtree: bool = False, hint: str = "target",
                 batch_payload: Optional[Callable[..., Any]] = None,
-                lease_read: bool = False,
+                lease_read: bool = False, destructive: bool = False,
+                group_mutable: bool = False,
+                group_apply: Optional[Callable[..., Any]] = None,
+                group_aux: Optional[Callable[..., Any]] = None,
                 registry: OpRegistry = REGISTRY,
                 replace: bool = False) -> OpSpec:
     """Convenience declaration helper (also the public extension point)."""
@@ -204,7 +246,9 @@ def register_op(name: str, holder: str, method: str, *,
                   args=tuple(ArgSpec(n, d) for n, d in args), paths=paths,
                   read_only=read_only, batchable=batchable, subtree=subtree,
                   hint=hint, batch_payload=batch_payload,
-                  lease_read=lease_read)
+                  lease_read=lease_read, destructive=destructive,
+                  group_mutable=group_mutable,
+                  group_apply=group_apply, group_aux=group_aux)
     return registry.register(spec, replace=replace)
 
 
@@ -226,9 +270,51 @@ def _payload_ls(fsops: Any, txn: Any, target: Dict[str, Any]) -> Any:
     return fsops.listing_payload(txn, target)
 
 
+# grouped write-path execute phases: the SAME fs.py apply helpers the
+# sequential handlers run after their lock phase, so grouped and sequential
+# mutations cannot diverge (state equivalence is asserted by
+# tests/test_batched_pipeline.py)
+def _apply_create(fsops: Any, txn: Any, ctx: GroupWriteCtx) -> Any:
+    return fsops.create_apply(txn, ctx.parent, ctx.target, ctx.comps[-1],
+                              ctx.path, **ctx.kw)
+
+
+def _apply_mkdirs(fsops: Any, txn: Any, ctx: GroupWriteCtx) -> Any:
+    # ancestors were validated present by the grouped lock phase, so only
+    # the leaf mkdir remains; an existing leaf is mkdirs' sequential no-op
+    if ctx.target is not None:
+        return None
+    return fsops.mkdir_apply(txn, ctx.parent, ctx.target, ctx.comps[-1],
+                             ctx.path, **ctx.kw)
+
+
+def _apply_setattr(field: str) -> Callable[[Any, Any, GroupWriteCtx], Any]:
+    def apply(fsops: Any, txn: Any, ctx: GroupWriteCtx) -> Any:
+        value = ctx.kw[field]
+        return fsops.setattr_apply(txn, ctx.target, ctx.path,
+                                   lambda n: n.update({field: value}))
+    return apply
+
+
+def _aux_create(kw: Dict[str, Any], parent_id: int,
+                target: Optional[Dict[str, Any]]
+                ) -> List[Tuple[str, Tuple[Any, ...], str]]:
+    return [("lease", (kw.get("client", "client"),), READ_COMMITTED),
+            ("quota", (parent_id,), READ_COMMITTED)]
+
+
+def _aux_setattr(kw: Dict[str, Any], parent_id: int,
+                 target: Optional[Dict[str, Any]]
+                 ) -> List[Tuple[str, Tuple[Any, ...], str]]:
+    client = (target.get("client") or "client") if target else "client"
+    return [("lease", (client,), READ_COMMITTED),
+            ("quota", (parent_id,), READ_COMMITTED)]
+
+
 register_op("create", "ops", "create",
             args=(("repl", 3), ("client", "client"), ("overwrite", False)),
-            hint="parent")
+            hint="parent", group_mutable=True, group_apply=_apply_create,
+            group_aux=_aux_create)
 register_op("read", "ops", "get_block_locations",
             read_only=True, batchable=True, batch_payload=_payload_read,
             lease_read=True)
@@ -238,25 +324,36 @@ register_op("stat", "ops", "stat", read_only=True, batchable=True,
             batch_payload=_payload_stat, lease_read=True)
 register_op("mkdir", "ops", "mkdir", args=(("perm", 0o755),), hint="parent")
 register_op("mkdirs", "ops", "mkdirs", args=(("perm", 0o755),),
-            hint="parent")
-register_op("delete_file", "ops", "delete_file", hint="parent")
-register_op("rename_file", "ops", "rename_file", paths=2, hint="parent")
+            hint="parent", group_mutable=True, group_apply=_apply_mkdirs)
+register_op("delete_file", "ops", "delete_file", hint="parent",
+            destructive=True)
+register_op("rename_file", "ops", "rename_file", paths=2, hint="parent",
+            destructive=True)
 register_op("add_block", "ops", "add_block")
 register_op("complete_block", "ops", "complete_block",
             args=(("block_id", REQUIRED), ("size", REQUIRED)))
 register_op("append", "ops", "append_file", args=(("client", "client"),))
-register_op("chmod_file", "ops", "chmod_file", args=(("perm", 0o640),))
-register_op("chown_file", "ops", "chown_file", args=(("owner", "wluser"),))
+register_op("chmod_file", "ops", "chmod_file", args=(("perm", 0o640),),
+            group_mutable=True, group_apply=_apply_setattr("perm"),
+            group_aux=_aux_setattr)
+register_op("chown_file", "ops", "chown_file", args=(("owner", "wluser"),),
+            group_mutable=True, group_apply=_apply_setattr("owner"),
+            group_aux=_aux_setattr)
 register_op("set_replication", "ops", "set_replication",
-            args=(("repl", 2),))
+            args=(("repl", 2),),
+            group_mutable=True, group_apply=_apply_setattr("repl"),
+            group_aux=_aux_setattr)
 register_op("content_summary", "ops", "content_summary", read_only=True)
 register_op("set_quota", "ops", "set_quota",
             args=(("ns_quota", -1), ("ss_quota", -1)))
-register_op("truncate", "ops", "truncate", args=(("new_size", 0),))
-register_op("concat", "ops", "concat", args=(("srcs", REQUIRED),))
-register_op("delete_subtree", "subtree", "delete_subtree", subtree=True)
+register_op("truncate", "ops", "truncate", args=(("new_size", 0),),
+            destructive=True)
+register_op("concat", "ops", "concat", args=(("srcs", REQUIRED),),
+            destructive=True)
+register_op("delete_subtree", "subtree", "delete_subtree", subtree=True,
+            destructive=True)
 register_op("rename_subtree", "subtree", "rename_subtree", paths=2,
-            subtree=True, hint="parent")
+            subtree=True, hint="parent", destructive=True)
 register_op("chmod_subtree", "subtree", "chmod_subtree",
             args=(("perm", 0o640),), subtree=True)
 register_op("chown_subtree", "subtree", "chown_subtree",

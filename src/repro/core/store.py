@@ -22,6 +22,7 @@ acquisition in the FS layer (§5, "Cyclic Deadlocks").
 from __future__ import annotations
 
 import threading
+import time
 import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
@@ -64,70 +65,119 @@ EXCLUSIVE = "X"
 
 
 class _RowLock:
-    __slots__ = ("holders", "mode", "cond")
+    __slots__ = ("holders", "mode", "cond", "waiters")
 
     def __init__(self, cond_factory):
         self.holders: Set[int] = set()
         self.mode: Optional[str] = None
         self.cond = cond_factory()
+        self.waiters = 0          # threads blocked in acquire() on this row
+
+
+_LockKey = Tuple[str, Tuple[Any, ...]]
 
 
 class LockManager:
-    """Row-level shared/exclusive locks keyed by (table, pk)."""
+    """Row-level shared/exclusive locks keyed by (table, pk), striped.
 
-    def __init__(self, timeout: float = 1.2):
-        self._mu = threading.Lock()
-        self._locks: Dict[Tuple[str, Tuple[Any, ...]], _RowLock] = {}
+    The lock table is sharded into ``n_stripes`` independently-mutexed
+    stripes (like NDB's LQH lock fragments), so unrelated rows never
+    contend on one global mutex — the concurrent request pipeline runs one
+    thread per namenode against this table. A per-transaction held-locks
+    index makes :meth:`release_all` O(locks held by the txn) instead of
+    O(all locks currently held cluster-wide).
+    """
+
+    def __init__(self, timeout: float = 1.2, n_stripes: int = 64):
         self.timeout = timeout
+        self.n_stripes = max(1, n_stripes)
+        self._mus = [threading.Lock() for _ in range(self.n_stripes)]
+        self._locks: List[Dict[_LockKey, _RowLock]] = [
+            {} for _ in range(self.n_stripes)]
+        # txn_id -> keys it holds; guarded by its own (O(1)-hold) mutex
+        self._held_mu = threading.Lock()
+        self._held: Dict[int, Set[_LockKey]] = {}
+
+    def _stripe(self, key: _LockKey) -> int:
+        return hash(key) % self.n_stripes
 
     def acquire(self, txn_id: int, table: str, pk: Tuple[Any, ...],
                 mode: str) -> None:
         if mode == READ_COMMITTED:
             return
         key = (table, pk)
-        with self._mu:
-            lk = self._locks.get(key)
+        s = self._stripe(key)
+        mu = self._mus[s]
+        with mu:
+            lk = self._locks[s].get(key)
             if lk is None:
-                lk = self._locks[key] = _RowLock(
-                    lambda: threading.Condition(self._mu))
-            deadline = None
-            while True:
-                if not lk.holders or lk.holders == {txn_id}:
-                    break
-                if mode == SHARED and lk.mode == SHARED:
-                    break
-                # conflicting: wait (bounded by NDB txn-inactive timeout)
-                if deadline is None:
-                    import time
-                    deadline = time.monotonic() + self.timeout
-                import time
-                remaining = deadline - time.monotonic()
-                if remaining <= 0 or not lk.cond.wait(remaining):
-                    raise LockTimeout(f"lock timeout on {table}{pk} ({mode})")
+                lk = self._locks[s][key] = _RowLock(
+                    lambda: threading.Condition(mu))
+            # deadline computed once, outside the wait loop (hot path)
+            deadline = time.monotonic() + self.timeout
+            lk.waiters += 1
+            try:
+                while True:
+                    if not lk.holders or lk.holders == {txn_id}:
+                        break
+                    if mode == SHARED and lk.mode == SHARED:
+                        break
+                    # conflicting: wait (bounded by NDB txn-inactive timeout)
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0 or not lk.cond.wait(remaining):
+                        raise LockTimeout(
+                            f"lock timeout on {table}{pk} ({mode})")
+            except LockTimeout:
+                lk.waiters -= 1
+                if not lk.holders and not lk.waiters:
+                    del self._locks[s][key]   # entry we created, now orphaned
+                raise
+            else:
+                lk.waiters -= 1
             lk.holders.add(txn_id)
             if lk.mode == EXCLUSIVE or mode == EXCLUSIVE:
                 lk.mode = EXCLUSIVE
             else:
                 lk.mode = SHARED
+        with self._held_mu:
+            self._held.setdefault(txn_id, set()).add(key)
 
     def release_all(self, txn_id: int) -> None:
-        with self._mu:
-            dead = []
-            for key, lk in self._locks.items():
-                if txn_id in lk.holders:
+        with self._held_mu:
+            keys = self._held.pop(txn_id, None)
+        if not keys:
+            return
+        by_stripe: Dict[int, List[_LockKey]] = {}
+        for key in keys:
+            by_stripe.setdefault(self._stripe(key), []).append(key)
+        for s, stripe_keys in by_stripe.items():
+            with self._mus[s]:
+                locks = self._locks[s]
+                for key in stripe_keys:
+                    lk = locks.get(key)
+                    if lk is None or txn_id not in lk.holders:
+                        continue
                     lk.holders.discard(txn_id)
                     if not lk.holders:
                         lk.mode = None
                     lk.cond.notify_all()
-                    if not lk.holders:
-                        dead.append(key)
-            for key in dead:
-                del self._locks[key]
+                    # reclaim the entry only when nobody still waits on its
+                    # condition — a waiter woken after the entry was dropped
+                    # would otherwise mutate an orphaned lock object
+                    if not lk.holders and not lk.waiters:
+                        del locks[key]
 
     def held(self, table: str, pk: Tuple[Any, ...]) -> Optional[str]:
-        with self._mu:
-            lk = self._locks.get((table, pk))
+        key = (table, pk)
+        with self._mus[self._stripe(key)]:
+            lk = self._locks[self._stripe(key)].get(key)
             return lk.mode if lk and lk.holders else None
+
+    def held_count(self, txn_id: int) -> int:
+        """Number of row locks the transaction currently holds (the index
+        the O(held) release walks)."""
+        with self._held_mu:
+            return len(self._held.get(txn_id, ()))
 
 
 # ---------------------------------------------------------------------------

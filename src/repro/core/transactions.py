@@ -104,6 +104,21 @@ class Transaction:
             self.cache[key] = row
         return row
 
+    def peek(self, tname: str, pk: Tuple[Any, ...]
+             ) -> Optional[Dict[str, Any]]:
+        """Read a row through the transaction's own cache WITHOUT charging a
+        round trip. Rows already read (lock phase) or written (execute
+        phase) this transaction are served from the cache — which is what
+        makes grouped write transactions see each other's in-flight updates
+        (e.g. two creates in one directory accumulating the parent's quota)
+        — and anything else falls through to the raw store row, matching
+        the direct-store peeks the sequential write path has always done."""
+        key = (tname, pk)
+        if key in self.cache:
+            v = self.cache[key]
+            return None if v is _TOMBSTONE else v
+        return self.store.table(tname).get(pk)
+
     def read_batch(self, reads: Sequence[Tuple[str, Tuple[Any, ...], str]]
                    ) -> List[Optional[Dict[str, Any]]]:
         """Batched PK reads: one round trip for the whole batch (§5.1).

@@ -12,10 +12,14 @@ Reproduces the Spotify HDFS trace characteristics:
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from .ops_registry import REGISTRY, WorkloadOp, synthesize
+from .tables import ROOT_ID
 
 # (op, weight_pct, fraction_on_directories)
 TABLE1_MIX: List[Tuple[str, float, float]] = [
@@ -208,6 +212,110 @@ def make_spotify_trace(ns: SyntheticNamespace, n_ops: int, *,
     at every namenode count keeps throughput curves comparable — exactly the
     replay methodology of the paper's Fig 7 scaling experiment."""
     return SpotifyWorkload(ns, seed=seed, mix=mix).make_trace(n_ops)
+
+
+# ---------------------------------------------------------------------------
+# columnar (struct-of-arrays) trace lowering — the batch planner's input
+# ---------------------------------------------------------------------------
+
+
+def name_hash32(name: str) -> int:
+    """32-bit per-component name hash fed to the fused chain kernel."""
+    return zlib.crc32(name.encode()) & 0xFFFFFFFF
+
+
+@dataclass
+class ColumnarTrace:
+    """Struct-of-arrays lowering of a trace window (paper §2.2 batching +
+    λFS-style client-side planning): one row per op, with the hint-cache
+    chain resolution broken out per path component so the whole window can
+    be hashed in ONE fused ``phash_chain`` kernel launch instead of per-op
+    Python hashing.
+
+    ``parent_ids[n, d]`` / ``name_hashes[n, d]`` are the composite PK
+    (parent_id, hash(name)) of op n's d-th path component as the client's
+    hint view resolves it (zero-padded past ``depths[n]``); ``hint_ids``
+    is the op's partition-hint inode id (its target for file ops, its
+    parent for namespace mutations — the same OpSpec.hint rule the
+    namenodes use); ``pks``/``target_ids`` carry the exact resolution that
+    ships to the executor as planner hints."""
+    n: int
+    max_depth: int
+    type_ids: np.ndarray                       # [n] int32 registry ordinal
+    depths: np.ndarray                         # [n] int32 resolved comps
+    parent_ids: np.ndarray                     # [n, D] int64
+    name_hashes: np.ndarray                    # [n, D] int64 (uint32 vals)
+    hint_ids: np.ndarray                       # [n] int64
+    resolved: List[bool] = field(default_factory=list)
+    pks: List[Optional[Tuple[Tuple[int, str], ...]]] = \
+        field(default_factory=list)
+    target_ids: List[Optional[int]] = field(default_factory=list)
+
+
+def lower_trace(wops: Sequence[WorkloadOp], resolver: Any,
+                *, max_depth: int = 16) -> ColumnarTrace:
+    """Lower a trace window to columnar form, resolving every op's hint
+    chain in bulk against ``resolver`` (anything with a
+    ``peek(parent_id, name) -> Optional[int]``, e.g. a namenode hint cache
+    or the planner's merged view of all of them).
+
+    Resolution requirements mirror the grouped executors: batchable reads
+    and target-hinted mutations need the full chain including the leaf;
+    parent-hinted mutations (create/mkdirs) need only the ancestors. Ops
+    that fall short stay unresolved — the planner deals them in submission
+    order and the namenode runs them through the exact sequential path."""
+    n = len(wops)
+    type_names = list(REGISTRY.names())
+    type_of = {name: i for i, name in enumerate(type_names)}
+    type_ids = np.zeros(n, np.int32)
+    depths = np.zeros(n, np.int32)
+    parent_ids = np.zeros((n, max_depth), np.int64)
+    name_hashes = np.zeros((n, max_depth), np.int64)
+    hint_ids = np.full(n, ROOT_ID, np.int64)
+    ct = ColumnarTrace(n=n, max_depth=max_depth, type_ids=type_ids,
+                       depths=depths, parent_ids=parent_ids,
+                       name_hashes=name_hashes, hint_ids=hint_ids)
+    for i, wop in enumerate(wops):
+        spec = REGISTRY.get(wop.op)
+        type_ids[i] = type_of.get(wop.op, -1)
+        comps = [c for c in wop.path.split("/") if c]
+        if spec is None or not comps or len(comps) > max_depth:
+            ct.resolved.append(False)
+            ct.pks.append(None)
+            ct.target_ids.append(None)
+            continue
+        need_leaf = spec.batchable or (spec.group_mutable
+                                       and spec.hint == "target")
+        pks: List[Tuple[int, str]] = []
+        parent = ROOT_ID
+        target_id: Optional[int] = None
+        ok = True
+        for d, name in enumerate(comps):
+            pks.append((parent, name))
+            parent_ids[i, d] = parent
+            name_hashes[i, d] = name_hash32(name)
+            child = resolver.peek(parent, name)
+            if child is None:
+                if d < len(comps) - 1 or need_leaf:
+                    ok = False
+                break
+            parent = child
+            if d == len(comps) - 1:
+                target_id = child
+        depths[i] = len(pks)
+        if not ok:
+            ct.resolved.append(False)
+            ct.pks.append(None)
+            ct.target_ids.append(None)
+            continue
+        if spec.hint == "parent":
+            hint_ids[i] = pks[-1][0]
+        else:
+            hint_ids[i] = target_id if target_id is not None else parent
+        ct.resolved.append(True)
+        ct.pks.append(tuple(pks))
+        ct.target_ids.append(target_id)
+    return ct
 
 
 class TraceReplay:

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 GOLDEN = 0x9E3779B1
+# second mix constant for the fused chain signature (murmur3 fmix)
+GOLDEN2 = 0x85EBCA6B
 
 
 def _phash_kernel(keys_ref, out_ref, *, n_partitions: int):
@@ -44,3 +46,61 @@ def phash(keys: jax.Array, *, n_partitions: int = 64, block_n: int = 1024,
         out_shape=jax.ShapeDtypeStruct((N,), jnp.int32),
         interpret=interpret,
     )(keys)
+
+
+def _phash_chain_kernel(parents_ref, names_ref, hints_ref, depths_ref,
+                        comp_ref, hint_ref, sig_ref, *,
+                        n_partitions: int, depth: int):
+    """Fused chain hash: per-component partition ids, per-path hint (leaf)
+    partition ids, and a per-path chain signature, in one pass.
+
+    ``parents[n, d]`` is the parent inode id of path n's d-th component and
+    ``names[n, d]`` a 32-bit hash of its name — i.e. the composite PK
+    (parent_id, name) the hint cache resolves (§5.1). Component partitions
+    use the SAME mix as the scalar store hash (inodes are partitioned by
+    parent_id, §4.2), so client-side routing agrees with ``MetadataStore``
+    placement exactly; the signature folds every (parent, name) pair into
+    a constant-time path-equality probe for chain-level consumers."""
+    par = parents_ref[...].astype(jnp.uint32)          # [bn, depth]
+    nam = names_ref[...].astype(jnp.uint32)            # [bn, depth]
+    h = (par * jnp.uint32(GOLDEN)).astype(jnp.uint32)
+    h = h ^ (h >> jnp.uint32(16))
+    comp_ref[...] = (h % jnp.uint32(n_partitions)).astype(jnp.int32)
+    hv = (hints_ref[...].astype(jnp.uint32)
+          * jnp.uint32(GOLDEN)).astype(jnp.uint32)
+    hv = hv ^ (hv >> jnp.uint32(16))
+    hint_ref[...] = (hv % jnp.uint32(n_partitions)).astype(jnp.int32)
+    d = depths_ref[...]                                # [bn] int32
+    sig = jnp.zeros(par.shape[:1], jnp.uint32)
+    for k in range(depth):       # static unroll over the (small) max depth
+        step = ((sig ^ h[:, k] ^ nam[:, k])
+                * jnp.uint32(GOLDEN2)).astype(jnp.uint32)
+        step = step ^ (step >> jnp.uint32(15))
+        sig = jnp.where(k < d, step, sig)
+    sig_ref[...] = sig
+
+
+def phash_chain(parents: jax.Array, names: jax.Array, hints: jax.Array,
+                depths: jax.Array, *, n_partitions: int = 64,
+                block_n: int = 1024, interpret: bool = True):
+    """parents/names [N, D] uint32, hints [N] uint32, depths [N] int32 ->
+    (comp_parts [N, D] int32, hint_parts [N] int32, sigs [N] uint32)."""
+    N, D = parents.shape
+    bn = min(block_n, N)
+    kernel = functools.partial(_phash_chain_kernel,
+                               n_partitions=n_partitions, depth=D)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // bn,),
+        in_specs=[pl.BlockSpec((bn, D), lambda i: (i, 0)),
+                  pl.BlockSpec((bn, D), lambda i: (i, 0)),
+                  pl.BlockSpec((bn,), lambda i: (i,)),
+                  pl.BlockSpec((bn,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((bn, D), lambda i: (i, 0)),
+                   pl.BlockSpec((bn,), lambda i: (i,)),
+                   pl.BlockSpec((bn,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((N, D), jnp.int32),
+                   jax.ShapeDtypeStruct((N,), jnp.int32),
+                   jax.ShapeDtypeStruct((N,), jnp.uint32)],
+        interpret=interpret,
+    )(parents, names, hints, depths)

@@ -6,11 +6,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from .kernel import phash as _phash
+from .kernel import phash_chain as _phash_chain
 
 
 @functools.partial(jax.jit, static_argnames=("n_partitions", "interpret"))
 def phash(keys, n_partitions: int = 64, interpret: bool = True):
     return _phash(keys, n_partitions=n_partitions, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_partitions", "interpret"))
+def phash_chain(parents, names, hints, depths, n_partitions: int = 64,
+                interpret: bool = True):
+    return _phash_chain(parents, names, hints, depths,
+                        n_partitions=n_partitions, interpret=interpret)
 
 
 def phash_partitions(keys, n_partitions: int = 64, *,
@@ -38,3 +46,52 @@ def phash_partitions(keys, n_partitions: int = 64, *,
     out = phash(jnp.asarray(buf), n_partitions=n_partitions,
                 interpret=interpret)
     return np.asarray(out)[:n]
+
+
+def _pad_pow2(n: int, floor: int = 8) -> int:
+    p = floor
+    while p < n:
+        p *= 2
+    return p
+
+
+def phash_chains(parent_ids, name_hashes, hint_ids, depths,
+                 n_partitions: int = 64, *, interpret: bool = True
+                 ) -> "tuple[np.ndarray, np.ndarray, np.ndarray]":
+    """Fused chain hashing for the client-side batch planner: ONE kernel
+    launch over every path's (parent_id, name) component chain returns
+
+      * ``comp_parts [N, D]`` — partition of every component's inode row
+        (inodes are partitioned by parent_id, §4.2), matching
+        ``repro.core.store._hash_key(parent_id) % n_partitions`` exactly;
+      * ``hint_parts [N]``    — partition of each op's hinted (leaf) inode
+        id, the key the planner groups partition-aligned batches on;
+      * ``sigs [N]``          — 32-bit fold of the whole chain, a
+        constant-time path-equality probe for chain-level consumers.
+
+    ``parent_ids``/``name_hashes`` are [N, D] arrays padded with zeros
+    beyond ``depths[n]`` components. N is padded to a power of two (>= 8)
+    so the 1-D grid tiles evenly and jit recompiles stay O(log N)."""
+    par = np.asarray(parent_ids, dtype=np.int64) & 0xFFFFFFFF
+    nam = np.asarray(name_hashes, dtype=np.int64) & 0xFFFFFFFF
+    hin = np.asarray(hint_ids, dtype=np.int64) & 0xFFFFFFFF
+    dep = np.asarray(depths, dtype=np.int32)
+    n = par.shape[0]
+    if n == 0:
+        d0 = par.shape[1] if par.ndim == 2 else 0
+        return (np.zeros((0, d0), np.int32), np.zeros(0, np.int32),
+                np.zeros(0, np.uint32))
+    d = max(1, par.shape[1])
+    pn = _pad_pow2(n)
+    bufs = [np.zeros((pn, d), np.uint32), np.zeros((pn, d), np.uint32)]
+    bufs[0][:n, :par.shape[1]] = par.astype(np.uint32)
+    bufs[1][:n, :nam.shape[1]] = nam.astype(np.uint32)
+    hbuf = np.zeros(pn, np.uint32)
+    hbuf[:n] = hin.astype(np.uint32)
+    dbuf = np.zeros(pn, np.int32)
+    dbuf[:n] = dep
+    comp, hint_parts, sigs = phash_chain(
+        jnp.asarray(bufs[0]), jnp.asarray(bufs[1]), jnp.asarray(hbuf),
+        jnp.asarray(dbuf), n_partitions=n_partitions, interpret=interpret)
+    return (np.asarray(comp)[:n], np.asarray(hint_parts)[:n],
+            np.asarray(sigs)[:n])

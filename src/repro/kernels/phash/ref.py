@@ -7,3 +7,24 @@ def phash_ref(keys, n_partitions: int = 64):
     h = (k * np.uint32(0x9E3779B1)).astype(np.uint32)
     h = h ^ (h >> np.uint32(16))
     return (h % np.uint32(n_partitions)).astype(np.int32)
+
+
+def phash_chain_ref(parents, names, hints, depths, n_partitions: int = 64):
+    """Numpy oracle for the fused chain kernel (also the planner's fallback
+    when the Pallas stack is unavailable): per-component partitions, hint
+    partitions, and chain signatures."""
+    par = np.asarray(parents).astype(np.uint32)
+    nam = np.asarray(names).astype(np.uint32)
+    d = np.asarray(depths).astype(np.int32)
+    with np.errstate(over="ignore"):
+        h = (par * np.uint32(0x9E3779B1)).astype(np.uint32)
+        h = h ^ (h >> np.uint32(16))
+        comp = (h % np.uint32(n_partitions)).astype(np.int32)
+        hint_parts = phash_ref(hints, n_partitions)
+        sig = np.zeros(par.shape[0], dtype=np.uint32)
+        for k in range(par.shape[1]):
+            step = ((sig ^ h[:, k] ^ nam[:, k])
+                    * np.uint32(0x85EBCA6B)).astype(np.uint32)
+            step = step ^ (step >> np.uint32(15))
+            sig = np.where(k < d, step, sig)
+    return comp, hint_parts, sig

@@ -237,6 +237,33 @@ def test_gmm_sweep(E, C, D, F, bc, bf, bd, dtype):
                                atol=_tol(dtype) * D ** 0.5, rtol=2e-2)
 
 
+def test_phash_chain_kernel_matches_ref_and_store():
+    """The fused chain variant: component partitions, hint partitions and
+    chain signatures agree with the numpy oracle, and both agree with the
+    scalar store hash on partition placement."""
+    from repro.core.store import _hash_key
+    from repro.kernels.phash.ops import phash_chains
+    from repro.kernels.phash.ref import phash_chain_ref
+    rng = np.random.default_rng(3)
+    n, d = 21, 7
+    par = rng.integers(0, 2**31, (n, d))
+    nam = rng.integers(0, 2**32, (n, d))
+    hin = rng.integers(0, 2**31, n)
+    dep = rng.integers(1, d + 1, n)
+    comp, hint_parts, sigs = phash_chains(par, nam, hin, dep, 64)
+    rcomp, rhint, rsig = phash_chain_ref(par, nam, hin, dep, 64)
+    assert (comp == rcomp).all()
+    assert (hint_parts == rhint).all()
+    assert (sigs == rsig).all()
+    assert all(hint_parts[i] == _hash_key(int(hin[i])) % 64
+               for i in range(n))
+    # identical chains hash identically; differing names do not
+    c2, h2, s2 = phash_chains(par, nam, hin, dep, 64)
+    assert (s2 == sigs).all()
+    _c3, _h3, s3 = phash_chains(par, (nam + 1) & 0xFFFFFFFF, hin, dep, 64)
+    assert (s3 != sigs).any()
+
+
 def test_phash_kernel_matches_ref():
     from repro.kernels.phash.kernel import phash
     from repro.kernels.phash.ref import phash_ref
