@@ -17,6 +17,7 @@ smoke:                   ## run the fast examples headless
 	PYTHONPATH=$(PYTHONPATH) $(PY) examples/quickstart.py
 	PYTHONPATH=$(PYTHONPATH) $(PY) examples/dfs_client.py
 	PYTHONPATH=$(PYTHONPATH) $(PY) examples/batched_pipeline.py
+	PYTHONPATH=$(PYTHONPATH) $(PY) examples/write_path.py
 
 bench:                   ## Fig 7-style trace replay -> BENCH_throughput.json
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.trace_replay

@@ -1,30 +1,148 @@
-"""Docs lint: the documentation suite exists, is substantive, and every
-repo path it references actually resolves.
+"""Docs lint: the documentation suite exists, is substantive, every repo
+path it references resolves, and every backtick-quoted ``module.symbol``
+code reference resolves via import/getattr — so docs cannot silently rot
+when code moves or is renamed.
 
   PYTHONPATH=src python scripts/docs_lint.py      (or: make docs-lint)
 
 Checks:
-  * README.md, docs/ARCHITECTURE.md, docs/BENCHMARKS.md exist and are
-    non-trivial;
+  * README.md, docs/ARCHITECTURE.md, docs/API.md, docs/BENCHMARKS.md exist
+    and are non-trivial;
   * every `path`-looking backtick reference into src/ tests/ benchmarks/
     examples/ docs/ scripts/ points at a real file or directory;
-  * commands the docs tell users to run reference real module files.
+  * every dotted backtick reference anchored in this repo's code — a
+    module (`workload.lower_trace`, `cluster_sim.SimParams`), a
+    `repro.core` export (`Namenode.execute_batch`, `OpSpec.lease_order`),
+    or a symbol of any `repro.core` submodule (`BatchedHopsFSSim`) —
+    resolves to a live object. Dotted tokens anchored NOWHERE in the repo
+    (example variables like `dfs.batch`, version numbers) are prose, not
+    code references, and are skipped.
 """
 from __future__ import annotations
 
+import dataclasses
+import importlib
+import pkgutil
 import re
 import sys
+import types
 from pathlib import Path
+from typing import Dict, Optional
 
 ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))            # benchmarks/, scripts/
+sys.path.insert(0, str(ROOT / "src"))    # repro
+
 DOCS = ["README.md", "docs/ARCHITECTURE.md", "docs/API.md",
         "docs/BENCHMARKS.md"]
 MIN_BYTES = 1500
 REF_PREFIXES = ("src/", "tests/", "benchmarks/", "examples/", "docs/",
                 "scripts/")
+#: module-name prefixes tried in front of a dotted token; the bare base
+#: only applies to the repo's own top-level packages (REPO_ROOTS) — a
+#: stdlib/site-packages module must never anchor a doc token, else prose
+#: like `pytest.something` would fail the lint and a dangling `re.py`
+#: would pass it
+IMPORT_BASES = ("", "repro.", "repro.core.", "repro.kernels.",
+                "benchmarks.")
+REPO_ROOTS = ("repro", "benchmarks", "scripts", "examples", "tests")
 
-# `...`-quoted tokens that look like repo paths
+# `...`-quoted tokens that look like repo paths or dotted symbols
 _REF = re.compile(r"`([A-Za-z0-9_./-]+)`")
+
+_symbol_cache: Dict[str, Optional[bool]] = {}
+
+
+def _import(name: str):
+    try:
+        return importlib.import_module(name)
+    except Exception:
+        return None
+
+
+def _walk_attrs(obj, parts) -> bool:
+    for i, attr in enumerate(parts):
+        try:
+            obj = getattr(obj, attr)
+        except AttributeError:
+            # dataclass fields without defaults are not class attributes —
+            # accept one only as the FINAL part (nothing to walk past it)
+            return (i == len(parts) - 1
+                    and dataclasses.is_dataclass(obj)
+                    and any(f.name == attr
+                            for f in dataclasses.fields(obj)))
+    return True
+
+
+def _submodule_roots():
+    """name -> object for every public symbol of every repro.core
+    submodule (anchors refs like `BatchedHopsFSSim.batched_ops` that are
+    not re-exported from the package root). Imported FOREIGN modules
+    (``import time`` inside a submodule) are excluded — the stdlib must
+    not anchor doc tokens."""
+    roots: Dict[str, object] = {}
+
+    def repo_owned(obj) -> bool:
+        if isinstance(obj, types.ModuleType):
+            return getattr(obj, "__name__", "").startswith(
+                ("repro", "benchmarks"))
+        return True
+
+    core = _import("repro.core")
+    if core is None:
+        return roots
+    for info in pkgutil.iter_modules(core.__path__):
+        mod = _import(f"repro.core.{info.name}")
+        if mod is None:
+            continue
+        for name in dir(mod):
+            obj = getattr(mod, name)
+            if not name.startswith("__") and repo_owned(obj):
+                roots.setdefault(name, obj)
+    for name in dir(core):
+        obj = getattr(core, name)
+        if not name.startswith("__") and repo_owned(obj):
+            roots[name] = obj
+    return roots
+
+
+_ATTR_ROOTS = None
+
+
+def symbol_status(tok: str) -> Optional[bool]:
+    """True = resolves, False = anchored in repo code but dangling,
+    None = not a code reference (skip)."""
+    global _ATTR_ROOTS
+    if tok in _symbol_cache:
+        return _symbol_cache[tok]
+    parts = tok.split(".")
+    first = parts[0]
+    anchored = resolved = False
+    for base in IMPORT_BASES:
+        if base == "" and first not in REPO_ROOTS:
+            continue
+        if _import(base + first) is None:
+            continue
+        anchored = True
+        # longest importable module prefix, then getattr the rest
+        for k in range(len(parts), 0, -1):
+            mod = _import(base + ".".join(parts[:k]))
+            if mod is None:
+                continue
+            if _walk_attrs(mod, parts[k:]):
+                resolved = True
+            break
+        if resolved:
+            break
+    if not resolved:
+        if _ATTR_ROOTS is None:
+            _ATTR_ROOTS = _submodule_roots()
+        if first in _ATTR_ROOTS:
+            anchored = True
+            resolved = _walk_attrs(_ATTR_ROOTS[first], parts[1:])
+    status = True if resolved else (False if anchored else None)
+    _symbol_cache[tok] = status
+    return status
 
 
 def check_doc(path: Path) -> list:
@@ -36,19 +154,39 @@ def check_doc(path: Path) -> list:
         errors.append(f"{path.relative_to(ROOT)}: suspiciously short "
                       f"({len(text)} bytes < {MIN_BYTES})")
     for tok in _REF.findall(text):
-        if not tok.startswith(REF_PREFIXES):
+        if "/" in tok or tok.startswith(REF_PREFIXES):
+            if not tok.startswith(REF_PREFIXES):
+                continue
+            target = ROOT / tok
+            # allow references to glob-ish groups like src/repro/kernels/
+            if target.exists():
+                continue
+            # `a/{b,c}/d` brace groups: every expansion must exist
+            m = re.match(r"(.*)\{([^}]+)\}(.*)", tok)
+            if m and all((ROOT / (m.group(1) + part + m.group(3))).exists()
+                         for part in m.group(2).split(",")):
+                continue
+            errors.append(f"{path.relative_to(ROOT)}: dangling reference "
+                          f"`{tok}`")
             continue
-        target = ROOT / tok
-        # allow references to glob-ish groups like src/repro/kernels/
-        if target.exists():
+        if tok.endswith(".py"):
+            # bare module filename (`ops_registry.py`): the file must
+            # exist somewhere under the repo's code trees (repo-anchored
+            # imports only — the stdlib must not vouch for `re.py`)
+            stem = tok[:-3]
+            if any(_import(base + stem) for base in IMPORT_BASES
+                   if base != "" or stem in REPO_ROOTS) \
+                    or list(ROOT.glob(f"*/{tok}")) \
+                    or list(ROOT.glob(f"*/**/{tok}")):
+                continue
+            errors.append(f"{path.relative_to(ROOT)}: dangling module "
+                          f"reference `{tok}`")
             continue
-        # `a/{b,c}/d` brace groups: every expansion must exist
-        m = re.match(r"(.*)\{([^}]+)\}(.*)", tok)
-        if m and all((ROOT / (m.group(1) + part + m.group(3))).exists()
-                     for part in m.group(2).split(",")):
-            continue
-        errors.append(f"{path.relative_to(ROOT)}: dangling reference "
-                      f"`{tok}`")
+        if "." in tok and not tok[0].isdigit():
+            if symbol_status(tok) is False:
+                errors.append(f"{path.relative_to(ROOT)}: dangling code "
+                              f"reference `{tok}` (anchored in repo code "
+                              f"but does not resolve via import/getattr)")
     return errors
 
 
@@ -61,7 +199,8 @@ def main() -> int:
         for e in errors:
             print("  -", e)
         return 1
-    print(f"docs-lint: OK ({len(DOCS)} docs checked)")
+    print(f"docs-lint: OK ({len(DOCS)} docs checked, "
+          f"{len(_symbol_cache)} code references resolved)")
     return 0
 
 

@@ -23,7 +23,8 @@ from .dfs_client import (BlockLocation, ConcatSummary, ContentSummary,
                          DFSClient, DeleteSummary, FileStatus,
                          TruncateSummary)
 from .fs import (FSError, FileAlreadyExists, FileNotFound, HopsFSOps,
-                 OpResult, SubtreeLockedError, format_fs, split_path)
+                 LeaseConflict, OpResult, SubtreeLockedError, format_fs,
+                 split_path)
 from .hdfs_baseline import HDFSHACluster, HDFSNamenode
 from .hint_cache import InodeHintCache
 from .leader import LeaderElection
@@ -54,7 +55,8 @@ __all__ = [
     "CallContext", "compose", "failover", "subtree_retry",
     "HDFSNamenode", "HDFSHACluster", "InodeHintCache", "format_fs",
     "split_path", "run_with_retry", "FSError", "FileNotFound",
-    "FileAlreadyExists", "SubtreeLockedError", "StoreError", "LockTimeout",
+    "FileAlreadyExists", "LeaseConflict", "SubtreeLockedError",
+    "StoreError", "LockTimeout",
     "NodeGroupDown", "ROOT_ID", "READ_COMMITTED", "SHARED", "EXCLUSIVE",
     "hdfs_capacity_files", "hopsfs_capacity_files",
 ]

@@ -96,6 +96,10 @@ class PlanReport:
     ops: int = 0
     planned_ops: int = 0        # ops dealt with a client-side resolution
     pinned_ops: int = 0         # mutations kept in submission order
+    lease_ordered_ops: int = 0  # block writes kept FREE under lease order:
+                                # same-file collisions that would have
+                                # pinned, held in submission order by the
+                                # stable (partition, type) sort instead
     windows: int = 0
     batches: int = 0
     kernel_launches: int = 0    # fused phash_chain calls that succeeded
@@ -173,7 +177,17 @@ class BatchPlanner:
         path in the window — equality, or prefix in either direction (a
         ``mkdirs`` below a path another op creates/deletes must not cross
         it). Checked exactly on the (minority) mutation set's component
-        tuples; read-only ops are never pinned."""
+        tuples; read-only ops are never pinned.
+
+        Lease-ordered exception (the block-write window rule): same-path
+        collisions where EVERY colliding mutation is the same lease-ordered
+        op type with the same ``OpSpec.lease_order`` key (e.g. a run of
+        add_blocks growing one hot file) stay FREE — the deal's
+        submission-stable (partition, type, i) sort already keeps
+        same-file ops in submission order (same file ⇒ same hint
+        partition and same type), so they can batch with block writes to
+        other files instead of being exiled to the ordered queue. Any
+        mixed-type or mixed-key collision pins conservatively."""
         muts: List[Tuple[int, Any, List[Tuple[str, ...]]]] = []
         for i in idxs:
             spec = REGISTRY.get(wops[i].op)
@@ -183,9 +197,17 @@ class BatchPlanner:
                 wops[i], spec) if spec is not None else []))
         path_count: Dict[Tuple[str, ...], int] = {}
         prefix_count: Dict[Tuple[str, ...], int] = {}
-        for i, _spec, paths in muts:
+        # per colliding path: the (op name, lease-order key) pairs of its
+        # mutations — freeing requires ONE pair, with a real key
+        ops_on_path: Dict[Tuple[str, ...], Set[Tuple[str, Any]]] = {}
+        for i, spec, paths in muts:
+            name = spec.name if spec is not None else "?"
+            key = (spec.lease_order(wops[i])
+                   if spec is not None and spec.lease_order is not None
+                   else None)
             for p in paths:
                 path_count[p] = path_count.get(p, 0) + 1
+                ops_on_path.setdefault(p, set()).add((name, key))
                 for k in range(1, len(p)):
                     pref = p[:k]
                     prefix_count[pref] = prefix_count.get(pref, 0) + 1
@@ -201,13 +223,23 @@ class BatchPlanner:
                     or spec.destructive:
                 pinned.add(i)
                 continue
+            lease_freed = False
             for p in paths:
-                if path_count.get(p, 0) > 1 \
-                        or prefix_count.get(p, 0) > 0 \
+                if prefix_count.get(p, 0) > 0 \
                         or any(p[:k] in path_count
                                for k in range(1, len(p))):
                     pinned.add(i)
                     break
+                if path_count.get(p, 0) > 1:
+                    pairs = ops_on_path[p]
+                    if len(pairs) == 1 and spec.lease_order is not None \
+                            and next(iter(pairs))[1] is not None:
+                        lease_freed = True      # same-file, same-key run
+                        continue
+                    pinned.add(i)
+                    break
+            if lease_freed and i not in pinned:
+                self.report.lease_ordered_ops += 1
         return pinned
 
     # -- planning -------------------------------------------------------

@@ -257,6 +257,14 @@ def profile_ops(*, use_cache: bool = True, distribution_aware: bool = True,
         st.chown_subtree(sub, "u2").cost)
     prof["delete_subtree"] = RTProfile.from_cost(st.delete_subtree(sub).cost)
     prof["rename_subtree"] = prof["chmod_subtree"]
+    # block-completion profile (write-heavy mixes): measured on a fresh
+    # file so none of the profiles above shift
+    f3 = d + "/data3.bin"
+    ops.create(f3)
+    b3 = ops.add_block(f3).value
+    prof["complete_block"] = RTProfile.from_cost(
+        ops.complete_block(f3, b3, size=1 << 26).cost)
+    prof["renew_lease"] = RTProfile.from_cost(ops.renew_lease().cost)
     return prof
 
 

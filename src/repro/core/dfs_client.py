@@ -25,8 +25,8 @@ from dataclasses import dataclass
 from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
                     Type)
 
-from .fs import (FSError, FileAlreadyExists, FileNotFound, OpResult,
-                 SubtreeLockedError)
+from .fs import (FSError, FileAlreadyExists, FileNotFound, LeaseConflict,
+                 OpResult, SubtreeLockedError)
 from .middleware import (CallContext, Handler, Middleware, compose, failover,
                          subtree_retry)
 from .namenode import (Client, Namenode, NamenodeCluster, PipelineStats,
@@ -94,7 +94,7 @@ class ConcatSummary:
 #: :class:`~repro.core.namenode.OpOutcome` records
 ERROR_TYPES: Dict[str, Type[Exception]] = {
     cls.__name__: cls
-    for cls in (FSError, FileNotFound, FileAlreadyExists,
+    for cls in (FSError, FileNotFound, FileAlreadyExists, LeaseConflict,
                 SubtreeLockedError, StoreError, LockTimeout, NodeGroupDown,
                 TransactionAborted, RowNotFound)
 }
@@ -235,14 +235,25 @@ class DFSClient:
 
     # -- block protocol -------------------------------------------------
     def append(self, path: str, *, client: str = "client") -> int:
+        """Reopen a file for append: takes the lease over for ``client``.
+        Raises :class:`~repro.core.fs.LeaseConflict` while another
+        client's live lease covers the file."""
         return self.call("append", path, client=client).value
 
-    def add_block(self, path: str) -> int:
-        return self.call("add_block", path).value
+    def add_block(self, path: str, *, client: str = "client") -> int:
+        return self.call("add_block", path, client=client).value
 
-    def complete_block(self, path: str, block_id: int, *,
-                       size: int) -> None:
-        self.call("complete_block", path, block_id=block_id, size=size)
+    def complete_block(self, path: str, block_id: int = -1, *,
+                       size: int, client: str = "client") -> None:
+        """Finalize a block (``block_id=-1`` means the file's last
+        allocated block)."""
+        self.call("complete_block", path, block_id=block_id, size=size,
+                  client=client)
+
+    def renew_lease(self, *, client: str = "client") -> None:
+        """Client heartbeat: keeps ``client``'s lease live so the leader's
+        lease recovery does not reclaim its files under construction."""
+        self.call("renew_lease", client=client)
 
     def truncate(self, path: str, new_size: int = 0) -> TruncateSummary:
         v = self.call("truncate", path, new_size=new_size).value

@@ -57,6 +57,15 @@ class SubtreeLockedError(FSError):
     Callers voluntarily abort and retry after the lock is released."""
 
 
+class LeaseConflict(FSError):
+    """Block write (add_block/append/complete_block) on a file under
+    construction by ANOTHER client. ``append`` — which acquires the lease
+    itself — may take over once the holder's lease expired; the other
+    block ops must wait for the holder to finish or for the leader to
+    reclaim the lease once the holder stops renewing (the client analogue
+    of §6.2's dead-namenode lock reclaim)."""
+
+
 @dataclass
 class OpResult:
     """Return value of every FS op: payload + measured cost profile."""
@@ -132,7 +141,9 @@ class HopsFSOps:
     def __init__(self, store: MetadataStore, namenode_id: int = 0, *,
                  use_cache: bool = True, distribution_aware: bool = True,
                  adp: bool = True,
-                 is_nn_alive: Optional[Callable[[int], bool]] = None):
+                 is_nn_alive: Optional[Callable[[int], bool]] = None,
+                 lease_now: Optional[Callable[[], int]] = None,
+                 lease_limit: int = 3):
         self.store = store
         self.nn_id = namenode_id
         self.cache: Optional[InodeHintCache] = (
@@ -145,6 +156,13 @@ class HopsFSOps:
         # liveness oracle for subtree-lock reclaim (§6.2); defaults to
         # "only me is alive" for single-NN tests
         self._is_nn_alive = is_nn_alive or (lambda nn: nn == self.nn_id)
+        # lease clock: client liveness is measured against the SAME logical
+        # clock the leader election uses (a Namenode wires this to
+        # election.now); a lease not renewed for > lease_limit ticks is
+        # expired and reclaimable by the leader. The standalone default
+        # (constant 0) never expires leases, keeping single-NN tests inert.
+        self._lease_now = lease_now or (lambda: 0)
+        self.lease_limit = lease_limit
 
     # ------------------------------------------------------------------
     # transaction / lock-phase helpers
@@ -194,6 +212,86 @@ class HopsFSOps:
             fixed["subtree_lock"] = None          # reclaim from dead NN §6.2
             txn.write("inode", fixed)
             row["subtree_lock"] = None
+
+    # ------------------------------------------------------------------
+    # lease table helpers (§4.1 lease/lease_path; HDFS single-writer rule)
+    # ------------------------------------------------------------------
+    def lease_write(self, txn: Transaction, client: str,
+                    inode_id: int) -> None:
+        """Acquire/renew ``client``'s lease on a file inside the current
+        transaction: one lease row per holder (renewal timestamp against
+        the shared liveness clock) plus one lease_path row per file under
+        construction. Shared by the sequential handlers AND the grouped
+        write path (create/append), so the two cannot diverge."""
+        txn.write("lease", {"holder": client,
+                            "last_renewed": self._lease_now()})
+        txn.write("lease_path", {"inode_id": inode_id, "holder": client})
+
+    def _lease_live(self, row: Optional[Dict[str, Any]]) -> bool:
+        """A lease is live iff it exists and was renewed within
+        ``lease_limit`` liveness ticks — the client analogue of the
+        namenode heartbeat rule (leader.py)."""
+        return (row is not None
+                and self._lease_now() - row.get("last_renewed", 0)
+                <= self.lease_limit)
+
+    def _check_lease(self, txn: Transaction, target: Dict[str, Any],
+                     client: str, path: str, *,
+                     takeover: bool = False) -> None:
+        """Block-write admission: a file under construction by ANOTHER
+        client conflicts. Only a ``takeover`` op (append, which acquires
+        the lease itself via :meth:`lease_write`) may proceed once the
+        holder's lease expired; non-takeover block ops (add_block/
+        complete_block) never write under another client's inode — they
+        wait for the leader's recovery sweep to clear the holder, so an
+        expired lease can't silently admit two concurrent writers. Reads
+        go through the transaction cache (charge-free peek), so grouped
+        and sequential execution observe identical lease state."""
+        holder = target.get("client")
+        if not target.get("under_construction") or holder in (None, client):
+            return
+        if not takeover or self._lease_live(txn.peek("lease", (holder,))):
+            raise LeaseConflict(f"{path}: lease held by {holder!r}")
+
+    def renew_lease(self, *, client: str = "client") -> OpResult:
+        """Client heartbeat: one bounded-time lease-row write, exactly the
+        namenode liveness pattern of leader.py applied to writers."""
+        with Transaction(self.store, partition_hint=("lease", client),
+                         distribution_aware=self.dat) as txn:
+            txn.read("lease", (client,), EXCLUSIVE)
+            txn.write("lease", {"holder": client,
+                                "last_renewed": self._lease_now()})
+            cost = txn.commit()
+        return OpResult(None, cost)
+
+    def expired_lease_holders(self) -> List[str]:
+        """Holders whose lease outlived ``lease_limit`` liveness ticks —
+        the leader's lease-recovery work list."""
+        rows = self.store.table("lease").scan_all(
+            lambda r: not self._lease_live(r))
+        return sorted(r["holder"] for r in rows)
+
+    def lease_recover(self, holder: str) -> OpResult:
+        """Reclaim one dead client's lease (leader housekeeping; the lease
+        analogue of §6.2's subtree-lock reclaim): clear under-construction
+        state on every file the holder leased, drop its lease_path rows
+        (partition-pruned — lease_path is partitioned by holder), then
+        drop the lease row itself."""
+        with Transaction(self.store, partition_hint=("lease_path", holder),
+                         distribution_aware=self.dat) as txn:
+            lps = txn.ppis("lease_path", "holder", holder, EXCLUSIVE)
+            for lp in lps:
+                for row in txn.index_scan("inode", "id", lp["inode_id"],
+                                          EXCLUSIVE):
+                    if row.get("client") == holder:
+                        fixed = dict(row)
+                        fixed["under_construction"] = False
+                        fixed["client"] = None
+                        txn.write("inode", fixed)
+                txn.delete("lease_path", (lp["inode_id"],))
+            txn.delete("lease", (holder,))
+            cost = txn.commit()
+        return OpResult(len(lps), cost)
 
     def _resolve(self, txn: Transaction, comps: Sequence[str], *,
                  last_lock: str, lock_parent: bool = False,
@@ -436,9 +534,7 @@ class HopsFSOps:
         parent2 = dict(parent)
         parent2["mtime"] = next(self.clock)
         txn.write("inode", parent2)
-        txn.write("lease", {"holder": client,
-                            "last_renewed": next(self.clock)})
-        txn.write("lease_path", {"inode_id": fid, "holder": client})
+        self.lease_write(txn, client, fid)
         q = txn.peek("quota", (parent["id"],))
         qrow = dict(q) if q else {"inode_id": parent["id"],
                                   "ns_quota": -1, "ns_used": 0,
@@ -464,8 +560,34 @@ class HopsFSOps:
             cost = txn.commit()
         return OpResult(fid, cost)
 
-    def add_block(self, path: str, *, datanodes: Sequence[int] = (0, 1, 2)
-                  ) -> OpResult:
+    # -- block-write apply helpers, shared with the grouped WRITE path
+    # -- (the lease-ordered block path): every admission check (existence,
+    # -- lease conflict) precedes the first txn.write, and lease state is
+    # -- read through the charge-free txn.peek so grouped and sequential
+    # -- execution observe identical state
+    def add_block_apply(self, txn: Transaction,
+                        target: Optional[Dict[str, Any]], path: str, *,
+                        client: str = "client") -> int:
+        if target is None or target["is_dir"]:
+            raise FileNotFound(path)
+        self._check_lease(txn, target, client, path)
+        tables = (_PPIS_ADDBLK_EMPTY if target["size"] == 0
+                  else _PPIS_ADDBLK_FULL)
+        related = self._file_scan(txn, tables, target["id"], EXCLUSIVE)
+        blocks = related.get("block", [])
+        # finalize/inspect the penultimate block: 1 PK_r
+        prev_pk = (max(blocks, key=lambda b: b["index"])["block_id"],) \
+            if blocks else (-1,)
+        txn.read("block", prev_pk, SHARED)
+        bid = self.block_ids.next_id()
+        # only the block row is written here; the replica-under-
+        # construction rows appear when the datanode write pipeline
+        # starts (complete_block), matching Table 3's single PK_w
+        txn.write("block", make_block(bid, target["id"], len(blocks)))
+        return bid
+
+    def add_block(self, path: str, *,
+                  client: str = "client") -> OpResult:
         comps = split_path(path)
         with self._begin(self._hint_for(comps, parent=False)) as txn:
             rp = self._resolve(
@@ -474,48 +596,53 @@ class HopsFSOps:
                 aux=(("lease", lambda p, t:
                       ((t.get("client") or "client",) if t else None),
                       READ_COMMITTED),))
-            f = rp.target
-            if f is None or f["is_dir"]:
-                raise FileNotFound(path)
-            tables = (_PPIS_ADDBLK_EMPTY if f["size"] == 0
-                      else _PPIS_ADDBLK_FULL)
-            related = self._file_scan(txn, tables, f["id"], EXCLUSIVE)
-            blocks = related.get("block", [])
-            # finalize/inspect the penultimate block: 1 PK_r
-            prev_pk = (max(blocks, key=lambda b: b["index"])["block_id"],) \
-                if blocks else (-1,)
-            txn.read("block", prev_pk, SHARED)
-            bid = self.block_ids.next_id()
-            # only the block row is written here; the replica-under-
-            # construction rows appear when the datanode write pipeline
-            # starts (complete_block), matching Table 3's single PK_w
-            txn.write("block", make_block(bid, f["id"], len(blocks)))
+            bid = self.add_block_apply(txn, rp.target, path, client=client)
             cost = txn.commit()
         return OpResult(bid, cost)
 
-    def complete_block(self, path: str, block_id: int, *, size: int,
-                       datanodes: Sequence[int] = (0, 1, 2)) -> OpResult:
+    def complete_block_apply(self, txn: Transaction,
+                             target: Optional[Dict[str, Any]], path: str, *,
+                             block_id: int = -1, size: int,
+                             datanodes: Sequence[int] = (0, 1, 2),
+                             client: str = "client") -> None:
+        if target is None or target["is_dir"]:
+            raise FileNotFound(path)
+        self._check_lease(txn, target, client, path)
+        if block_id is None or block_id < 0:
+            # "the last allocated block" — lets trace records complete
+            # blocks whose ids were allocated at replay time
+            blocks = self._file_scan(txn, ("block",), target["id"],
+                                     EXCLUSIVE).get("block", [])
+            if not blocks:
+                raise FileNotFound(f"no block to complete in {path}")
+            block_id = max(blocks, key=lambda b: b["index"])["block_id"]
+        blk = txn.read("block", (block_id,), EXCLUSIVE)
+        if blk is None:
+            raise FileNotFound(f"block {block_id}")
+        blk = dict(blk)
+        blk["size"], blk["state"] = size, "COMPLETE"
+        txn.write("block", blk)
+        rucs = self._file_scan(txn, ("ruc",), target["id"],
+                               EXCLUSIVE)["ruc"]
+        for r in rucs:
+            if r["block_id"] == block_id:
+                txn.delete("ruc", (r["block_id"], r["datanode_id"]))
+        for dn in datanodes[:target["repl"]]:
+            txn.write("replica", make_replica(block_id, target["id"], dn))
+        f = dict(target)
+        f["size"] += size
+        txn.write("inode", f)
+        return None
+
+    def complete_block(self, path: str, block_id: int = -1, *, size: int,
+                       datanodes: Sequence[int] = (0, 1, 2),
+                       client: str = "client") -> OpResult:
         comps = split_path(path)
         with self._begin(self._hint_for(comps, parent=False)) as txn:
             rp = self._resolve(txn, comps, last_lock=EXCLUSIVE, path=path)
-            f = rp.target
-            if f is None:
-                raise FileNotFound(path)
-            blk = txn.read("block", (block_id,), EXCLUSIVE)
-            if blk is None:
-                raise FileNotFound(f"block {block_id}")
-            blk = dict(blk)
-            blk["size"], blk["state"] = size, "COMPLETE"
-            txn.write("block", blk)
-            rucs = self._file_scan(txn, ("ruc",), f["id"], EXCLUSIVE)["ruc"]
-            for r in rucs:
-                if r["block_id"] == block_id:
-                    txn.delete("ruc", (r["block_id"], r["datanode_id"]))
-            for dn in datanodes[:f["repl"]]:
-                txn.write("replica", make_replica(block_id, f["id"], dn))
-            f = dict(f)
-            f["size"] += size
-            txn.write("inode", f)
+            self.complete_block_apply(txn, rp.target, path,
+                                      block_id=block_id, size=size,
+                                      datanodes=datanodes, client=client)
             cost = txn.commit()
         return OpResult(None, cost)
 
@@ -701,27 +828,30 @@ class HopsFSOps:
             cost = txn.commit()
         return OpResult(None, cost)
 
+    def append_apply(self, txn: Transaction,
+                     target: Optional[Dict[str, Any]], path: str, *,
+                     client: str = "client") -> int:
+        if target is None or target["is_dir"]:
+            raise FileNotFound(path)
+        self._check_lease(txn, target, client, path, takeover=True)
+        tables = (_PPIS_READ_EMPTY if target["size"] == 0
+                  else _PPIS_READ_FULL)
+        self._file_scan(txn, tables, target["id"], EXCLUSIVE)
+        node = dict(target)
+        node["under_construction"], node["client"] = True, client
+        txn.write("inode", node)
+        self.lease_write(txn, client, node["id"])
+        return node["id"]
+
     def append_file(self, path: str, *, client: str = "client") -> OpResult:
         comps = split_path(path)
         with self._begin(self._hint_for(comps, parent=False)) as txn:
             rp = self._resolve(
                 txn, comps, last_lock=EXCLUSIVE, path=path,
                 aux=(("lease", lambda p, t: (client,), READ_COMMITTED),))
-            node = rp.target
-            if node is None or node["is_dir"]:
-                raise FileNotFound(path)
-            tables = (_PPIS_READ_EMPTY if node["size"] == 0
-                      else _PPIS_READ_FULL)
-            self._file_scan(txn, tables, node["id"], EXCLUSIVE)
-            node = dict(node)
-            node["under_construction"], node["client"] = True, client
-            txn.write("inode", node)
-            txn.write("lease", {"holder": client,
-                                "last_renewed": next(self.clock)})
-            txn.write("lease_path", {"inode_id": node["id"],
-                                     "holder": client})
+            fid = self.append_apply(txn, rp.target, path, client=client)
             cost = txn.commit()
-        return OpResult(node["id"], cost)
+        return OpResult(fid, cost)
 
     def rename_file(self, src: str, dst: str) -> OpResult:
         """mv of a FILE. Changing parent changes the composite PK (and the

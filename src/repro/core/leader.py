@@ -6,6 +6,14 @@ bounded number of ticks; the leader is the alive namenode with the smallest
 id. The leader runs housekeeping (replication manager, block-report load
 balancing, lease recovery).
 
+Client liveness rides the SAME logical clock: lease renewals (`lease`
+table, ``fs.HopsFSOps.renew_lease``) are stamped with ``now``, and a lease
+not renewed within the lease limit is expired — which is what
+``Namenode.recover_leases`` (leader-only housekeeping) reclaims, unblocking
+other writers' ``append``/``add_block``. Dead clients are thus detected
+exactly like dead namenodes: bounded heartbeat staleness against this
+clock.
+
 Time here is a logical clock advanced by the caller (the DES or the runtime
 driver), which makes the protocol deterministic and testable.
 """
@@ -18,6 +26,10 @@ from .transactions import Transaction
 
 
 class LeaderElection:
+    #: logical liveness clock — namenode heartbeats AND client lease
+    #: renewals are stamped against it (advanced by tick())
+    now: int = 0
+
     def __init__(self, store: MetadataStore, *, max_missed: int = 2):
         self.store = store
         self.max_missed = max_missed

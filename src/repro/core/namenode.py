@@ -160,6 +160,10 @@ class Namenode:
                  election: LeaderElection, **ops_kw):
         self.nn_id = nn_id
         self.election = election
+        # client leases are renewed/expired against the SAME logical clock
+        # the election uses, so client death is detected exactly like
+        # namenode death (bounded heartbeat staleness)
+        ops_kw.setdefault("lease_now", lambda: election.now)
         self.ops = HopsFSOps(store, nn_id,
                              is_nn_alive=election.is_alive, **ops_kw)
         self.subtree = SubtreeOps(self.ops)
@@ -176,6 +180,22 @@ class Namenode:
 
     def is_leader(self) -> bool:
         return self.election.leader() == self.nn_id
+
+    def recover_leases(self) -> int:
+        """Leader housekeeping (§3: "the leader runs ... lease recovery"):
+        reclaim every lease whose holder stopped renewing for longer than
+        the lease limit — clears under-construction state so another
+        client's append/add_block can proceed. Only the leader runs this,
+        mirroring §6.2's dead-namenode subtree-lock reclaim for clients.
+        Returns the number of leases reclaimed."""
+        if not self.alive or not self.is_leader():
+            return 0
+        reclaimed = 0
+        for holder in self.ops.expired_lease_holders():
+            res = self.ops.lease_recover(holder)
+            self.agg_cost.merge(res.cost)
+            reclaimed += 1
+        return reclaimed
 
     # -- registry-dispatched execution ---------------------------------
     def perform(self, op: str, *args, **kw) -> OpResult:
@@ -450,7 +470,13 @@ class Namenode:
         whole run shares that partition, so the DAT hint is exact).
         Execute phases apply in submission order, so grouped execution
         stays observably identical to sequential execution; everything
-        unresolvable falls back to the sequential path, in order."""
+        unresolvable falls back to the sequential path, in order.
+
+        Lease-ordered block writes (add_block/append/complete_block) ride
+        this same path: submission-order execute phases serialize each
+        file's block mutations behind its lease (block indices and
+        under-construction state stay exactly sequential) while distinct
+        files — distinct lease keys — batch freely in one transaction."""
         cache = self.ops.cache
         spec = REGISTRY[op]
         segment: List[Tuple[int, List[str], List[Tuple[int, str]], int,
@@ -517,7 +543,10 @@ class Namenode:
                   target) locks in GLOBAL root-down path order (§5 "Cyclic
                   Deadlocks" — two namenodes grouping overlapping paths
                   acquire in the same order), then the dependent aux reads
-                  (lease/quota) of the ops' lock phases.
+                  (lease/quota) of the ops' lock phases. Lease rows are
+                  only X-locked at write time, AFTER the holder's file
+                  inode lock — so lease-lock order is derived from the
+                  global inode-lock order and cannot deadlock either.
         EXECUTE — per-op ``group_apply`` (the same fs.py apply helpers the
                   sequential handlers run) in SUBMISSION order, on
                   cache-fresh rows, so ops in one group observe each
@@ -659,11 +688,18 @@ class Namenode:
 
 
 class NamenodeCluster:
-    """A fleet of stateless namenodes over one store, plus the election."""
+    """A fleet of stateless namenodes over one store, plus the election.
 
-    def __init__(self, store: MetadataStore, n_namenodes: int, **ops_kw):
+    ``auto_lease_recovery=True`` makes every heartbeat round also run the
+    leader's lease-recovery housekeeping (production behaviour); the
+    default keeps recovery explicit (:meth:`recover_leases`) so
+    state-equivalence tests control exactly when store state changes."""
+
+    def __init__(self, store: MetadataStore, n_namenodes: int, *,
+                 auto_lease_recovery: bool = False, **ops_kw):
         self.store = store
         self.election = LeaderElection(store)
+        self.auto_lease_recovery = auto_lease_recovery
         self.namenodes = [Namenode(store, i, self.election, **ops_kw)
                           for i in range(n_namenodes)]
         for nn in self.namenodes:
@@ -675,6 +711,13 @@ class NamenodeCluster:
         for nn in self.namenodes:
             if nn.alive:
                 self.election.heartbeat(nn.nn_id)
+        if self.auto_lease_recovery:
+            self.recover_leases()
+
+    def recover_leases(self) -> int:
+        """Run the leader's lease-recovery housekeeping once."""
+        ldr = self.leader()
+        return ldr.recover_leases() if ldr is not None else 0
 
     def kill(self, nn_id: int) -> None:
         self.namenodes[nn_id].alive = False

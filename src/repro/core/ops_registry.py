@@ -119,6 +119,14 @@ class OpSpec:
                                   Optional[Dict[str, Any]]],
                                  List[Tuple[str, Tuple[Any, ...], str]]]] \
         = None
+    # lease-ordered block writes (add_block/append/complete_block): ops
+    # sharing a lease_order key (the file path == the per-inode lease) must
+    # apply in submission order — block indices and under-construction
+    # state depend on it — while ops with DIFFERENT keys may batch freely
+    # across files. The batch planner keeps same-key ops in submission
+    # order through its stable (partition, type) sort instead of pinning
+    # them out of the groupable stream.
+    lease_order: Optional[Callable[[WorkloadOp], Any]] = None
 
     def __post_init__(self) -> None:
         assert self.paths in (0, 1, 2)
@@ -223,6 +231,9 @@ class OpRegistry:
     def group_mutable_ops(self) -> Tuple[str, ...]:
         return tuple(s.name for s in self if s.group_mutable)
 
+    def lease_ordered_ops(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self if s.lease_order is not None)
+
     def subtree_ops(self) -> frozenset:
         return frozenset(s.name for s in self if s.subtree)
 
@@ -239,6 +250,7 @@ def register_op(name: str, holder: str, method: str, *,
                 group_mutable: bool = False,
                 group_apply: Optional[Callable[..., Any]] = None,
                 group_aux: Optional[Callable[..., Any]] = None,
+                lease_order: Optional[Callable[..., Any]] = None,
                 registry: OpRegistry = REGISTRY,
                 replace: bool = False) -> OpSpec:
     """Convenience declaration helper (also the public extension point)."""
@@ -248,7 +260,8 @@ def register_op(name: str, holder: str, method: str, *,
                   hint=hint, batch_payload=batch_payload,
                   lease_read=lease_read, destructive=destructive,
                   group_mutable=group_mutable,
-                  group_apply=group_apply, group_aux=group_aux)
+                  group_apply=group_apply, group_aux=group_aux,
+                  lease_order=lease_order)
     return registry.register(spec, replace=replace)
 
 
@@ -311,6 +324,42 @@ def _aux_setattr(kw: Dict[str, Any], parent_id: int,
             ("quota", (parent_id,), READ_COMMITTED)]
 
 
+# lease-ordered block writes: the SAME fs.py apply helpers the sequential
+# add_block/append_file/complete_block handlers run after their lock phase
+def _apply_add_block(fsops: Any, txn: Any, ctx: GroupWriteCtx) -> Any:
+    return fsops.add_block_apply(txn, ctx.target, ctx.path, **ctx.kw)
+
+
+def _apply_append(fsops: Any, txn: Any, ctx: GroupWriteCtx) -> Any:
+    return fsops.append_apply(txn, ctx.target, ctx.path, **ctx.kw)
+
+
+def _apply_complete_block(fsops: Any, txn: Any, ctx: GroupWriteCtx) -> Any:
+    return fsops.complete_block_apply(txn, ctx.target, ctx.path, **ctx.kw)
+
+
+def _aux_lease_holder(kw: Dict[str, Any], parent_id: int,
+                      target: Optional[Dict[str, Any]]
+                      ) -> List[Tuple[str, Tuple[Any, ...], str]]:
+    """The dependent lease read of the block ops' lock phases: the file's
+    current holder for add_block/complete_block, the requesting client for
+    append (which is about to take the lease over)."""
+    client = (target.get("client") or kw.get("client", "client")) \
+        if target else kw.get("client", "client")
+    return [("lease", (client,), READ_COMMITTED)]
+
+
+def _aux_lease_client(kw: Dict[str, Any], parent_id: int,
+                      target: Optional[Dict[str, Any]]
+                      ) -> List[Tuple[str, Tuple[Any, ...], str]]:
+    return [("lease", (kw.get("client", "client"),), READ_COMMITTED)]
+
+
+def _lease_key_path(wop: WorkloadOp) -> Any:
+    """Per-inode lease-order key: the file path (one lease per file)."""
+    return wop.path
+
+
 register_op("create", "ops", "create",
             args=(("repl", 3), ("client", "client"), ("overwrite", False)),
             hint="parent", group_mutable=True, group_apply=_apply_create,
@@ -329,10 +378,20 @@ register_op("delete_file", "ops", "delete_file", hint="parent",
             destructive=True)
 register_op("rename_file", "ops", "rename_file", paths=2, hint="parent",
             destructive=True)
-register_op("add_block", "ops", "add_block")
+register_op("add_block", "ops", "add_block",
+            args=(("client", "client"),),
+            group_mutable=True, group_apply=_apply_add_block,
+            group_aux=_aux_lease_holder, lease_order=_lease_key_path)
 register_op("complete_block", "ops", "complete_block",
-            args=(("block_id", REQUIRED), ("size", REQUIRED)))
-register_op("append", "ops", "append_file", args=(("client", "client"),))
+            args=(("block_id", -1), ("size", REQUIRED),
+                  ("client", "client")),
+            group_mutable=True, group_apply=_apply_complete_block,
+            group_aux=_aux_lease_holder, lease_order=_lease_key_path)
+register_op("append", "ops", "append_file", args=(("client", "client"),),
+            group_mutable=True, group_apply=_apply_append,
+            group_aux=_aux_lease_client, lease_order=_lease_key_path)
+register_op("renew_lease", "ops", "renew_lease", paths=0,
+            args=(("client", "client"),))
 register_op("chmod_file", "ops", "chmod_file", args=(("perm", 0o640),),
             group_mutable=True, group_apply=_apply_setattr("perm"),
             group_aux=_aux_setattr)
@@ -376,6 +435,8 @@ register_op("block_report", "ops", "process_block_report", paths=0,
 _PERM_POOL = (0o644, 0o640, 0o755, 0o750, 0o700)
 _OWNER_POOL = tuple(f"user{i}" for i in range(8))
 _REPL_POOL = (1, 2, 3)
+#: sampled sizes for completed blocks (64 MiB HDFS default ± partials)
+_BLOCK_SIZE_POOL = (1 << 26, 1 << 25, 1 << 24, 1 << 20)
 
 MixBuilder = Callable[[Any, bool], WorkloadOp]
 
@@ -438,6 +499,14 @@ def _mix_append(ctx: Any, on_dir: bool) -> WorkloadOp:
     return WorkloadOp("append", ctx.live_file())
 
 
+def _mix_complete(ctx: Any, on_dir: bool) -> WorkloadOp:
+    # block ids are allocated at replay time, so trace records complete
+    # "the last allocated block" (block_id=-1) with a sampled size
+    return WorkloadOp("complete_block", ctx.live_file(),
+                      args={"block_id": -1,
+                            "size": ctx.rng.choice(_BLOCK_SIZE_POOL)})
+
+
 def _target_file_or_dir(op: str) -> MixBuilder:
     def build(ctx: Any, on_dir: bool) -> WorkloadOp:
         p = ctx.live_dir() if on_dir else ctx.live_file()
@@ -456,6 +525,7 @@ MIX_BINDINGS: Dict[str, MixBuilder] = {
     "set_owner": _mix_set_owner,
     "set_replication": _mix_set_replication,
     "append": _mix_append,
+    "complete": _mix_complete,
     "read": _mix_read,
     "ls": _target_file_or_dir("ls"),
     "stat": _target_file_or_dir("stat"),

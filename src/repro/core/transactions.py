@@ -160,7 +160,8 @@ class Transaction:
         rows = t.scan_index(index_col, value)
         self.cost.ppis += 1
         self._charge_rt([part])
-        return self._absorb_scan(tname, t, rows, lock, projection)
+        return self._absorb_scan(tname, t, rows, lock, projection,
+                                 match=lambda r: r.get(index_col) == value)
 
     def index_scan(self, tname: str, index_col: str, value: Any,
                    lock: str = READ_COMMITTED) -> List[Dict[str, Any]]:
@@ -169,7 +170,8 @@ class Transaction:
         rows = t.scan_index(index_col, value)
         self.cost.is_scans += 1
         self._charge_rt(range(t.n_partitions))
-        return self._absorb_scan(tname, t, rows, lock, None)
+        return self._absorb_scan(tname, t, rows, lock, None,
+                                 match=lambda r: r.get(index_col) == value)
 
     def full_scan(self, tname: str, pred: Callable[[Dict[str, Any]], bool]
                   ) -> List[Dict[str, Any]]:
@@ -177,7 +179,8 @@ class Transaction:
         rows = t.scan_all(pred)
         self.cost.fts += 1
         self._charge_rt(range(t.n_partitions))
-        return self._absorb_scan(tname, t, rows, READ_COMMITTED, None)
+        return self._absorb_scan(tname, t, rows, READ_COMMITTED, None,
+                                 match=pred)
 
     def scan_partition_pruned_pred(self, tname: str, pkey_value: Any,
                                    pred: Callable[[Dict[str, Any]], bool],
@@ -191,12 +194,19 @@ class Transaction:
         rows = t.scan_partition(part, pred)
         self.cost.ppis += 1
         self._charge_rt([part])
-        return self._absorb_scan(tname, t, rows, lock, None)
+        return self._absorb_scan(
+            tname, t, rows, lock, None,
+            match=lambda r: (t.partition_of(r[t.schema.partition_key])
+                             == part and pred(r)))
 
-    def _absorb_scan(self, tname: str, t: Table, rows, lock, projection):
+    def _absorb_scan(self, tname: str, t: Table, rows, lock, projection,
+                     match: Optional[Callable[[Dict[str, Any]], bool]]
+                     = None):
         out = []
+        seen: Set[Tuple[Any, ...]] = set()
         for row in rows:
             pk = pk_of(t.schema, row)
+            seen.add(pk)
             self.store.locks.acquire(self.txn_id, tname, pk, lock)
             self._row_op()
             key = (tname, pk)
@@ -210,6 +220,24 @@ class Transaction:
             if projection is None:
                 self.cache[key] = snap
             out.append({c: snap[c] for c in projection} if projection else snap)
+        # Read-your-writes overlay: rows INSERTED by this transaction are
+        # not in the store yet, so the store scan above cannot return them
+        # — but the real engine's scans see the transaction's own pending
+        # rows. Grouped write transactions rely on this: two add_blocks on
+        # one file in the same group must each see the other's block row
+        # exactly as committed sequential transactions would.
+        if match is not None and self.dirty:
+            for key in sorted(self.dirty, key=repr):
+                tn, pk = key
+                if tn != tname or pk in seen:
+                    continue
+                v = self.cache[key]
+                if v is _TOMBSTONE or not match(v):
+                    continue
+                self.store.locks.acquire(self.txn_id, tname, pk, lock)
+                self._row_op()
+                out.append({c: v[c] for c in projection}
+                           if projection else v)
         return out
 
     # ------------------------------------------------------------------

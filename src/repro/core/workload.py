@@ -62,6 +62,31 @@ SPOTIFY_TRACE_MIX: List[Tuple[str, float, float]] = [
     ("append",           0.2, 0.0),
 ]
 
+# Write-heavy block-layer mix (ingest-shaped: the paper's Spotify trace is
+# write-heavy AT THE BLOCK LAYER — every created file streams several
+# blocks through addBlock/complete before readers arrive). This is the
+# mix that exercises the lease-ordered grouped block-write path:
+# create/add_block/complete/append dominate, reads are the minority.
+# Same (op, weight_pct, fraction_on_directories) schema as TABLE1_MIX;
+# "complete" records carry block_id=-1 ("last allocated block") + a
+# sampled size, since block ids only exist at replay time.
+WRITE_HEAVY_MIX: List[Tuple[str, float, float]] = [
+    ("create",          14.0, 0.0),
+    ("add_block",       24.0, 0.0),
+    ("complete",        12.0, 0.0),
+    ("append",           8.0, 0.0),
+    ("read",            22.0, 0.0),
+    ("stat",             7.0, 0.25),
+    ("ls",               5.0, 0.95),
+    ("mkdirs",           2.5, 1.0),
+    ("set_permissions",  1.5, 0.25),
+    ("set_replication",  1.5, 0.0),
+    ("set_owner",        0.8, 1.0),
+    ("delete",           0.7, 0.03),
+    ("rename",           0.5, 0.0),
+    ("content_summary",  0.5, 0.5),
+]
+
 
 @dataclass
 class NamespaceSpec:

@@ -1,0 +1,313 @@
+"""Lease-ordered grouped block-write path (ISSUE 4 tentpole).
+
+Contract, mirroring what PR 3 asserted for the setattr path:
+  1. grouped execution of add_block/append/complete_block runs leaves the
+     store BYTE-IDENTICAL to sequential execution (single namenode
+     dump_state), conserves OpCost, and saves round trips;
+  2. same-file block ops never reorder — in the grouped executor (strict
+     submission order) and under the batch planner (lease-ordered free
+     dealing keeps submission order without pinning same-type runs);
+  3. leases gate block writes: a second client cannot write a file under
+     construction by a live holder; once the holder stops renewing, the
+     LEADER reclaims the lease against the shared liveness clock
+     (leader.py) and the second client's append succeeds;
+  4. the write-heavy mix drives batched_write_fraction far above the PR 3
+     read-mostly value (0.022) with fewer round trips than reactive.
+"""
+import pytest
+
+from repro.core import (BatchPlanner, DFSClient, LeaseConflict,
+                        MetadataStore, NamenodeCluster, OpCost,
+                        PlannedRequestPipeline, RequestPipeline, WorkloadOp,
+                        format_fs, materialize_namespace,
+                        namespace_snapshot)
+from repro.core.ops_registry import REGISTRY
+from repro.core.workload import (NamespaceSpec, SyntheticNamespace,
+                                 WRITE_HEAVY_MIX, make_spotify_trace)
+
+
+def _single_nn():
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    cluster = NamenodeCluster(store, 1)
+    nn = cluster.namenodes[0]
+    nn.ops.mkdirs("/a/b")
+    nn.ops.mkdirs("/a/c")
+    for i in range(4):
+        nn.ops.create(f"/a/b/f{i}")
+    return store, cluster, nn
+
+
+def _cluster(n_nn=2):
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    cluster = NamenodeCluster(store, n_nn)
+    cluster.namenodes[0].ops.mkdirs("/w")
+    return store, cluster
+
+
+def _block_indices(store, inode_id):
+    rows = store.table("block").scan_all(
+        lambda r: r["inode_id"] == inode_id)
+    return sorted(r["index"] for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# 1. grouped block writes == sequential execution, byte for byte
+# ---------------------------------------------------------------------------
+
+def test_grouped_block_writes_equal_sequential_state():
+    """Runs of add_block/append/complete_block share one transaction; ids,
+    sizes, block indices, ruc/replica rows and every other table must be
+    byte-identical to sequential execution (execute phases run in
+    submission order per file inside the group)."""
+    wops = ([WorkloadOp("add_block", f"/a/b/f{i % 4}") for i in range(8)]
+            + [WorkloadOp("append", f"/a/b/f{i}") for i in range(4)]
+            + [WorkloadOp("complete_block", f"/a/b/f{i % 2}",
+                          args={"block_id": -1, "size": 64 + i})
+               for i in range(4)]
+            + [WorkloadOp("add_block", "/a/b/f0"),
+               WorkloadOp("add_block", "/a/b/missing")])   # in-group error
+    store_b, _, nn_b = _single_nn()
+    out_b = nn_b.execute_batch(wops)
+    store_s, _, nn_s = _single_nn()
+    out_s = [nn_s._safe_exec(w) for w in wops]
+    assert store_b.dump_state() == store_s.dump_state()
+    assert [(o.ok, o.error) for o in out_b] == \
+           [(o.ok, o.error) for o in out_s]
+    # the grouped write path actually served the block ops
+    assert nn_b.batched_write_ops >= 12
+    assert [o.error for o in out_b].count("FileNotFound") == 1
+    # conserved accounting
+    agg = OpCost()
+    for o in out_b:
+        if o.ok:
+            agg.merge(o.result.cost)
+    assert agg.as_dict() == nn_b.agg_cost.as_dict()
+
+
+def test_grouped_block_writes_save_round_trips():
+    wops = [WorkloadOp("add_block", f"/a/b/f{i % 4}") for i in range(8)]
+    store_b, _, nn_b = _single_nn()
+    for o in nn_b.execute_batch(wops):
+        assert o.ok and o.batched
+    store_s, _, nn_s = _single_nn()
+    for w in wops:
+        assert nn_s._safe_exec(w).ok
+    assert nn_b.agg_cost.round_trips < nn_s.agg_cost.round_trips
+
+
+def test_same_file_block_ops_keep_submission_order_grouped():
+    """Ten add_blocks on ONE file in one grouped transaction must produce
+    indices 0..9 exactly — each op sees the blocks written by the ops
+    before it (read-your-writes inside the shared transaction)."""
+    store, _, nn = _single_nn()
+    fid = nn.ops.stat("/a/b/f0").value["id"]
+    out = nn.execute_batch([WorkloadOp("add_block", "/a/b/f0")
+                            for _ in range(10)])
+    assert all(o.ok and o.batched for o in out)
+    assert _block_indices(store, fid) == list(range(10))
+
+
+# ---------------------------------------------------------------------------
+# 2. planner: lease-ordered dealing never reorders same-file block ops
+# ---------------------------------------------------------------------------
+
+def test_planner_frees_same_type_block_runs():
+    """A run of add_blocks on one file is NOT pinned (lease-ordered free
+    dealing): it stays groupable, and the dealt order preserves
+    submission order."""
+    store, cluster = _cluster()
+    nn = cluster.namenodes[0]
+    nn.ops.create("/w/hot")
+    planner = BatchPlanner(cluster, batch_size=4)
+    wops = [WorkloadOp("add_block", "/w/hot") for _ in range(6)]
+    batches = planner.plan(wops)
+    assert not any(b.ordered for b in batches)
+    dealt = [i for b in batches for i in b.indices]
+    assert dealt == sorted(dealt)                  # submission order kept
+    assert planner.report.lease_ordered_ops == 6
+    assert planner.report.pinned_ops == 0
+
+
+def test_planner_pins_mixed_type_block_ops():
+    """Mixed block-op types on ONE file (append → add_block → complete)
+    would be reordered by the type sort, so they pin to submission order;
+    block ops on OTHER files stay free."""
+    store, cluster = _cluster()
+    nn = cluster.namenodes[0]
+    nn.ops.create("/w/mixed")
+    nn.ops.create("/w/other")
+    planner = BatchPlanner(cluster, batch_size=4)
+    wops = [
+        WorkloadOp("append", "/w/mixed"),                       # 0 pinned
+        WorkloadOp("add_block", "/w/mixed"),                    # 1 pinned
+        WorkloadOp("complete_block", "/w/mixed",
+                   args={"block_id": -1, "size": 10}),          # 2 pinned
+        WorkloadOp("add_block", "/w/other"),                    # 3 free
+    ]
+    batches = planner.plan(wops)
+    pinned = {i for b in batches if b.ordered for i in b.indices}
+    assert pinned == {0, 1, 2}
+    ordered = [i for b in batches if b.ordered for i in b.indices]
+    assert ordered == sorted(ordered)
+    dealt = sorted(i for b in batches for i in b.indices)
+    assert dealt == list(range(len(wops)))
+
+
+def test_planned_same_file_block_ops_never_reorder():
+    """End to end through the planned pipeline on one namenode: a hot file
+    growing by 20 blocks (interleaved with other files' writes and reads)
+    ends with indices exactly 0..19 — no duplicate or skipped index, which
+    is what any reordering of same-file add_blocks would produce."""
+    store, cluster = _cluster(1)
+    nn = cluster.namenodes[0]
+    nn.ops.create("/w/hot")
+    for i in range(4):
+        nn.ops.create(f"/w/cold{i}")
+    hot_id = nn.ops.stat("/w/hot").value["id"]
+    trace = []
+    for i in range(20):
+        trace.append(WorkloadOp("add_block", "/w/hot"))
+        trace.append(WorkloadOp("add_block", f"/w/cold{i % 4}"))
+        trace.append(WorkloadOp("read", f"/w/cold{i % 4}"))
+    stats = PlannedRequestPipeline(cluster, batch_size=8).run(trace)
+    assert stats.failed == 0
+    assert stats.batched_write_fraction > 0
+    assert _block_indices(store, hot_id) == list(range(20))
+    for i in range(4):
+        cid = nn.ops.stat(f"/w/cold{i}").value["id"]
+        assert _block_indices(store, cid) == list(range(5))
+
+
+# ---------------------------------------------------------------------------
+# 3. leases: conflict, renewal, leader-driven recovery
+# ---------------------------------------------------------------------------
+
+def test_lease_conflict_blocks_second_writer():
+    store, cluster = _cluster()
+    dfs = DFSClient(cluster)
+    dfs.create("/w/f", client="c1")
+    with pytest.raises(LeaseConflict):
+        dfs.append("/w/f", client="c2")
+    with pytest.raises(LeaseConflict):
+        dfs.add_block("/w/f", client="c2")
+    # the holder itself writes freely
+    assert dfs.add_block("/w/f", client="c1") > 0
+
+
+def test_leader_reclaims_dead_client_lease():
+    """The ISSUE scenario: a client dies (stops heartbeating), the leader
+    reclaims its lease against the shared liveness clock, and a second
+    client's append succeeds."""
+    store, cluster = _cluster()
+    dfs = DFSClient(cluster)
+    fid = dfs.create("/w/f", client="c1")
+    dfs.add_block("/w/f", client="c1")
+    limit = cluster.namenodes[0].ops.lease_limit
+    # while c1 renews, its lease survives recovery and still conflicts
+    for _ in range(limit + 2):
+        cluster.tick()
+        dfs.renew_lease(client="c1")
+    assert cluster.recover_leases() == 0
+    with pytest.raises(LeaseConflict):
+        dfs.append("/w/f", client="c2")
+    # c1 dies: stops renewing; the lease expires after > lease_limit ticks
+    for _ in range(limit + 2):
+        cluster.tick()
+    # bare expiry does NOT silently admit non-takeover block writes —
+    # add_block never writes under another client's inode; only the
+    # leader's sweep (or an append takeover) clears the holder
+    with pytest.raises(LeaseConflict):
+        dfs.add_block("/w/f", client="c2")
+    # a non-leader never reclaims
+    assert cluster.namenodes[1].recover_leases() == 0
+    assert cluster.recover_leases() >= 1
+    assert store.table("lease").get(("c1",)) is None
+    row = store.table("inode").scan_index("id", fid)[0]
+    assert row["under_construction"] is False and row["client"] is None
+    # the second client takes over, and now holds the lease itself
+    assert dfs.append("/w/f", client="c2") == fid
+    with pytest.raises(LeaseConflict):
+        dfs.add_block("/w/f", client="c1")
+
+
+def test_append_takes_over_expired_lease_without_recovery():
+    """append acquires the lease itself, so it may take over an EXPIRED
+    lease before the leader's sweep runs — and the takeover re-fences the
+    file under the new holder."""
+    store, cluster = _cluster()
+    dfs = DFSClient(cluster)
+    dfs.create("/w/f", client="c1")
+    for _ in range(cluster.namenodes[0].ops.lease_limit + 2):
+        cluster.tick()                    # c1 never renews
+    assert dfs.append("/w/f", client="c2") > 0
+    with pytest.raises(LeaseConflict):
+        dfs.add_block("/w/f", client="c1")
+    # c2 now owns the lease row and the lease_path row
+    assert store.table("lease").get(("c2",)) is not None
+    assert dfs.add_block("/w/f", client="c2") > 0
+
+
+def test_auto_lease_recovery_on_tick():
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    cluster = NamenodeCluster(store, 2, auto_lease_recovery=True)
+    cluster.namenodes[0].ops.mkdirs("/w")
+    dfs = DFSClient(cluster)
+    dfs.create("/w/f", client="c1")
+    for _ in range(cluster.namenodes[0].ops.lease_limit + 2):
+        cluster.tick()
+    assert store.table("lease").get(("c1",)) is None
+    assert dfs.append("/w/f", client="c2") > 0
+
+
+# ---------------------------------------------------------------------------
+# 4. the write-heavy mix through the three execution modes
+# ---------------------------------------------------------------------------
+
+def test_write_heavy_mix_batches_block_writes():
+    """The ISSUE acceptance bar: on the write-heavy mix the planned
+    pipeline serves a batched_write_fraction STRICTLY above the PR 3
+    read-mostly value (0.022), with fewer DB round trips than the
+    reactive pipeline, and all three modes converge to the same logical
+    namespace."""
+    ns_ref = SyntheticNamespace(NamespaceSpec(), n_dirs=16, files_per_dir=4)
+    trace = make_spotify_trace(ns_ref, 400, seed=5, mix=WRITE_HEAVY_MIX)
+
+    def build():
+        store = MetadataStore(n_datanodes=4)
+        format_fs(store)
+        cluster = NamenodeCluster(store, 4)
+        ns = SyntheticNamespace(NamespaceSpec(), n_dirs=16,
+                                files_per_dir=4)
+        materialize_namespace(cluster.namenodes[0], ns)
+        return store, cluster
+
+    store_seq, cl = build()
+    seq = RequestPipeline(cl, batch_size=1).run(trace)
+    store_rea, cl = build()
+    rea = RequestPipeline(cl, batch_size=16).run(trace)
+    store_pln, cl = build()
+    pipe = PlannedRequestPipeline(cl, batch_size=16)
+    pln = pipe.run(trace)
+    assert pln.ok + pln.failed == len(trace)
+    assert pln.failed <= seq.failed
+    assert pln.batched_write_fraction > 0.022           # the ISSUE bar
+    assert pln.total_cost.round_trips < rea.total_cost.round_trips
+    snap = namespace_snapshot(store_seq)
+    assert snap == namespace_snapshot(store_rea)
+    assert snap == namespace_snapshot(store_pln)
+    rep = pipe.plan_report
+    assert rep is not None and rep.lease_ordered_ops > 0
+
+
+def test_block_ops_registered_group_mutable_and_lease_ordered():
+    for name in ("add_block", "append", "complete_block"):
+        spec = REGISTRY[name]
+        assert spec.group_mutable and spec.group_apply is not None
+        assert spec.lease_order is not None
+        assert spec.lease_order(WorkloadOp(name, "/w/f")) == "/w/f"
+    # lease ordering is a registry view, like the other derived tables
+    assert set(REGISTRY.lease_ordered_ops()) == {
+        "add_block", "append", "complete_block"}
