@@ -14,7 +14,11 @@ JSON. Two layers are exercised:
     and that batched == sequential final state — on the Spotify mix AND
     on the write-heavy block-layer mix (`WRITE_HEAVY_MIX`), where the
     lease-ordered grouped block-write path carries the batched share
-    (`batched_write_fraction`).
+    (`batched_write_fraction`). Four execution modes per mix: sequential,
+    reactive, planned (closed-loop: response-piggybacked client hint
+    cache + adaptive windows) and planned+concurrent (per-window worker
+    fleet with lease-ordered dealing), with client hint-cache hit-rate
+    telemetry.
 
   PYTHONPATH=src python -m benchmarks.trace_replay [--quick] \
       [--out BENCH_throughput.json] [--namenodes 1,4,16] [--batch-size 16]
@@ -73,13 +77,16 @@ def replay_des(trace, profiles, *, n_namenodes: int, n_ndb: int = 8,
 def functional_batching_report(trace, *, n_namenodes: int = 4,
                                batch_size: int = 16,
                                n_dirs: int = 20) -> Dict:
-    """Run the *functional* pipeline three ways on identical stores —
+    """Run the *functional* pipeline four ways on identical stores —
     sequential (batch=1), reactive (FIFO batches, opportunistic grouping),
-    and planned (client-side columnar batch planner: partition-aligned,
-    type-sorted batches with grouped reads AND writes) — and report
-    measured round-trip savings, batched fractions, local round-trip
-    share, and final-state equivalence. Ties the DES's collapse model to
-    real transactions; driven through the typed `DFSClient` facade."""
+    planned (closed-loop client-side batch planner: partition-aligned,
+    type-sorted batches with grouped reads AND writes, response-warmed
+    client hint cache, adaptive windows) and planned+concurrent (one
+    worker per namenode within each window barrier) — and report measured
+    round-trip savings, batched fractions, local round-trip share,
+    client hint-cache hit rates, and final-state equivalence. Ties the
+    DES's collapse model to real transactions; driven through the typed
+    `DFSClient` facade."""
     from repro.core import PlannedRequestPipeline
 
     def build():
@@ -95,22 +102,45 @@ def functional_batching_report(trace, *, n_namenodes: int = 4,
     seq = DFSClient(cluster).run_trace(trace, batch_size=1)
     store_rea, cluster = build()
     rea = DFSClient(cluster).run_trace(trace, batch_size=batch_size)
+    # start the adaptive window small relative to the trace so the closed
+    # loop actually cycles (plan -> execute -> absorb -> replan) several
+    # times; the controller grows it from there
+    window0 = batch_size * 8
     store_pln, cluster = build()
-    planned_pipe = PlannedRequestPipeline(cluster, batch_size=batch_size)
+    planned_pipe = PlannedRequestPipeline(cluster, batch_size=batch_size,
+                                          window=window0)
     pln = planned_pipe.run(trace)
     plan = planned_pipe.plan_report
+    store_cc, cluster = build()
+    cc_pipe = PlannedRequestPipeline(cluster, batch_size=batch_size,
+                                     concurrent=True, window=window0)
+    cc = cc_pipe.run(trace)
+    cc_plan = cc_pipe.plan_report
     # multi-NN dispatch differs between runs, so physical ids and per-NN
     # mtime clocks differ; compare the logical namespace instead (the
     # strict single-NN full-state equality lives in the test suite)
     snap_seq = namespace_snapshot(store_seq)
     state_equal = (snap_seq == namespace_snapshot(store_rea)
-                   == namespace_snapshot(store_pln))
+                   == namespace_snapshot(store_pln)
+                   == namespace_snapshot(store_cc))
     rt_seq = seq.total_cost.round_trips
     rt_rea = rea.total_cost.round_trips
     rt_pln = pln.total_cost.round_trips
+    rt_cc = cc.total_cost.round_trips
 
     def pct(saved, base):
         return round(100 * (1 - saved / base), 2) if base else 0.0
+
+    def hint_telemetry(rep, cache):
+        return {
+            "client_hits": rep.client_hits if rep else 0,
+            "fallback_hits": rep.client_fallback_hits if rep else 0,
+            "misses": rep.client_misses if rep else 0,
+            "hit_rate": round(rep.hint_hit_rate, 3) if rep else 0.0,
+            "stale_overwrites": cache.stale_overwrites,
+            "invalidations": cache.invalidations,
+            "entries": cache.entries,
+        }
 
     return {
         "batch_size": batch_size,
@@ -132,15 +162,36 @@ def functional_batching_report(trace, *, n_namenodes: int = 4,
             "sequential": round(seq.local_rt_fraction, 3),
             "reactive": round(rea.local_rt_fraction, 3),
             "planned": round(pln.local_rt_fraction, 3),
+            "planned_concurrent": round(cc.local_rt_fraction, 3),
         },
         "planner": {
             "planned_ops": plan.planned_ops if plan else 0,
             "pinned_ops": plan.pinned_ops if plan else 0,
             "lease_ordered_ops": plan.lease_ordered_ops if plan else 0,
             "windows": plan.windows if plan else 0,
+            "window_sizes": list(plan.window_sizes) if plan else [],
             "kernel_launches": plan.kernel_launches if plan else 0,
             "predicted_local_rt_share":
                 round(plan.predicted_local_share, 3) if plan else 0.0,
+        },
+        # closed-loop client hint-cache telemetry (deterministic planned
+        # run): hits on the response-warmed client cache vs fallback hits
+        # on the merged namenode caches vs misses
+        "hint_cache": hint_telemetry(plan, planned_pipe.client_cache),
+        # the concurrent planned mode: per-window worker fleet, lifted
+        # mutation pinning (lease-ordered dealing), same final namespace
+        "planned_concurrent": {
+            "ok": cc.ok,
+            "failed": cc.failed,
+            "round_trips": rt_cc,
+            "vs_reactive_savings_pct": pct(rt_cc, rt_rea),
+            "batched_fraction": round(cc.batched_fraction, 3),
+            "batched_read_fraction": round(cc.batched_read_fraction, 3),
+            "batched_write_fraction": round(cc.batched_write_fraction, 3),
+            "lease_ordered_ops":
+                cc_plan.lease_ordered_ops if cc_plan else 0,
+            "pinned_ops": cc_plan.pinned_ops if cc_plan else 0,
+            "hint_cache": hint_telemetry(cc_plan, cc_pipe.client_cache),
         },
         "state_matches_sequential": state_equal,
     }
@@ -236,6 +287,12 @@ def bench_trace_replay(quick: bool = False) -> List[Row]:
                  f"{w['planned_vs_reactive_savings_pct']}% fewer RTs vs "
                  f"reactive (state match: "
                  f"{w['state_matches_sequential']})"))
+    wc = w["planned_concurrent"]
+    rows.append(("trace_replay.planned_concurrent", 0.0,
+                 f"concurrent planned: batched writes "
+                 f"{wc['batched_write_fraction']}, "
+                 f"{wc['vs_reactive_savings_pct']}% fewer RTs vs reactive, "
+                 f"hint hit rate {wc['hint_cache']['hit_rate']}"))
     return rows
 
 
@@ -274,6 +331,16 @@ def main() -> None:
           f"planned {w['planned_vs_reactive_savings_pct']}% fewer RTs vs "
           f"reactive, state_matches_sequential="
           f"{w['state_matches_sequential']}")
+    wc = w["planned_concurrent"]
+    print(f"planned+concurrent (write-heavy): batched writes "
+          f"{wc['batched_write_fraction']} "
+          f"(deterministic {w['batched_write_fraction']}), "
+          f"{wc['vs_reactive_savings_pct']}% fewer RTs vs reactive, "
+          f"client hint hit rate {wc['hint_cache']['hit_rate']} "
+          f"(stale {wc['hint_cache']['stale_overwrites']})")
+    hc = f["hint_cache"]
+    print(f"closed loop (spotify): client hint hit rate {hc['hit_rate']}, "
+          f"windows {f['planner']['window_sizes']}")
     print(f"wrote {args.out}")
 
 

@@ -6,8 +6,8 @@ when code moves or is renamed.
   PYTHONPATH=src python scripts/docs_lint.py      (or: make docs-lint)
 
 Checks:
-  * README.md, docs/ARCHITECTURE.md, docs/API.md, docs/BENCHMARKS.md exist
-    and are non-trivial;
+  * README.md, docs/ARCHITECTURE.md, docs/API.md, docs/BENCHMARKS.md and
+    docs/HINTS.md exist and are non-trivial;
   * every `path`-looking backtick reference into src/ tests/ benchmarks/
     examples/ docs/ scripts/ points at a real file or directory;
   * every dotted backtick reference anchored in this repo's code — a
@@ -16,12 +16,17 @@ Checks:
     or a symbol of any `repro.core` submodule (`BatchedHopsFSSim`) —
     resolves to a live object. Dotted tokens anchored NOWHERE in the repo
     (example variables like `dfs.batch`, version numbers) are prose, not
-    code references, and are skipped.
+    code references, and are skipped;
+  * the top-level keys documented in docs/BENCHMARKS.md's "Output schema"
+    block match the actual top-level keys of BENCH_throughput.json, both
+    directions — the benchmark artifact and its documentation cannot
+    drift apart silently.
 """
 from __future__ import annotations
 
 import dataclasses
 import importlib
+import json
 import pkgutil
 import re
 import sys
@@ -34,7 +39,7 @@ sys.path.insert(0, str(ROOT))            # benchmarks/, scripts/
 sys.path.insert(0, str(ROOT / "src"))    # repro
 
 DOCS = ["README.md", "docs/ARCHITECTURE.md", "docs/API.md",
-        "docs/BENCHMARKS.md"]
+        "docs/BENCHMARKS.md", "docs/HINTS.md"]
 MIN_BYTES = 1500
 REF_PREFIXES = ("src/", "tests/", "benchmarks/", "examples/", "docs/",
                 "scripts/")
@@ -190,10 +195,46 @@ def check_doc(path: Path) -> list:
     return errors
 
 
+#: top-level key lines of the jsonc schema block: exactly two spaces of
+#: indent, a quoted identifier, a colon
+_SCHEMA_KEY = re.compile(r'^  "([A-Za-z_][A-Za-z0-9_]*)":', re.M)
+
+
+def check_benchmarks_schema(doc: Path, artifact: Path) -> list:
+    """Cross-check the documented `BENCH_throughput.json` top-level schema
+    against the committed artifact: every documented key must exist in the
+    artifact, and every artifact key must be documented."""
+    if not doc.exists():
+        return []                      # the missing doc is reported above
+    if not artifact.exists():
+        return [f"{artifact.name}: missing (docs/BENCHMARKS.md documents "
+                f"its schema; regenerate with `make bench`)"]
+    text = doc.read_text()
+    m = re.search(r"```jsonc\n(.*?)```", text, re.S)
+    if m is None:
+        return [f"{doc.relative_to(ROOT)}: no ```jsonc schema block to "
+                f"cross-check against {artifact.name}"]
+    documented = set(_SCHEMA_KEY.findall(m.group(1)))
+    try:
+        actual = set(json.loads(artifact.read_text()))
+    except Exception as e:
+        return [f"{artifact.name}: unparseable ({e})"]
+    errors = []
+    for k in sorted(documented - actual):
+        errors.append(f"{doc.relative_to(ROOT)}: documents top-level key "
+                      f"`{k}` absent from {artifact.name}")
+    for k in sorted(actual - documented):
+        errors.append(f"{artifact.name}: top-level key `{k}` undocumented "
+                      f"in {doc.relative_to(ROOT)}'s schema block")
+    return errors
+
+
 def main() -> int:
     errors = []
     for rel in DOCS:
         errors.extend(check_doc(ROOT / rel))
+    errors.extend(check_benchmarks_schema(ROOT / "docs/BENCHMARKS.md",
+                                          ROOT / "BENCH_throughput.json"))
     if errors:
         print("docs-lint: FAIL")
         for e in errors:

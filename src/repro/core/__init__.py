@@ -17,8 +17,9 @@ Public surface:
   HDFSNamenode / HDFSHACluster — the HDFS baseline (§2.1)
   profile_ops / HopsFSSim / HDFSSim — measured-cost DES (§7)
 """
-from .batch_planner import (BatchPlanner, MultiCacheResolver, PlanReport,
-                            PlannedBatch, PlannedRequestPipeline)
+from .batch_planner import (BatchPlanner, HintResolver, MultiCacheResolver,
+                            PlanReport, PlannedBatch,
+                            PlannedRequestPipeline, WindowController)
 from .dfs_client import (BlockLocation, ConcatSummary, ContentSummary,
                          DFSClient, DeleteSummary, FileStatus,
                          TruncateSummary)
@@ -28,7 +29,8 @@ from .fs import (FSError, FileAlreadyExists, FileNotFound, HopsFSOps,
 from .hdfs_baseline import HDFSHACluster, HDFSNamenode
 from .hint_cache import InodeHintCache
 from .leader import LeaderElection
-from .middleware import (CallContext, compose, failover, subtree_retry)
+from .middleware import (CallContext, compose, failover, subtree_retry,
+                         txn_retry)
 from .namenode import (BATCHABLE_READ_OPS, Client, GROUP_MUTABLE_OPS,
                        Namenode, NamenodeCluster, OpOutcome, PipelineStats,
                        PlanHint, RequestPipeline, materialize_namespace,
@@ -45,14 +47,15 @@ __all__ = [
     "MetadataStore", "Transaction", "OpCost", "HopsFSOps", "SubtreeOps",
     "TreeNode", "NamenodeCluster", "Namenode", "Client", "LeaderElection",
     "RequestPipeline", "PipelineStats", "OpOutcome", "BATCHABLE_READ_OPS",
-    "GROUP_MUTABLE_OPS", "PlanHint", "BatchPlanner", "MultiCacheResolver",
-    "PlannedBatch", "PlannedRequestPipeline", "PlanReport",
+    "GROUP_MUTABLE_OPS", "PlanHint", "BatchPlanner", "HintResolver",
+    "MultiCacheResolver", "PlannedBatch", "PlannedRequestPipeline",
+    "PlanReport", "WindowController",
     "materialize_namespace", "namespace_snapshot",
     "REGISTRY", "OpRegistry", "OpSpec", "ArgSpec", "REQUIRED",
     "register_op", "WorkloadOp",
     "DFSClient", "FileStatus", "BlockLocation", "ContentSummary",
     "DeleteSummary", "TruncateSummary", "ConcatSummary",
-    "CallContext", "compose", "failover", "subtree_retry",
+    "CallContext", "compose", "failover", "subtree_retry", "txn_retry",
     "HDFSNamenode", "HDFSHACluster", "InodeHintCache", "format_fs",
     "split_path", "run_with_retry", "FSError", "FileNotFound",
     "FileAlreadyExists", "LeaseConflict", "SubtreeLockedError",

@@ -1,4 +1,4 @@
-"""Client-side columnar batch planner + planned request pipeline.
+"""Client-side columnar batch planner + the closed-loop planned pipeline.
 
 The paper's throughput headline (Fig 7) comes from *distribution-aware,
 batched* transactions (§2.2, §5.1). The reactive pipeline only discovers
@@ -28,14 +28,26 @@ side of the metadata path (the λFS lesson — see PAPERS.md):
      distribution-aware transactions land on their coordinator's node
      group (raising the local round-trip share, §7.7).
 
+The pipeline is **closed-loop** (see ``docs/HINTS.md``): the client's hint
+view is its OWN :class:`~repro.core.hint_cache.InodeHintCache`, warmed
+from the ``(parent_id, name) -> inode_id`` resolutions namenode responses
+piggyback (``OpResult.hints``) and invalidated on destructive ops; the
+merged namenode caches (:class:`MultiCacheResolver`) are only the
+cold-start FALLBACK. Each window is planned, executed, and absorbed before
+the next window is planned, and a :class:`WindowController` feedback loop
+resizes the planning window from the observed conflict-pin rate and
+round-trips-per-op — the window is a control variable, not a constant.
+
 Planned execution guarantees *final-state* equivalence with sequential
-execution (asserted by tests/test_batched_pipeline.py); per-op result
-streams may differ for reads reordered across mutations, exactly as with
-any concurrent client population. Deterministic mode executes the plan in
-order, so window-scoped conflict analysis suffices; concurrent mode
-interleaves windows across worker threads, so there EVERY mutation is
-pinned onto one ordered queue (reads, which cannot change final state,
-still deal partition-aligned to all workers).
+execution (asserted by tests/test_batched_pipeline.py and
+tests/test_closed_loop_pipeline.py); per-op result streams may differ for
+reads reordered across mutations, exactly as with any concurrent client
+population. Deterministic mode executes the plan in order; concurrent mode
+runs one worker per alive namenode WITHIN each window (windows are
+barriers, so window-scoped conflict analysis stays sound), with
+lease-ordered same-key runs kept whole in one batch so same-file block
+writes can never interleave across workers while distinct-file block
+writes group concurrently.
 """
 from __future__ import annotations
 
@@ -44,21 +56,25 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
+from .hint_cache import InodeHintCache, absorb_response
 from .namenode import (NamenodeCluster, OpOutcome, PipelineStats, PlanHint,
                        RequestPipeline)
 from .ops_registry import REGISTRY, WorkloadOp
 from .store import StoreError
+from .tables import split_path
 from .workload import ColumnarTrace, lower_trace
 
-__all__ = ["BatchPlanner", "MultiCacheResolver", "PlannedBatch",
-           "PlannedRequestPipeline", "PlanReport"]
+__all__ = ["BatchPlanner", "HintResolver", "MultiCacheResolver",
+           "PlannedBatch", "PlannedRequestPipeline", "PlanReport",
+           "WindowController"]
 
 
 class MultiCacheResolver:
-    """The client's hint view: the merge of every alive namenode's inode
-    hint cache, probed side-effect-free (no LRU churn, no skewed hit/miss
-    counters on the namenodes). In HopsFS terms this is the client-side
-    cache the namenodes' piggybacked hints would populate."""
+    """The merged view of every alive namenode's inode hint cache, probed
+    side-effect-free (no LRU churn, no skewed hit/miss counters on the
+    namenodes). Since the closed-loop pipeline this is the cold-start
+    FALLBACK behind the client's own response-warmed cache
+    (:class:`HintResolver`) — not the primary resolution path."""
 
     def __init__(self, caches: Sequence[Any]):
         self.caches = [c for c in caches if c is not None]
@@ -75,15 +91,95 @@ class MultiCacheResolver:
         return None
 
 
+class HintResolver:
+    """The closed-loop client hint view: the client's OWN cache (warmed by
+    response piggybacking, ``OpResult.hints``) first, a fallback resolver
+    (the merged namenode caches) only on a miss. Probe-level telemetry:
+    ``hits`` (client cache), ``fallback_hits`` (namenode caches vouched),
+    ``misses`` (nobody knew — the op stays unresolved or resolves
+    server-side)."""
+
+    def __init__(self, cache: InodeHintCache, fallback: Any = None):
+        self.cache = cache
+        self.fallback = fallback
+        self.hits = 0
+        self.fallback_hits = 0
+        self.misses = 0
+
+    def peek(self, parent_id: int, name: str) -> Optional[int]:
+        v = self.cache.peek(parent_id, name)
+        if v is not None:
+            self.hits += 1
+            return v
+        if self.fallback is not None:
+            v = self.fallback.peek(parent_id, name)
+            if v is not None:
+                self.fallback_hits += 1
+                return v
+        self.misses += 1
+        return None
+
+
+class WindowController:
+    """Feedback controller for the planning-window size (AIMD-flavoured
+    hill climb). After each window executes, :meth:`observe` is fed the
+    window's op count, conflict-pin count, and measured DB round trips:
+
+      * a high pin rate means the window is wasting reordering freedom on
+        conflicting mutations — SHRINK (less speculative lookahead, lower
+        client-observed latency);
+      * otherwise, if round-trips-per-op held steady or improved, the
+        batching amortization is paying — GROW toward ``max_window``;
+      * a regressing round-trip rate backs off.
+
+    Deterministic (no randomness), clamped to [min_window, max_window],
+    so planned runs stay reproducible. The same controller drives the
+    DES mirror (``cluster_sim.BatchedHopsFSSim(adaptive=True)``)."""
+
+    def __init__(self, base: int, *, min_window: int, max_window: int,
+                 pin_shrink: float = 0.35, factor: int = 2,
+                 rt_slack: float = 1.05):
+        self.window = max(1, base)
+        self.min_window = max(1, min_window)
+        self.max_window = max(self.min_window, max_window)
+        self.pin_shrink = pin_shrink
+        self.factor = max(2, factor)
+        self.rt_slack = rt_slack
+        self._last_rt_per_op: Optional[float] = None
+        self.history: List[int] = [self.window]
+
+    def observe(self, ops: int, pinned: int, round_trips: int) -> int:
+        if ops <= 0:
+            return self.window
+        pin_rate = pinned / ops
+        rt_per_op = round_trips / ops
+        if pin_rate > self.pin_shrink:
+            self.window = max(self.min_window, self.window // self.factor)
+        elif (self._last_rt_per_op is None
+              or rt_per_op <= self._last_rt_per_op * self.rt_slack):
+            self.window = min(self.max_window, self.window * self.factor)
+        else:
+            self.window = max(self.min_window, self.window // self.factor)
+        self._last_rt_per_op = rt_per_op
+        self.history.append(self.window)
+        return self.window
+
+
 @dataclass
 class PlannedBatch:
     """One dealt batch: trace indices, their client-side resolutions, the
     namenode slot the dominant partition routes to, and whether the batch
-    is order-pinned (conflicting mutations: must run in plan order)."""
+    is order-pinned (conflicting mutations: must run in plan order).
+    Lease-ordered same-key runs are never split across batches, so a batch
+    is always an atomic unit of per-file block-write ordering; ``mutates``
+    marks batches carrying any mutation — concurrent workers never steal
+    those, so a partition's writes always land on its home namenode
+    (warm hint cache, stable grouped-write engagement)."""
     indices: List[int]
     hints: List[Optional[PlanHint]]
     nn_slot: int
     ordered: bool = False
+    mutates: bool = False
 
 
 @dataclass
@@ -92,25 +188,45 @@ class PlanReport:
     ``predicted_total`` come from the kernel's per-component partitions:
     the share of an op's own row accesses expected to land on its
     coordinator's node group — the client-side forecast of the measured
-    ``local_rt`` split (§7.7)."""
+    ``local_rt`` split (§7.7). The ``client_*`` fields are the closed-loop
+    hint telemetry: probe-level hits on the client's own response-warmed
+    cache vs fallback hits on the merged namenode caches vs misses, plus
+    staleness evidence (absorbed hints contradicting cached ids, and
+    client-side invalidations on destructive ops)."""
     ops: int = 0
     planned_ops: int = 0        # ops dealt with a client-side resolution
     pinned_ops: int = 0         # mutations kept in submission order
     lease_ordered_ops: int = 0  # block writes kept FREE under lease order:
                                 # same-file collisions that would have
                                 # pinned, held in submission order by the
-                                # stable (partition, type) sort instead
+                                # stable (partition, type, i) sort instead
     windows: int = 0
     batches: int = 0
     kernel_launches: int = 0    # fused phash_chain calls that succeeded
     partitions_seen: Set[int] = field(default_factory=set)
     predicted_local: int = 0
     predicted_total: int = 0
+    # closed-loop client hint-cache telemetry (probe-level)
+    client_hits: int = 0
+    client_fallback_hits: int = 0
+    client_misses: int = 0
+    client_stale: int = 0          # absorbed hints contradicting cached ids
+    client_invalidations: int = 0  # destructive-op invalidations
+    window_sizes: List[int] = field(default_factory=list)
 
     @property
     def predicted_local_share(self) -> float:
         return (self.predicted_local / self.predicted_total
                 if self.predicted_total else 0.0)
+
+    @property
+    def hint_hit_rate(self) -> float:
+        """Share of resolver probes answered by the CLIENT's own cache —
+        the closed-loop win: >0 means responses, not namenode-cache reads,
+        are resolving paths."""
+        probes = self.client_hits + self.client_fallback_hits \
+            + self.client_misses
+        return self.client_hits / probes if probes else 0.0
 
 
 def _chain_partitions(ct: ColumnarTrace, n_partitions: int
@@ -142,37 +258,62 @@ class BatchPlanner:
     ``window`` ops are planned at a time (default: enough for several
     batches per alive namenode); planning never moves an op across a
     window boundary, which bounds both reordering distance and the
-    columnar working set.
+    columnar working set. Under ``adaptive=True`` the window is live: the
+    pipeline reports each executed window back through
+    :meth:`observe_window` and the :class:`WindowController` resizes it.
+
+    ``client_cache`` closes the loop: resolution probes hit the client's
+    own response-warmed cache first (:class:`HintResolver`), with the
+    merged namenode caches (:class:`MultiCacheResolver`) as fallback.
+    Without one, the planner degrades to the PR-3 behaviour of reading
+    namenode caches directly.
     """
 
     def __init__(self, cluster: NamenodeCluster, *, batch_size: int = 16,
                  window: Optional[int] = None,
-                 pin_all_mutations: bool = False):
+                 pin_all_mutations: bool = False,
+                 client_cache: Optional[InodeHintCache] = None,
+                 adaptive: bool = False):
         self.cluster = cluster
         self.batch_size = max(1, batch_size)
         n_slots = max(1, len(cluster.alive_namenodes()))
         self.n_slots = n_slots
-        self.window = window or self.batch_size * n_slots * 8
-        # conflict pinning is window-scoped, which is sound only when the
-        # plan executes in order (one thread). Concurrent execution
-        # interleaves windows, so there every mutation is pinned — they
-        # all flow through ONE ordered queue while reads (which cannot
-        # change final state) still deal partition-aligned.
+        base = window or self.batch_size * n_slots * 8
+        self.window = base
+        self.controller: Optional[WindowController] = (
+            WindowController(base, min_window=self.batch_size,
+                             max_window=base * 4) if adaptive else None)
+        # pin_all_mutations survives as an explicit conservative mode (and
+        # for A/B tests); the closed-loop pipeline no longer needs it in
+        # concurrent mode — windows are execution barriers there, so
+        # window-scoped conflict analysis is sound (see
+        # PlannedRequestPipeline).
         self.pin_all_mutations = pin_all_mutations
+        self.client_cache = client_cache
+        self._resolver: Optional[HintResolver] = (
+            HintResolver(client_cache) if client_cache is not None else None)
+        # the cache persists across runs (and is shared with a DFSClient),
+        # so per-run telemetry must be DELTAS against its lifetime
+        # counters at planner construction
+        self._stale0 = client_cache.stale_overwrites \
+            if client_cache is not None else 0
+        self._inv0 = client_cache.invalidations \
+            if client_cache is not None else 0
         self.report = PlanReport()
 
     # -- conflict pinning ----------------------------------------------
     @staticmethod
     def _mutation_paths(wop: WorkloadOp, spec: Any
                        ) -> List[Tuple[str, ...]]:
-        out = [tuple(c for c in wop.path.split("/") if c)]
-        if spec is not None and spec.paths == 2:
-            p2 = wop.path2 if wop.path2 is not None else wop.path + ".mv"
-            out.append(tuple(c for c in p2.split("/") if c))
-        return out
+        if spec is None:
+            return [tuple(split_path(wop.path))]
+        # OpSpec.path_args applies rename's implicit ".mv" destination —
+        # the one canonical place that rule lives
+        return [tuple(split_path(p)) for p in spec.path_args(wop)]
 
     def _pin_conflicts(self, wops: Sequence[WorkloadOp],
-                       idxs: Sequence[int]) -> Set[int]:
+                       idxs: Sequence[int]
+                       ) -> Tuple[Set[int], Set[int], Dict[int, Any]]:
         """Pin every mutation whose path collides with another mutation's
         path in the window — equality, or prefix in either direction (a
         ``mkdirs`` below a path another op creates/deletes must not cross
@@ -187,7 +328,12 @@ class BatchPlanner:
         same-file ops in submission order (same file ⇒ same hint
         partition and same type), so they can batch with block writes to
         other files instead of being exiled to the ordered queue. Any
-        mixed-type or mixed-key collision pins conservatively."""
+        mixed-type or mixed-key collision pins conservatively.
+
+        Returns (pinned, lease_freed, lease_key_of): the pinned set, the
+        ops freed under the lease exception, and each freed op's lease
+        key — the deal never splits a same-key run across batches, which
+        is what makes the exception safe under concurrent execution."""
         muts: List[Tuple[int, Any, List[Tuple[str, ...]]]] = []
         for i in idxs:
             spec = REGISTRY.get(wops[i].op)
@@ -212,18 +358,19 @@ class BatchPlanner:
                     pref = p[:k]
                     prefix_count[pref] = prefix_count.get(pref, 0) + 1
         pinned: Set[int] = set()
+        lease_freed: Set[int] = set()
+        lease_key_of: Dict[int, Any] = {}
         for i, spec, paths in muts:
             # unknown/0-path ops cannot be reasoned about; destructive ops
             # (delete/rename/truncate/concat) must never be hopped over by
             # a read that the trace issued before them: keep in order.
-            # pin_all_mutations (concurrent execution) pins every mutation
-            # — window-scoped conflict analysis cannot see across windows
-            # that interleave on worker threads.
+            # pin_all_mutations (explicit conservative mode) pins every
+            # mutation.
             if self.pin_all_mutations or spec is None or spec.paths == 0 \
                     or spec.destructive:
                 pinned.add(i)
                 continue
-            lease_freed = False
+            freed = False
             for p in paths:
                 if prefix_count.get(p, 0) > 0 \
                         or any(p[:k] in path_count
@@ -234,84 +381,167 @@ class BatchPlanner:
                     pairs = ops_on_path[p]
                     if len(pairs) == 1 and spec.lease_order is not None \
                             and next(iter(pairs))[1] is not None:
-                        lease_freed = True      # same-file, same-key run
+                        freed = True            # same-file, same-key run
                         continue
                     pinned.add(i)
                     break
-            if lease_freed and i not in pinned:
-                self.report.lease_ordered_ops += 1
-        return pinned
+            if freed and i not in pinned:
+                lease_freed.add(i)
+                lease_key_of[i] = spec.lease_order(wops[i])
+        return pinned, lease_freed, lease_key_of
 
     # -- planning -------------------------------------------------------
-    def plan(self, wops: Sequence[WorkloadOp]) -> List[PlannedBatch]:
+    def plan_window(self, wops: Sequence[WorkloadOp], lo: int, hi: int
+                    ) -> List[PlannedBatch]:
+        """Plan ONE window of the trace (global indices [lo, hi)). The
+        closed-loop pipeline calls this per window — executing and
+        absorbing response hints between calls — so each window resolves
+        against the freshest client cache state."""
         n_partitions = self.cluster.store.n_partitions
-        resolver = MultiCacheResolver.of_cluster(self.cluster)
+        fallback = MultiCacheResolver.of_cluster(self.cluster)
+        if self._resolver is not None:
+            self._resolver.fallback = fallback
+            resolver: Any = self._resolver
+        else:
+            resolver = fallback
         batches: List[PlannedBatch] = []
-        self.report.ops += len(wops)
-        for lo in range(0, len(wops), self.window):
-            hi = min(lo + self.window, len(wops))
-            window = list(range(lo, hi))
-            ct = lower_trace([wops[i] for i in window], resolver)
-            # _sigs: the kernel's path-equality probe, no consumer here yet
-            comp_parts, hint_parts, _sigs, used_kernel = _chain_partitions(
-                ct, n_partitions)
-            if used_kernel:
-                self.report.kernel_launches += 1
-            pinned = self._pin_conflicts(wops, window)
-            # ops whose chain did NOT resolve client-side stay in
-            # submission order too — an unresolved read (or create) may
-            # target a path another op in this window creates, and
-            # hopping over that op would spuriously fail it. Unresolved
-            # ops cannot group anyway, so ordering them costs nothing.
-            for k, i in enumerate(window):
-                if not ct.resolved[k]:
-                    pinned.add(i)
-            hints: Dict[int, Optional[PlanHint]] = {}
-            parts: Dict[int, int] = {}
-            n_groups = self.cluster.store.n_groups
-            for k, i in enumerate(window):
-                parts[i] = int(hint_parts[k])
-                self.report.partitions_seen.add(parts[i])
-                if ct.resolved[k]:
-                    hints[i] = PlanHint(pks=ct.pks[k],
-                                        target_id=ct.target_ids[k],
-                                        hint_id=int(ct.hint_ids[k]))
-                    self.report.planned_ops += 1
-                    # client-side locality forecast: which of this op's
-                    # component rows share the coordinator's node group
-                    d = int(ct.depths[k])
-                    coord_g = parts[i] % n_groups
-                    self.report.predicted_local += sum(
-                        1 for j in range(d)
-                        if int(comp_parts[k, j]) % n_groups == coord_g)
-                    self.report.predicted_total += d
-                else:
-                    hints[i] = None
-            type_of = {i: int(ct.type_ids[k])
-                       for k, i in enumerate(window)}
-            # free ops: partition-aligned, type-sorted, submission-stable
-            free = [i for i in window if i not in pinned]
-            free.sort(key=lambda i: (parts[i], type_of[i], i))
-            for c in range(0, len(free), self.batch_size):
-                chunk = free[c:c + self.batch_size]
-                slot = parts[chunk[0]] % self.n_slots
-                batches.append(PlannedBatch(
-                    indices=chunk, hints=[hints[i] for i in chunk],
-                    nn_slot=slot))
-            # pinned mutations LAST, strictly in submission order: free
-            # reads of a window never spuriously fail against a
-            # destructive op the trace issued later (a read the trace
-            # issued after the delete may now succeed instead — benign,
-            # final state is unaffected by reads)
-            pin_order = [i for i in window if i in pinned]
-            self.report.pinned_ops += len(pin_order)
-            for c in range(0, len(pin_order), self.batch_size):
-                chunk = pin_order[c:c + self.batch_size]
-                batches.append(PlannedBatch(
-                    indices=chunk, hints=[hints[i] for i in chunk],
-                    nn_slot=0, ordered=True))
-            self.report.windows += 1
+        self.report.ops += hi - lo
+        window = list(range(lo, hi))
+        ct = lower_trace([wops[i] for i in window], resolver)
+        # _sigs: the kernel's path-equality probe, no consumer here yet
+        comp_parts, hint_parts, _sigs, used_kernel = _chain_partitions(
+            ct, n_partitions)
+        if used_kernel:
+            self.report.kernel_launches += 1
+        pinned, lease_freed, lease_key_of = self._pin_conflicts(wops, window)
+        # ops whose chain did NOT resolve client-side stay in
+        # submission order too — an unresolved read (or create) may
+        # target a path another op in this window creates, and
+        # hopping over that op would spuriously fail it. Unresolved
+        # ops cannot group anyway, so ordering them costs nothing.
+        for k, i in enumerate(window):
+            if not ct.resolved[k]:
+                pinned.add(i)
+                lease_freed.discard(i)
+        self.report.lease_ordered_ops += len(lease_freed)
+        hints: Dict[int, Optional[PlanHint]] = {}
+        parts: Dict[int, int] = {}
+        n_groups = self.cluster.store.n_groups
+        for k, i in enumerate(window):
+            parts[i] = int(hint_parts[k])
+            self.report.partitions_seen.add(parts[i])
+            if ct.resolved[k]:
+                hints[i] = PlanHint(pks=ct.pks[k],
+                                    target_id=ct.target_ids[k],
+                                    hint_id=int(ct.hint_ids[k]))
+                self.report.planned_ops += 1
+                # client-side locality forecast: which of this op's
+                # component rows share the coordinator's node group
+                d = int(ct.depths[k])
+                coord_g = parts[i] % n_groups
+                self.report.predicted_local += sum(
+                    1 for j in range(d)
+                    if int(comp_parts[k, j]) % n_groups == coord_g)
+                self.report.predicted_total += d
+            else:
+                hints[i] = None
+        type_of = {i: int(ct.type_ids[k])
+                   for k, i in enumerate(window)}
+        # free ops: partition-aligned, type-sorted, submission-stable.
+        # Lease-freed ops are anchored at their key's FIRST submission
+        # index, so one file's block-write run is contiguous in the deal
+        # order even when another same-partition file's ops interleave
+        # with it in the trace — without the anchor, the cut-extension
+        # below could not keep such a run whole (its pieces could land in
+        # batches routed to different slots and execute concurrently).
+        # Reordering across distinct keys is safe: freed ops collide only
+        # within their own key, and within a key the i tiebreak keeps
+        # submission order.
+        anchor: Dict[int, int] = {}
+        first_of_key: Dict[Any, int] = {}
+        for i in sorted(lease_freed):
+            k = lease_key_of[i]
+            first_of_key.setdefault(k, i)
+            anchor[i] = first_of_key[k]
+        free = [i for i in window if i not in pinned]
+        free.sort(key=lambda i: (parts[i], type_of[i],
+                                 anchor.get(i, i), i))
+        c = 0
+        while c < len(free):
+            end = min(c + self.batch_size, len(free))
+            # never cut inside a lease-ordered same-key run: all block
+            # writes to one file land in ONE (possibly oversized) batch,
+            # executed by one namenode in submission order — so
+            # concurrent workers (and work stealing) can never interleave
+            # same-file block writes, while distinct files still deal to
+            # distinct batches and run concurrently
+            while 0 < end < len(free) and free[end - 1] in lease_freed \
+                    and free[end] in lease_freed \
+                    and lease_key_of[free[end - 1]] \
+                    == lease_key_of[free[end]]:
+                end += 1
+            chunk = free[c:end]
+            c = end
+            slot = parts[chunk[0]] % self.n_slots
+            mutates = any(
+                (s := REGISTRY.get(wops[i].op)) is None or not s.read_only
+                for i in chunk)
+            batches.append(PlannedBatch(
+                indices=chunk, hints=[hints[i] for i in chunk],
+                nn_slot=slot, mutates=mutates))
+        # pinned mutations LAST, strictly in submission order: free
+        # reads of a window never spuriously fail against a
+        # destructive op the trace issued later (a read the trace
+        # issued after the delete may now succeed instead — benign,
+        # final state is unaffected by reads)
+        pin_order = [i for i in window if i in pinned]
+        self.report.pinned_ops += len(pin_order)
+        for c in range(0, len(pin_order), self.batch_size):
+            chunk = pin_order[c:c + self.batch_size]
+            batches.append(PlannedBatch(
+                indices=chunk, hints=[hints[i] for i in chunk],
+                nn_slot=0, ordered=True))
+        self.report.windows += 1
+        self.report.window_sizes.append(hi - lo)
         self.report.batches += len(batches)
+        self._refresh_client_telemetry()
+        return batches
+
+    def _refresh_client_telemetry(self) -> None:
+        """Copy the resolver's probe counters (per-planner, so per-run)
+        and the cache's staleness counters (per-run DELTAS — the cache
+        outlives runs) into the report."""
+        if self._resolver is not None:
+            self.report.client_hits = self._resolver.hits
+            self.report.client_fallback_hits = self._resolver.fallback_hits
+            self.report.client_misses = self._resolver.misses
+        if self.client_cache is not None:
+            self.report.client_stale = \
+                self.client_cache.stale_overwrites - self._stale0
+            self.report.client_invalidations = \
+                self.client_cache.invalidations - self._inv0
+
+    def observe_window(self, *, ops: int, pinned: int,
+                       round_trips: int) -> int:
+        """Close the feedback loop after a window executed (and its hints
+        were absorbed): the controller resizes the live window from the
+        observed pin rate and measured round trips per op (no-op on a
+        fixed window), and the client telemetry snapshot is refreshed so
+        the final window's absorptions are counted too."""
+        self._refresh_client_telemetry()
+        if self.controller is not None:
+            self.window = self.controller.observe(ops, pinned, round_trips)
+        return self.window
+
+    def plan(self, wops: Sequence[WorkloadOp]) -> List[PlannedBatch]:
+        """Plan a whole trace at the current (fixed) window size — the
+        open-loop entry point, kept for direct planner use and tests. The
+        closed-loop pipeline drives :meth:`plan_window` instead."""
+        batches: List[PlannedBatch] = []
+        for lo in range(0, len(wops), self.window):
+            batches.extend(
+                self.plan_window(wops, lo, min(lo + self.window,
+                                               len(wops))))
         return batches
 
 
@@ -322,22 +552,58 @@ class PlannedRequestPipeline(RequestPipeline):
     sees maximal groupable runs (reads AND group-mutable writes) and its
     shared transactions land on their coordinator's node group.
 
+    The run loop is **closed-loop per window**: plan one window against
+    the client's own hint cache, execute its batches, absorb the
+    response-piggybacked hints (and invalidate on destructive ops), let
+    the :class:`WindowController` resize the window, then plan the next.
+    Windows are therefore execution BARRIERS, which is what makes
+    window-scoped conflict analysis sound in concurrent mode — conflicts
+    cannot span windows because no two windows are ever in flight at once.
+
     ``concurrent=False`` executes batches in plan order (deterministic);
     ``concurrent=True`` runs one worker per alive namenode over per-slot
-    queues — order-pinned batches all live on one queue, preserving their
-    relative order. Ops on a namenode that dies mid-batch fail over to the
-    survivors exactly like the reactive pipeline (§7.6.1)."""
+    queues WITHIN each window — order-pinned batches all live on one
+    queue, preserving their relative order, and same-file block-write runs
+    are never split across batches (lease order), so distinct-file block
+    writes group concurrently while same-path collisions stay ordered.
+    Ops on a namenode that dies mid-batch fail over to the survivors
+    exactly like the reactive pipeline (§7.6.1)."""
 
     def __init__(self, cluster: NamenodeCluster, *, batch_size: int = 16,
-                 concurrent: bool = False, window: Optional[int] = None):
+                 concurrent: bool = False, window: Optional[int] = None,
+                 client_cache: Optional[InodeHintCache] = None,
+                 adaptive: bool = True):
         super().__init__(cluster, batch_size=batch_size,
                          concurrent=concurrent)
         self.window = window
+        self.adaptive = adaptive
+        #: the client-side hint cache, persistent across run() calls (and
+        #: shareable with a DFSClient so facade calls warm it too)
+        self.client_cache = (client_cache if client_cache is not None
+                             else InodeHintCache())
         self.planner: Optional[BatchPlanner] = None
 
     @property
     def plan_report(self) -> Optional[PlanReport]:
         return self.planner.report if self.planner else None
+
+    # -- closing the loop ----------------------------------------------
+    def _absorb_window(self, wops: Sequence[WorkloadOp],
+                       outcomes: Sequence[Optional[OpOutcome]],
+                       lo: int, hi: int) -> int:
+        """Absorb the executed window's piggybacked hints into the client
+        cache (the shared :func:`~repro.core.hint_cache.absorb_response`
+        rule: invalidate-on-destructive per op, then warm), and return
+        the window's measured DB round trips for the controller."""
+        round_trips = 0
+        for i in range(lo, hi):
+            oc = outcomes[i]
+            if oc is None or not oc.ok:
+                continue
+            round_trips += oc.result.cost.round_trips
+            absorb_response(self.client_cache, wops[i],
+                            REGISTRY.get(wops[i].op), oc.result.hints)
+        return round_trips
 
     def run(self, wops: Sequence[WorkloadOp]) -> PipelineStats:
         import time
@@ -347,8 +613,9 @@ class PlannedRequestPipeline(RequestPipeline):
         self.planner = BatchPlanner(self.cluster,
                                     batch_size=self.batch_size,
                                     window=self.window,
-                                    pin_all_mutations=self.concurrent)
-        batches = self.planner.plan(wops)
+                                    client_cache=self.client_cache,
+                                    adaptive=self.adaptive)
+        planner = self.planner
         outcomes: List[Optional[OpOutcome]] = [None] * len(wops)
         residual: deque = deque()      # ops orphaned by namenode deaths
         rlock = threading.Lock()
@@ -381,30 +648,41 @@ class PlannedRequestPipeline(RequestPipeline):
                 n_batches[0] += 1
             return not died
 
-        t0 = time.perf_counter()
-        if not self.concurrent:
-            for batch in batches:
-                alive = self.cluster.alive_namenodes()
-                if not alive:
-                    break
-                run_batch(alive[batch.nn_slot % len(alive)], batch)
-        else:
+        def run_window(batches: List[PlannedBatch]) -> None:
+            if not self.concurrent:
+                for batch in batches:
+                    alive = self.cluster.alive_namenodes()
+                    if not alive:
+                        return
+                    run_batch(alive[batch.nn_slot % len(alive)], batch)
+                return
             alive = self.cluster.alive_namenodes()
+            if not alive:
+                return
+            # free batches fan out across one worker per namenode;
+            # order-pinned batches run AFTER the workers join, exactly
+            # where deterministic mode runs them (last in the window) —
+            # pinned mutations therefore observe the same pre-state in
+            # both modes
+            free_batches = [b for b in batches if not b.ordered]
             queues: List[deque] = [deque() for _ in alive]
             qlock = threading.Lock()
-            for batch in batches:
+            for batch in free_batches:
                 queues[batch.nn_slot % len(alive)].append(batch)
 
             def pull(k: int) -> Optional[PlannedBatch]:
                 with qlock:
                     if queues[k]:
                         return queues[k].popleft()
-                    # steal UNORDERED work, longest donor first — ordered
-                    # batches (all on slot 0) are never stolen, but a
-                    # pinned tail there must not blind us to other donors
+                    # steal READ-ONLY work, longest donor first —
+                    # mutating batches stay on their home slot so a
+                    # partition's writes always hit the namenode whose
+                    # hint cache is warm for it (grouped-write engagement
+                    # matches deterministic mode); a non-stealable tail
+                    # must not blind us to other donors
                     for j in sorted(range(len(queues)),
                                     key=lambda q: -len(queues[q])):
-                        if queues[j] and not queues[j][-1].ordered:
+                        if queues[j] and not queues[j][-1].mutates:
                             return queues[j].pop()
                     return None
 
@@ -427,16 +705,44 @@ class PlannedRequestPipeline(RequestPipeline):
                 w.start()
             for w in workers:
                 w.join()
-        # failover pass: re-deal orphaned ops to the survivors, reactive
-        while residual:
-            alive = self.cluster.alive_namenodes()
-            if not alive:
+            for batch in batches:
+                if not batch.ordered:
+                    continue
+                alive = self.cluster.alive_namenodes()
+                if not alive:
+                    return
+                run_batch(alive[batch.nn_slot % len(alive)], batch)
+
+        def drain_residual() -> None:
+            # failover pass: re-deal orphaned ops to survivors, reactive
+            while residual:
+                alive = self.cluster.alive_namenodes()
+                if not alive:
+                    return
+                idxs = [residual.popleft()
+                        for _ in range(min(self.batch_size,
+                                           len(residual)))]
+                run_batch(alive[n_batches[0] % len(alive)],
+                          PlannedBatch(indices=idxs,
+                                       hints=[None] * len(idxs),
+                                       nn_slot=0))
+
+        t0 = time.perf_counter()
+        lo = 0
+        while lo < len(wops):
+            if not self.cluster.alive_namenodes():
                 break
-            idxs = [residual.popleft()
-                    for _ in range(min(self.batch_size, len(residual)))]
-            run_batch(alive[n_batches[0] % len(alive)],
-                      PlannedBatch(indices=idxs,
-                                   hints=[None] * len(idxs), nn_slot=0))
+            hi = min(lo + planner.window, len(wops))
+            pinned_before = planner.report.pinned_ops
+            batches = planner.plan_window(wops, lo, hi)
+            run_window(batches)
+            drain_residual()
+            rts = self._absorb_window(wops, outcomes, lo, hi)
+            planner.observe_window(
+                ops=hi - lo,
+                pinned=planner.report.pinned_ops - pinned_before,
+                round_trips=rts)
+            lo = hi
         wall = time.perf_counter() - t0
         for i, oc in enumerate(outcomes):
             if oc is None:

@@ -473,13 +473,27 @@ class BatchedHopsFSSim(HopsFSSim):
     rule — and each pulled batch drains the largest bucket, so namenodes
     see partition-aligned, type-pure batches whose validation exchanges
     collapse maximally.
+
+    ``adaptive=True`` mirrors the planner's :class:`~repro.core.\
+batch_planner.WindowController` feedback loop at DES scale: the pull cap
+    is a live window resized after every completed batch from the batch's
+    unplannable-op share (the DES analogue of the conflict-pin rate) and
+    its executed round trips per op — growth while amortization pays,
+    backoff when it regresses.
     """
 
     def __init__(self, *, batch_size: int = 16, planned: bool = False,
-                 **kw):
+                 adaptive: bool = False, **kw):
         super().__init__(**kw)
         self.batch_size = max(1, batch_size)
         self.planned = planned
+        if adaptive:
+            from .batch_planner import WindowController
+            self.controller = WindowController(
+                self.batch_size, min_window=max(1, self.batch_size // 4),
+                max_window=self.batch_size * 4)
+        else:
+            self.controller = None
         self.queue: deque = deque()        # (WorkloadOp, done_cb)
         self.buckets: Dict[object, deque] = {}
         self._bucket_seqs: Dict[object, deque] = {}  # enqueue seq per item
@@ -542,8 +556,11 @@ class BatchedHopsFSSim(HopsFSSim):
     PULL_AGING = 4
 
     def _pull_batch(self):
+        # the live pull cap: fixed batch_size, or the adaptive window
+        cap = (self.controller.window if self.controller is not None
+               else self.batch_size)
         if not self.planned:
-            k = min(self.batch_size, len(self.queue))
+            k = min(cap, len(self.queue))
             return [self.queue.popleft() for _ in range(k)]
         if not self.buckets:
             return []
@@ -558,7 +575,7 @@ class BatchedHopsFSSim(HopsFSSim):
             key = max(self.buckets, key=lambda b: len(self.buckets[b]))
         dq = self.buckets[key]
         sq = self._bucket_seqs[key]
-        k = min(self.batch_size, len(dq))
+        k = min(cap, len(dq))
         out = [dq.popleft() for _ in range(k)]
         for _ in range(k):
             sq.popleft()
@@ -600,6 +617,8 @@ class BatchedHopsFSSim(HopsFSSim):
             self.nn_handlers[nn].acquire(with_handler)
 
         def with_handler():
+            rts = self._merged_rts(batch)
+
             def finish():
                 self.nn_handlers[nn].release()
                 self._inflight[nn] -= 1
@@ -607,12 +626,22 @@ class BatchedHopsFSSim(HopsFSSim):
                 self.batches_executed += 1
                 if len(batch) > 1:
                     self.batched_ops += len(batch)
+                if self.controller is not None:
+                    # feedback: unplannable ops are the DES analogue of
+                    # the planner's conflict pins, executed round trips
+                    # the amortization signal
+                    unplanned = sum(
+                        1 for op, _ in batch
+                        if (s := REGISTRY.get(op.op)) is None
+                        or not (s.batchable or s.group_mutable))
+                    self.controller.observe(len(batch), unplanned,
+                                            len(rts))
                 for _, done_cb in batch:
                     self.sim.after(p.client_nn_rtt / 2, done_cb)
                 self._dispatch()
             self.nn_cpu[nn].submit(
                 p.nn_cpu_per_op * len(batch),
-                lambda: self._exec_rts(self._merged_rts(batch), finish))
+                lambda: self._exec_rts(rts, finish))
         self.sim.after(p.client_nn_rtt / 2, after_rpc)
 
     # partition count used to group same-type reads — mirrors the default

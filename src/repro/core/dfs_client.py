@@ -27,8 +27,9 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
 
 from .fs import (FSError, FileAlreadyExists, FileNotFound, LeaseConflict,
                  OpResult, SubtreeLockedError)
+from .hint_cache import InodeHintCache, absorb_response
 from .middleware import (CallContext, Handler, Middleware, compose, failover,
-                         subtree_retry)
+                         subtree_retry, txn_retry)
 from .namenode import (Client, Namenode, NamenodeCluster, PipelineStats,
                        RequestPipeline)
 from .ops_registry import REGISTRY, WorkloadOp
@@ -133,10 +134,18 @@ class DFSClient:
                          on_failover=self._reset_sticky),
                 subtree_retry(retries=subtree_retries,
                               backoff=subtree_backoff),
+                txn_retry(),     # §7.5: timed-out txns aborted, re-run
             ]
         self.middleware: List[Middleware] = list(middleware)
         self._handler: Handler = compose(self.middleware, self._terminal)
         self.retries = 0
+        #: the client-side inode hint cache (§5.1 applied to the CLIENT):
+        #: warmed from the (parent_id, name) -> inode_id resolutions every
+        #: namenode response piggybacks (``OpResult.hints``), invalidated
+        #: on destructive ops, and handed to the planned pipeline so the
+        #: batch planner resolves against responses this client actually
+        #: saw instead of reading namenode caches — see docs/HINTS.md
+        self.hint_cache = InodeHintCache()
 
     # -- plumbing -------------------------------------------------------
     def _reset_sticky(self, ctx: CallContext) -> None:
@@ -151,6 +160,14 @@ class DFSClient:
         ctx.attempts += 1
         return nn.invoke(ctx.wop)
 
+    def _absorb(self, wop: WorkloadOp, res: OpResult) -> None:
+        """Close the hint loop for one response: invalidate what a
+        destructive op removed/moved, then warm the client cache from the
+        piggybacked resolutions (the shared
+        :func:`~repro.core.hint_cache.absorb_response` rule)."""
+        absorb_response(self.hint_cache, wop, REGISTRY.get(wop.op),
+                        res.hints)
+
     def call(self, op: str, path: str = "", path2: Optional[str] = None,
              **args: Any) -> OpResult:
         """Execute any registered op through the middleware stack.  The
@@ -158,9 +175,12 @@ class DFSClient:
         if op not in REGISTRY:
             raise KeyError(f"unknown op {op!r}; registered: "
                            f"{sorted(REGISTRY.names())}")
-        ctx = CallContext(op=op, wop=WorkloadOp(op, path, path2, args=args))
+        wop = WorkloadOp(op, path, path2, args=args)
+        ctx = CallContext(op=op, wop=wop)
         try:
-            return self._handler(ctx)
+            res = self._handler(ctx)
+            self._absorb(wop, res)
+            return res
         finally:
             self.retries += ctx.retries
 
@@ -277,19 +297,25 @@ class DFSClient:
 
     def run_trace(self, wops: Sequence[WorkloadOp], *, batch_size: int = 16,
                   concurrent: bool = False, planned: bool = False,
-                  window: Optional[int] = None) -> PipelineStats:
+                  window: Optional[int] = None,
+                  adaptive: bool = True) -> PipelineStats:
         """Replay a trace through the batched request pipeline over this
         client's cluster (the Fig 7 methodology). ``planned=True`` routes
         through the client-side columnar batch planner
         (:mod:`~repro.core.batch_planner`): partition-aligned, type-sorted
         batches with client-side path resolutions attached, instead of
-        reactive FIFO dealing."""
+        reactive FIFO dealing. The planned pipeline is closed-loop: it
+        plans against THIS client's ``hint_cache`` (warmed by response
+        piggybacking, shared with the facade's own calls) and resizes its
+        planning window adaptively (``adaptive=False`` pins the window)."""
         if planned:
             from .batch_planner import PlannedRequestPipeline
             return PlannedRequestPipeline(self.cluster,
                                           batch_size=batch_size,
                                           concurrent=concurrent,
-                                          window=window).run(wops)
+                                          window=window,
+                                          client_cache=self.hint_cache,
+                                          adaptive=adaptive).run(wops)
         return RequestPipeline(self.cluster, batch_size=batch_size,
                                concurrent=concurrent).run(wops)
 
@@ -386,6 +412,7 @@ class BatchCall:
                 h._done = True
                 if oc.ok:
                     h._value = mapper(oc.result.value)
+                    self._client._absorb(w, oc.result)
                 else:
                     h._error = error_for(oc.error)
             if not retry:

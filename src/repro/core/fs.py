@@ -36,7 +36,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from .hint_cache import InodeHintCache
 from .store import (EXCLUSIVE, READ_COMMITTED, SHARED, MetadataStore, OpCost,
                     StoreError)
-from .tables import ROOT_ID, make_block, make_inode, make_replica
+from .tables import (ROOT_ID, make_block, make_inode, make_replica,
+                     split_path)
 from .transactions import Transaction
 
 
@@ -68,9 +69,20 @@ class LeaseConflict(FSError):
 
 @dataclass
 class OpResult:
-    """Return value of every FS op: payload + measured cost profile."""
+    """Return value of every FS op: payload + measured cost profile.
+
+    ``hints`` is the response-piggybacked hint set (§5.1 applied to the
+    CLIENT side of the metadata path): the ``(parent_id, name, inode_id)``
+    resolutions the serving namenode's hint cache holds for the op's
+    path(s) after execution. Clients absorb them into their own
+    :class:`~repro.core.hint_cache.InodeHintCache` so client-side planning
+    warms from responses instead of reading namenode caches — see
+    ``docs/HINTS.md``. Attached by the namenode RPC layer
+    (:meth:`~repro.core.namenode.Namenode.invoke`), charge-free (pure
+    in-memory peeks, no ``OpCost`` round trips)."""
     value: Any
     cost: OpCost
+    hints: Tuple[Tuple[int, str, int], ...] = ()
 
 
 @dataclass
@@ -83,9 +95,8 @@ class ResolvedPath:
     cache_hit: bool
 
 
-def split_path(path: str) -> List[str]:
-    return [c for c in path.split("/") if c]
-
+# canonical splitter lives in tables.py (shared with hint_cache and the
+# planner); re-exported here for the many `from .fs import split_path` users
 
 def format_fs(store: MetadataStore) -> None:
     """Create the root inode and the id sequence rows."""
@@ -264,6 +275,43 @@ class HopsFSOps:
             cost = txn.commit()
         return OpResult(None, cost)
 
+    def touch_lease(self, client: str) -> bool:
+        """Piggybacked lease renewal (the HDFS lease-manager semantics,
+        ROADMAP PR-4 follow-up): ANY registered op executed by a live
+        lease holder refreshes its stamp, so a steadily-writing client
+        never needs a bare ``renew_lease`` heartbeat to survive the
+        leader's recovery sweep. Renewal rides the RPC, not the op's
+        transaction — a charge-free row touch (Table-3 round-trip
+        profiles unchanged) — but it DOES take the lease row's exclusive
+        lock, so it serializes against :meth:`lease_recover`'s
+        under-lock liveness re-check: a touch either lands before the
+        reclaim (recovery then sees a live stamp and skips) or waits
+        until the reclaim committed (the row is gone and the touch is a
+        no-op — the holder's next create/append re-leases). Returns
+        False when ``client`` holds no lease."""
+        t = self.store.table("lease")
+        if t.get((client,)) is None:
+            return False
+        txn_id = self.store.next_txn_id()
+        try:
+            try:
+                self.store.locks.acquire(txn_id, "lease", (client,),
+                                         EXCLUSIVE)
+            except StoreError:
+                # renewal is best-effort: the op itself already succeeded,
+                # so a lock-wait timeout must not convert it into an error
+                # — the holder's next op (or bare renew_lease) renews
+                return False
+            row = t.get((client,))       # re-read under the lock
+            if row is None:
+                return False             # reclaimed while we waited
+            row = dict(row)
+            row["last_renewed"] = self._lease_now()
+            t.put(row)
+            return True
+        finally:
+            self.store.locks.release_all(txn_id)
+
     def expired_lease_holders(self) -> List[str]:
         """Holders whose lease outlived ``lease_limit`` liveness ticks —
         the leader's lease-recovery work list."""
@@ -276,7 +324,15 @@ class HopsFSOps:
         analogue of §6.2's subtree-lock reclaim): clear under-construction
         state on every file the holder leased, drop its lease_path rows
         (partition-pruned — lease_path is partitioned by holder), then
-        drop the lease row itself."""
+        drop the lease row itself. Liveness is RE-CHECKED under the lease
+        row's exclusive lock immediately before the reclaim commits: a
+        holder that renewed between the leader's ``expired_lease_holders``
+        scan and this transaction (e.g. a piggybacked ``touch_lease`` from
+        an in-flight op) keeps its lease — the transaction ABORTS,
+        discarding every cached write. The lease lock is taken LAST, after
+        the inode rows, preserving the FS layer's inode-before-lease
+        acquisition order (``lease_write`` in every writer's txn), so the
+        re-check cannot deadlock against an in-flight create/append."""
         with Transaction(self.store, partition_hint=("lease_path", holder),
                          distribution_aware=self.dat) as txn:
             lps = txn.ppis("lease_path", "holder", holder, EXCLUSIVE)
@@ -289,6 +345,13 @@ class HopsFSOps:
                         fixed["client"] = None
                         txn.write("inode", fixed)
                 txn.delete("lease_path", (lp["inode_id"],))
+            row = txn.read("lease", (holder,), EXCLUSIVE)
+            if self._lease_live(row):
+                # renewed since the scan: abort (writes above were only
+                # cached, nothing flushed) — not reclaimed (value None)
+                cost = txn.cost.copy()
+                txn.abort()
+                return OpResult(None, cost)
             txn.delete("lease", (holder,))
             cost = txn.commit()
         return OpResult(len(lps), cost)

@@ -1,4 +1,4 @@
-"""Inode hint cache (paper §5.1).
+"""Inode hint cache (paper §5.1) — namenode-side AND client-side.
 
 Each namenode caches **only the primary keys** of inodes: for path component
 ``name`` under parent ``parent_id`` it remembers the child's inode id. Given
@@ -10,13 +10,22 @@ Cache entries are validated by the batch read itself (§5.1.1): if a hinted PK
 misses (row moved by a rename) the namenode falls back to recursive
 resolution and repairs the cache. Entries go stale rarely — rename/move are
 <2% of typical workloads (Table 1).
+
+The same class backs the **client-side** hint cache of the closed-loop
+planned pipeline: namenode responses piggyback the ``(parent_id, name) ->
+inode_id`` resolutions they touched (``OpResult.hints``), clients absorb
+them (:meth:`InodeHintCache.absorb`) and invalidate on destructive ops
+(:meth:`InodeHintCache.invalidate_path`). ``stale_overwrites`` counts
+absorbed entries that CONTRADICTED a cached id — direct evidence of
+hint staleness (rename/delete+recreate), the telemetry
+``docs/HINTS.md`` documents.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, Iterable, List, Optional, Sequence, Tuple
 
-from .tables import ROOT_ID
+from .tables import ROOT_ID, split_path
 
 
 class InodeHintCache:
@@ -28,6 +37,7 @@ class InodeHintCache:
         self.hits = 0
         self.misses = 0
         self.invalidations = 0
+        self.stale_overwrites = 0   # puts that contradicted a cached id
 
     def get(self, parent_id: int, name: str) -> Optional[int]:
         key = (parent_id, name)
@@ -41,6 +51,9 @@ class InodeHintCache:
 
     def put(self, parent_id: int, name: str, inode_id: int) -> None:
         key = (parent_id, name)
+        prev = self._lru.get(key)
+        if prev is not None and prev != inode_id:
+            self.stale_overwrites += 1
         self._lru[key] = inode_id
         self._lru.move_to_end(key)
         if len(self._lru) > self.capacity:
@@ -56,8 +69,47 @@ class InodeHintCache:
         if self._lru.pop((parent_id, name), None) is not None:
             self.invalidations += 1
 
+    def invalidate_path(self, components: Sequence[str]) -> bool:
+        """Client-side invalidation on a destructive op (rename/delete/
+        subtree move): walk the cached chain and drop the LEAF entry.
+        Dropping the leaf suffices for reachable entries — descendants of
+        a removed directory become unreachable through the cache (every
+        resolution walks from the root, and inode ids are never reused),
+        so they age out of the LRU. Best-effort, not airtight: if an
+        intermediate entry was LRU-evicted the walk stops early and a
+        stale leaf may survive (and become reachable again once the
+        intermediate is re-warmed) — harmless, because hints are never
+        trusted: the namenode's in-transaction validation misses on the
+        stale PK and falls back to sequential resolution (§5.1.1)."""
+        parent = ROOT_ID
+        for i, name in enumerate(components):
+            if i == len(components) - 1:
+                if (parent, name) in self._lru:
+                    self.invalidate(parent, name)
+                    return True
+                return False
+            child = self.peek(parent, name)
+            if child is None:
+                return False
+            parent = child
+        return False
+
+    def absorb(self, hints: Iterable[Tuple[int, str, int]]) -> None:
+        """Warm the cache from response-piggybacked resolutions
+        (``OpResult.hints``): each entry is (parent_id, name, inode_id)."""
+        for parent_id, name, inode_id in hints:
+            self.put(parent_id, name, inode_id)
+
     def clear(self) -> None:
         self._lru.clear()
+
+    # deliberately NOT __len__: fs.py/namenode.py guard the optional cache
+    # with `if self.cache:` (identity semantics), and a __len__ would make
+    # an EMPTY cache falsy — disabling cache repair before the first entry
+    @property
+    def entries(self) -> int:
+        """Current cache population."""
+        return len(self._lru)
 
     # ------------------------------------------------------------------
     def resolve_pks(self, components: Sequence[str]
@@ -105,3 +157,24 @@ class InodeHintCache:
                 return None
             parent = child
         return parent
+
+
+def absorb_response(cache: InodeHintCache, wop: Any, spec: Any,
+                    hints: Iterable[Tuple[int, str, int]]) -> None:
+    """THE closed-loop absorb rule for one response, shared by the
+    ``DFSClient`` facade and the planned pipeline so the two cannot
+    diverge: drop what a destructive op (``OpSpec.destructive``)
+    removed/moved — the primary path, rename's destination (an
+    overwriting rename replaces the old mapping; the fresh one arrives
+    with the hints), and concat's ``srcs`` — then warm the cache from the
+    response's piggybacked hints (``OpResult.hints``). ``wop`` is the
+    executed :class:`~repro.core.ops_registry.WorkloadOp`, ``spec`` its
+    OpSpec (or None for unregistered ops)."""
+    if spec is not None and spec.destructive:
+        # OpSpec.path_args applies rename's implicit ".mv" destination —
+        # the same canonical rule the planner's conflict analysis uses
+        for p in spec.path_args(wop):
+            cache.invalidate_path(split_path(p))
+        for src in (wop.args or {}).get("srcs", ()) or ():
+            cache.invalidate_path(split_path(str(src)))
+    cache.absorb(hints)

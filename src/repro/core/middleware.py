@@ -23,8 +23,8 @@ from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
 
 from .fs import SubtreeLockedError
-from .ops_registry import WorkloadOp
-from .store import StoreError
+from .ops_registry import REGISTRY, WorkloadOp
+from .store import LockTimeout, StoreError, TransactionAborted
 
 
 @dataclass
@@ -65,6 +65,43 @@ def subtree_retry(retries: int = 8, backoff: float = 0.002,
                     ctx.retries += 1
                     if backoff:
                         sleep(backoff * (attempt + 1))
+            raise last  # type: ignore[misc]
+        return handler
+    return mw
+
+
+def txn_retry(retries: int = 3, backoff: float = 0.005,
+              sleep: Callable[[float], None] = time.sleep) -> Middleware:
+    """Paper §7.5: transactions that hit the NDB inactive timeout (or were
+    aborted by the engine) are automatically retried — the timed-out
+    transaction aborted atomically, so re-running the op is safe and is
+    exactly what the HopsFS DAL does (the client-side twin of
+    ``transactions.run_with_retry``). Only genuinely concurrent execution
+    can time out (a single-threaded run never waits on a row lock), so
+    this middleware is inert on the deterministic pipelines; under
+    concurrent workers it keeps a >1.2 s scheduler stall from surfacing a
+    spurious mutation failure.
+
+    Subtree ops are NOT retried here: they span many chunk transactions
+    (§6 phase 3), so earlier chunks may already be committed when a later
+    one times out — a blind re-run would return a partial count. Their
+    timeout surfaces to the caller, exactly as before this middleware
+    existed."""
+    def mw(nxt: Handler) -> Handler:
+        def handler(ctx: CallContext) -> Any:
+            last: Optional[Exception] = None
+            attempts = max(1, retries) + 1
+            for attempt in range(attempts):
+                try:
+                    return nxt(ctx)
+                except (LockTimeout, TransactionAborted) as e:
+                    spec = REGISTRY.get(ctx.op)
+                    if spec is not None and spec.subtree:
+                        raise               # multi-txn op: not re-runnable
+                    last = e
+                    ctx.retries += 1
+                    if backoff and attempt < attempts - 1:
+                        sleep(backoff * (2 ** attempt))
             raise last  # type: ignore[misc]
         return handler
     return mw

@@ -31,7 +31,8 @@ from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 from .fs import (FSError, HopsFSOps, OpResult, SubtreeLockedError,
                  split_path)
 from .leader import LeaderElection
-from .middleware import CallContext, compose, failover, subtree_retry
+from .middleware import (CallContext, compose, failover, subtree_retry,
+                         txn_retry)
 from .ops_registry import GroupWriteCtx, REGISTRY, WorkloadOp
 from .store import (EXCLUSIVE, MetadataStore, OpCost, READ_COMMITTED,
                     SHARED, StoreError, _hash_key)
@@ -174,8 +175,10 @@ class Namenode:
         self.batched_ops = 0
         self.batched_write_ops = 0   # mutations served by grouped txns
         # prebuilt default retry chain — the batch hot path must not
-        # recompose middleware per op
-        self._safe_handler = compose([subtree_retry()],
+        # recompose middleware per op. txn_retry sits inside: a lock
+        # timeout under concurrent workers aborted atomically (§7.5), so
+        # the op re-runs instead of surfacing a spurious failure
+        self._safe_handler = compose([subtree_retry(), txn_retry()],
                                      lambda ctx: self.invoke(ctx.wop))
 
     def is_leader(self) -> bool:
@@ -192,10 +195,56 @@ class Namenode:
             return 0
         reclaimed = 0
         for holder in self.ops.expired_lease_holders():
-            res = self.ops.lease_recover(holder)
+            try:
+                res = self.ops.lease_recover(holder)
+            except StoreError:
+                # lock contention with the holder's own in-flight write
+                # (it is evidently alive): skip — the next sweep re-scans
+                continue
             self.agg_cost.merge(res.cost)
-            reclaimed += 1
+            if res.value is not None:    # None = renewed since the scan
+                reclaimed += 1
         return reclaimed
+
+    # -- response piggybacking (the closed-loop hint path) -------------
+    def _piggyback_hints(self, paths: Sequence[str]
+                         ) -> Tuple[Tuple[int, str, int], ...]:
+        """The ``(parent_id, name) -> inode_id`` resolutions this
+        namenode's hint cache holds for the op's path(s) AFTER execution
+        — shipped back on every response (``OpResult.hints``) so client
+        caches warm from responses instead of reading namenode caches.
+        Pure in-memory peeks: charge-free, and post-execution state means
+        a create's new inode rides its own response while a delete's
+        victim (invalidated by the handler) never does."""
+        cache = self.ops.cache
+        if cache is None:
+            return ()
+        out: List[Tuple[int, str, int]] = []
+        for p in paths:
+            parent = ROOT_ID
+            for name in split_path(p):
+                child = cache.peek(parent, name)
+                if child is None:
+                    break
+                out.append((parent, name, child))
+                parent = child
+        return tuple(out)
+
+    def _finish_op(self, spec: Any, paths: Sequence[str],
+                   kw: Dict[str, Any], res: OpResult) -> OpResult:
+        """Post-execution RPC work shared by every entry point: account
+        the op, piggyback the hint set onto the response, and refresh the
+        executing client's lease stamp (piggybacked renewal — any op by a
+        live holder is a heartbeat, ``HopsFSOps.touch_lease``)."""
+        self.ops_served += 1
+        self.agg_cost.merge(res.cost)
+        res.hints = self._piggyback_hints(paths)
+        if spec is not None and spec.has_client_arg \
+                and not spec.renews_lease and "client" in kw:
+            # skipped for renews_lease ops: their handler already stamped
+            # the lease inside its own transaction (lease_write)
+            self.ops.touch_lease(kw["client"])
+        return res
 
     # -- registry-dispatched execution ---------------------------------
     def perform(self, op: str, *args, **kw) -> OpResult:
@@ -203,10 +252,10 @@ class Namenode:
         canonical positional entry point (DFSClient and Client use it)."""
         if not self.alive:
             raise StoreError(f"namenode {self.nn_id} is down")
-        res = REGISTRY[op].resolve(self)(*args, **kw)
-        self.ops_served += 1
-        self.agg_cost.merge(res.cost)
-        return res
+        spec = REGISTRY[op]
+        res = spec.resolve(self)(*args, **kw)
+        return self._finish_op(spec, [a for a in args[:spec.paths]
+                                      if isinstance(a, str)], kw, res)
 
     def invoke(self, wop: WorkloadOp) -> OpResult:
         """Execute one :class:`WorkloadOp` record: the record's own
@@ -218,9 +267,7 @@ class Namenode:
         spec = REGISTRY[wop.op]
         paths, kw = spec.call_args(wop)
         res = spec.resolve(self)(*paths, **kw)
-        self.ops_served += 1
-        self.agg_cost.merge(res.cost)
-        return res
+        return self._finish_op(spec, paths, kw, res)
 
     # -- deprecated string-dispatch shims ------------------------------
     def execute(self, op: str, *args, **kw) -> OpResult:
@@ -249,7 +296,8 @@ class Namenode:
             handler = self._safe_handler      # hot path: prebuilt chain
         else:
             handler = compose(
-                [subtree_retry(retries=retries, backoff=backoff)],
+                [subtree_retry(retries=retries, backoff=backoff),
+                 txn_retry()],
                 lambda ctx: self.invoke(ctx.wop))
         try:
             return OpOutcome(handler(CallContext(op=wop.op, wop=wop,
@@ -296,6 +344,27 @@ class Namenode:
                 results[i] = self._safe_exec(wops[i])
             i = j
         self.batches_executed += 1
+        # response piggybacking for the GROUPED outcomes (the sequential
+        # path attaches hints in invoke): ship back the hint-cache state
+        # the grouped transactions repaired, and refresh the executing
+        # clients' lease stamps (any op by a live holder is a heartbeat —
+        # once per DISTINCT client, not per op: all stamps in one batch
+        # share the same logical tick, so N touches of one hot client
+        # would just be N redundant lock round trips)
+        clients: Set[str] = set()
+        for wop, oc in zip(wops, results):
+            if oc is None or not oc.ok or not oc.batched:
+                continue
+            spec = REGISTRY.get(wop.op)
+            if spec is None:
+                continue
+            paths, kw = spec.call_args(wop)
+            oc.result.hints = self._piggyback_hints(paths)
+            if spec.has_client_arg and not spec.renews_lease \
+                    and "client" in kw:
+                clients.add(kw["client"])
+        for client in sorted(clients):
+            self.ops.touch_lease(client)
         return results  # type: ignore[return-value]
 
     def _execute_read_run(self, op: str, wops: Sequence[WorkloadOp],

@@ -127,6 +127,11 @@ class OpSpec:
     # order through its stable (partition, type) sort instead of pinning
     # them out of the groupable stream.
     lease_order: Optional[Callable[[WorkloadOp], Any]] = None
+    # the handler itself stamps the client's lease inside its transaction
+    # (create/append via lease_write, renew_lease by definition): the RPC
+    # layer's piggybacked touch_lease would be a redundant second lock
+    # round trip on the same row, so it skips these
+    renews_lease: bool = False
 
     def __post_init__(self) -> None:
         assert self.paths in (0, 1, 2)
@@ -143,21 +148,39 @@ class OpSpec:
             f"{self.name}: group_mutable needs group_apply and a single " \
             f"non-subtree path"
 
+    @property
+    def has_client_arg(self) -> bool:
+        """The op is executed on behalf of a named client (its arg schema
+        carries ``client``). Such ops double as lease heartbeats: the
+        namenode RPC layer refreshes the executing client's lease stamp
+        after any successful op (``HopsFSOps.touch_lease``, skipped when
+        ``renews_lease`` says the handler already stamped it), so a
+        steadily-writing holder never expires — piggybacked renewal."""
+        return any(a.name == "client" for a in self.args)
+
     # -- execution ------------------------------------------------------
     def resolve(self, namenode: Any) -> Callable[..., Any]:
         """Bind the handler on a namenode (``ops``/``subtree`` holder)."""
         return getattr(getattr(namenode, self.holder), self.method)
 
-    def call_args(self, wop: WorkloadOp) -> Tuple[List[str], Dict[str, Any]]:
-        """Positional path args + keyword args for one workload record:
-        the record's own ``args`` overlaid on the spec defaults."""
+    def path_args(self, wop: WorkloadOp) -> List[str]:
+        """The op's positional path arguments, with rename's implicit
+        destination default applied — THE one place the ``path + ".mv"``
+        rule lives (the planner's conflict analysis and the client-side
+        invalidation rule both resolve paths through here)."""
         paths: List[str] = []
         if self.paths >= 1:
             paths.append(wop.path)
         if self.paths == 2:
             paths.append(wop.path2 if wop.path2 is not None
                          else wop.path + ".mv")
-        return paths, {a.name: a.value_for(wop) for a in self.args}
+        return paths
+
+    def call_args(self, wop: WorkloadOp) -> Tuple[List[str], Dict[str, Any]]:
+        """Positional path args + keyword args for one workload record:
+        the record's own ``args`` overlaid on the spec defaults."""
+        return (self.path_args(wop),
+                {a.name: a.value_for(wop) for a in self.args})
 
     # -- partition-hint derivation --------------------------------------
     def hint_components(self, path_components: Sequence[str]
@@ -251,6 +274,7 @@ def register_op(name: str, holder: str, method: str, *,
                 group_apply: Optional[Callable[..., Any]] = None,
                 group_aux: Optional[Callable[..., Any]] = None,
                 lease_order: Optional[Callable[..., Any]] = None,
+                renews_lease: bool = False,
                 registry: OpRegistry = REGISTRY,
                 replace: bool = False) -> OpSpec:
     """Convenience declaration helper (also the public extension point)."""
@@ -261,7 +285,7 @@ def register_op(name: str, holder: str, method: str, *,
                   lease_read=lease_read, destructive=destructive,
                   group_mutable=group_mutable,
                   group_apply=group_apply, group_aux=group_aux,
-                  lease_order=lease_order)
+                  lease_order=lease_order, renews_lease=renews_lease)
     return registry.register(spec, replace=replace)
 
 
@@ -363,7 +387,7 @@ def _lease_key_path(wop: WorkloadOp) -> Any:
 register_op("create", "ops", "create",
             args=(("repl", 3), ("client", "client"), ("overwrite", False)),
             hint="parent", group_mutable=True, group_apply=_apply_create,
-            group_aux=_aux_create)
+            group_aux=_aux_create, renews_lease=True)
 register_op("read", "ops", "get_block_locations",
             read_only=True, batchable=True, batch_payload=_payload_read,
             lease_read=True)
@@ -382,16 +406,21 @@ register_op("add_block", "ops", "add_block",
             args=(("client", "client"),),
             group_mutable=True, group_apply=_apply_add_block,
             group_aux=_aux_lease_holder, lease_order=_lease_key_path)
+# NOTE: no group_aux — the sequential complete_block lock phase performs
+# no lease read (its _check_lease consults the charge-free txn.peek), so
+# the grouped path must not charge one either: grouped and sequential
+# OpCost profiles for the same op stay identical (Table 3)
 register_op("complete_block", "ops", "complete_block",
             args=(("block_id", -1), ("size", REQUIRED),
                   ("client", "client")),
             group_mutable=True, group_apply=_apply_complete_block,
-            group_aux=_aux_lease_holder, lease_order=_lease_key_path)
+            lease_order=_lease_key_path)
 register_op("append", "ops", "append_file", args=(("client", "client"),),
             group_mutable=True, group_apply=_apply_append,
-            group_aux=_aux_lease_client, lease_order=_lease_key_path)
+            group_aux=_aux_lease_client, lease_order=_lease_key_path,
+            renews_lease=True)
 register_op("renew_lease", "ops", "renew_lease", paths=0,
-            args=(("client", "client"),))
+            args=(("client", "client"),), renews_lease=True)
 register_op("chmod_file", "ops", "chmod_file", args=(("perm", 0o640),),
             group_mutable=True, group_apply=_apply_setattr("perm"),
             group_aux=_aux_setattr)

@@ -48,6 +48,13 @@ class TableSchema:
 
 ROOT_ID = 1  # inode id of "/"; always cached by every namenode (paper §5.1)
 
+
+def split_path(path: str) -> list:
+    """Canonical path -> component list. THE one splitter, shared by
+    server-side resolution (fs), client-side invalidation (hint_cache)
+    and the planner — path normalization can never drift between them."""
+    return [c for c in path.split("/") if c]
+
 INODE = TableSchema(
     name="inode",
     pk=("parent_id", "name"),

@@ -43,6 +43,13 @@ class Transaction:
         self.cost = OpCost()
         self.cache: Dict[Tuple[str, Tuple[Any, ...]], Any] = {}
         self.dirty: Set[Tuple[str, Tuple[Any, ...]]] = set()
+        # per-table insertion-ordered view of the dirty PKs: the
+        # read-your-writes scan overlay walks only ITS table's pending
+        # rows, in deterministic (insertion) order, instead of re-sorting
+        # the whole dirty set per scan — large grouped transactions (an
+        # oversized lease-ordered block-write batch) would otherwise go
+        # quadratic in scans over dirty keys
+        self._dirty_order: Dict[str, List[Tuple[Any, ...]]] = {}
         self._done = False
         # --- distribution awareness (DAT) --------------------------------
         self.coordinator_group: Optional[int] = None
@@ -227,11 +234,10 @@ class Transaction:
         # one file in the same group must each see the other's block row
         # exactly as committed sequential transactions would.
         if match is not None and self.dirty:
-            for key in sorted(self.dirty, key=repr):
-                tn, pk = key
-                if tn != tname or pk in seen:
+            for pk in self._dirty_order.get(tname, ()):
+                if pk in seen:
                     continue
-                v = self.cache[key]
+                v = self.cache[(tname, pk)]
                 if v is _TOMBSTONE or not match(v):
                     continue
                 self.store.locks.acquire(self.txn_id, tname, pk, lock)
@@ -243,6 +249,12 @@ class Transaction:
     # ------------------------------------------------------------------
     # EXECUTE phase: cache mutation
     # ------------------------------------------------------------------
+    def _mark_dirty(self, tname: str, pk: Tuple[Any, ...]) -> None:
+        key = (tname, pk)
+        if key not in self.dirty:
+            self.dirty.add(key)
+            self._dirty_order.setdefault(tname, []).append(pk)
+
     def write(self, tname: str, row: Dict[str, Any]) -> None:
         """Insert/update a row in the txn cache (flushed at commit). The row
         lock must already be held exclusively if the row pre-existed."""
@@ -250,12 +262,12 @@ class Transaction:
         pk = pk_of(t.schema, row)
         self.store.locks.acquire(self.txn_id, tname, pk, EXCLUSIVE)
         self.cache[(tname, pk)] = row
-        self.dirty.add((tname, pk))
+        self._mark_dirty(tname, pk)
 
     def delete(self, tname: str, pk: Tuple[Any, ...]) -> None:
         self.store.locks.acquire(self.txn_id, tname, pk, EXCLUSIVE)
         self.cache[(tname, pk)] = _TOMBSTONE
-        self.dirty.add((tname, pk))
+        self._mark_dirty(tname, pk)
 
     # ------------------------------------------------------------------
     # UPDATE phase

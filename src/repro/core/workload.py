@@ -239,6 +239,30 @@ def make_spotify_trace(ns: SyntheticNamespace, n_ops: int, *,
     return SpotifyWorkload(ns, seed=seed, mix=mix).make_trace(n_ops)
 
 
+def make_block_contention_trace(path: str, n_rounds: int, *,
+                                clients: Sequence[str] = ("c1", "c2"),
+                                block_size: int = 1 << 20
+                                ) -> List[WorkloadOp]:
+    """Adversarial same-file block-write contention: ``clients`` interleave
+    append/add_block/complete_block on ONE file, round-robin per round.
+    While the first client's lease is live, every other client's block
+    write must be refused with ``LeaseConflict`` — and because the ops mix
+    block-write TYPES on one path, the batch planner pins them all to
+    submission order, so planned (including planned+concurrent) replay
+    stays state-equal to sequential replay. The shape
+    ``tests/test_closed_loop_pipeline.py`` asserts."""
+    trace: List[WorkloadOp] = []
+    for _ in range(n_rounds):
+        for c in clients:
+            trace.append(WorkloadOp("append", path, args={"client": c}))
+            trace.append(WorkloadOp("add_block", path, args={"client": c}))
+            trace.append(WorkloadOp("complete_block", path,
+                                    args={"block_id": -1,
+                                          "size": block_size,
+                                          "client": c}))
+    return trace
+
+
 # ---------------------------------------------------------------------------
 # columnar (struct-of-arrays) trace lowering — the batch planner's input
 # ---------------------------------------------------------------------------

@@ -1,0 +1,404 @@
+"""Closed-loop planned pipeline (ISSUE 5 tentpole).
+
+Contract:
+  1. **hint piggybacking** — every namenode response carries the
+     ``(parent_id, name) -> inode_id`` resolutions its hint cache holds
+     for the op's path(s) (``OpResult.hints``); ``DFSClient`` and the
+     planned pipeline warm a real client-side ``InodeHintCache`` from
+     them and invalidate on destructive ops, so client-side planning
+     resolves from RESPONSES (namenode caches are only the fallback);
+  2. **adaptive windows** — the planning window is a control variable:
+     the ``WindowController`` grows it while round trips per op hold and
+     shrinks it under conflict pinning, deterministically;
+  3. **concurrent-mode lease-ordered dealing** — concurrent planned
+     execution no longer pins every mutation: windows are execution
+     barriers, same-key (same-file) block-write runs are never split
+     across batches, and the final namespace equals sequential replay —
+     including under adversarial same-file contention, where every
+     non-holder block write is refused with ``LeaseConflict`` exactly as
+     sequential execution refuses it;
+  4. **piggybacked lease renewal** — any registered op executed by a live
+     lease holder refreshes the lease stamp, so a steadily-writing client
+     never trips the leader's lease recovery.
+"""
+import pytest
+
+from repro.core import (BatchPlanner, DFSClient, MetadataStore,
+                        NamenodeCluster, PlannedRequestPipeline,
+                        RequestPipeline, WindowController, WorkloadOp,
+                        format_fs, materialize_namespace,
+                        namespace_snapshot)
+from repro.core.cluster_sim import BatchedHopsFSSim, profile_ops
+from repro.core.workload import (NamespaceSpec, SyntheticNamespace,
+                                 WRITE_HEAVY_MIX,
+                                 make_block_contention_trace,
+                                 make_spotify_trace)
+
+
+def _build(n_namenodes: int, *, n_dirs: int = 16, files_per_dir: int = 4):
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    cluster = NamenodeCluster(store, n_namenodes)
+    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=n_dirs,
+                            files_per_dir=files_per_dir)
+    materialize_namespace(cluster.namenodes[0], ns)
+    return store, cluster, ns
+
+
+def _small():
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    cluster = NamenodeCluster(store, 2)
+    cluster.namenodes[0].ops.mkdirs("/w")
+    return store, cluster
+
+
+# ---------------------------------------------------------------------------
+# 1. response hint piggybacking
+# ---------------------------------------------------------------------------
+
+def test_responses_carry_piggybacked_hints():
+    """A namenode response's ``hints`` hold the full (parent_id, name) ->
+    inode_id chain of the op's path, enough for a cold client to resolve
+    the same path without ever reading a namenode cache."""
+    _store, cluster = _small()
+    nn = cluster.namenodes[0]
+    nn.ops.mkdirs("/w/a/b")
+    nn.ops.create("/w/a/b/f")
+    res = nn.invoke(WorkloadOp("stat", "/w/a/b/f"))
+    chain = {(p, n): i for p, n, i in res.hints}
+    # walk the chain from the root: every component resolves
+    from repro.core import ROOT_ID
+    parent = ROOT_ID
+    for name in ("w", "a", "b", "f"):
+        assert (parent, name) in chain
+        parent = chain[(parent, name)]
+    assert parent == res.value["id"]
+
+
+def test_dfs_client_cache_warms_from_responses_and_invalidates():
+    """The facade's client cache warms from every response and drops
+    entries on destructive ops — rename moves the mapping, delete removes
+    it."""
+    _store, cluster = _small()
+    dfs = DFSClient(cluster)
+    fid = dfs.create("/w/f")
+    wid = dfs.stat("/w").inode_id
+    assert dfs.hint_cache.peek(wid, "f") == fid
+    dfs.rename("/w/f", "/w/g")
+    assert dfs.hint_cache.peek(wid, "f") is None
+    assert dfs.hint_cache.peek(wid, "g") == fid
+    dfs.delete("/w/g")
+    assert dfs.hint_cache.peek(wid, "g") is None
+    assert dfs.hint_cache.invalidations >= 2
+
+
+def test_client_cache_resolves_without_namenode_caches():
+    """The closed-loop core claim: once warmed from responses, the client
+    cache alone (namenode caches cleared = the fallback resolver is
+    empty) still resolves paths for planning."""
+    _store, cluster, ns = _build(2)
+    trace = [WorkloadOp("read", f) for f in ns.files[:40]]
+    pipe = PlannedRequestPipeline(cluster, batch_size=8)
+    pipe.run(trace)
+    for nn in cluster.namenodes:
+        nn.ops.cache.clear()           # kill the fallback entirely
+    planner = BatchPlanner(cluster, batch_size=8,
+                           client_cache=pipe.client_cache)
+    planner.plan_window(trace, 0, len(trace))
+    assert planner.report.planned_ops == len(trace)
+    assert planner.report.client_hits > 0
+    assert planner.report.client_fallback_hits == 0
+
+
+def test_closed_loop_hit_rate_and_stale_telemetry():
+    """Across windows the planner's probes shift onto the client cache
+    (hit rate > 0), and the report carries staleness telemetry fields."""
+    _store, cluster, ns = _build(2)
+    trace = make_spotify_trace(ns, 240, seed=5)
+    pipe = PlannedRequestPipeline(cluster, batch_size=8, window=80)
+    pipe.run(trace)
+    rep = pipe.plan_report
+    assert rep.windows >= 2
+    assert rep.client_hits > 0
+    assert rep.hint_hit_rate > 0.0
+    assert rep.client_stale >= 0 and rep.client_invalidations >= 0
+    # second replay of the same trace resolves almost entirely client-side
+    hits0 = rep.client_hits
+    pipe.run(trace)
+    assert pipe.plan_report.client_hits > 0
+    assert pipe.plan_report.client_hits >= hits0 // 2
+
+
+# ---------------------------------------------------------------------------
+# 2. adaptive window sizing
+# ---------------------------------------------------------------------------
+
+def test_window_controller_policy():
+    c = WindowController(64, min_window=16, max_window=256)
+    # amortization paying: grow to the cap
+    assert c.observe(64, 0, 640) == 128
+    assert c.observe(128, 0, 1280) == 256
+    assert c.observe(256, 0, 2560) == 256
+    # conflict-pin pressure: shrink
+    assert c.observe(256, 128, 2560) == 128
+    # round-trip regression: shrink
+    assert c.observe(128, 0, 5000) == 64
+    # clamped at the floor
+    assert c.observe(64, 64, 640) == 32
+    assert c.observe(32, 32, 320) == 16
+    assert c.observe(16, 16, 160) == 16
+    assert c.history[0] == 64 and c.history[-1] == 16
+
+
+def test_adaptive_window_grows_on_clean_trace():
+    _store, cluster, ns = _build(2)
+    trace = [WorkloadOp("read", ns.files[i % len(ns.files)])
+             for i in range(240)]
+    pipe = PlannedRequestPipeline(cluster, batch_size=8, window=48)
+    pipe.run(trace)
+    sizes = pipe.plan_report.window_sizes
+    assert len(sizes) >= 2
+    assert max(sizes) > sizes[0]           # the controller grew the window
+    assert pipe.planner.controller.window > 48
+
+
+def test_adaptive_window_shrinks_under_conflicts():
+    """A pathological trace (every mutation collides on one path) drives
+    the pin rate to ~1, and the controller backs the window off to its
+    floor instead of speculating."""
+    _store, cluster = _small()
+    cluster.namenodes[0].ops.create("/w/hot")
+    trace = [WorkloadOp("chmod_file", "/w/hot", args={"perm": 0o600})
+             for _ in range(160)]
+    pipe = PlannedRequestPipeline(cluster, batch_size=8, window=64)
+    pipe.run(trace)
+    assert pipe.planner.controller.window < 64
+    sizes = pipe.plan_report.window_sizes
+    assert sizes[-1] < sizes[0]
+
+
+def test_des_mirrors_adaptive_window():
+    profiles = profile_ops()
+    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=20)
+    trace = make_spotify_trace(ns, 500, seed=11)
+    from repro.core.workload import TraceReplay
+    sim = BatchedHopsFSSim(n_namenodes=2, n_ndb=4, profiles=profiles,
+                           batch_size=16, planned=True, adaptive=True,
+                           seed=1)
+    sim.start_clients(300, TraceReplay(trace))
+    res = sim.run(0.1)
+    assert res.completed > 0
+    hist = sim.controller.history
+    assert len(hist) > 1                       # the loop actually closed
+    assert all(4 <= w <= 64 for w in hist)     # clamped to [bs/4, 4*bs]
+    assert any(w != hist[0] for w in hist[1:])  # and actually adapted
+
+
+# ---------------------------------------------------------------------------
+# 3. concurrent-mode lease-ordered dealing
+# ---------------------------------------------------------------------------
+
+def test_concurrent_mode_no_longer_pins_all_mutations():
+    """The lifted restriction: concurrent planned execution deals free
+    mutations (and lease-ordered block-write runs) out of the ordered
+    queue — grouped writes engage in concurrent mode too."""
+    _store, cluster, ns = _build(2)
+    trace = make_spotify_trace(ns, 300, seed=5, mix=WRITE_HEAVY_MIX)
+    pipe = PlannedRequestPipeline(cluster, batch_size=8, concurrent=True)
+    stats = pipe.run(trace)
+    assert stats.ok + stats.failed == len(trace)
+    assert stats.batched_write_fraction > 0
+    rep = pipe.plan_report
+    assert rep.pinned_ops < rep.ops            # not everything was pinned
+
+
+def test_planned_concurrent_write_heavy_state_and_write_batching():
+    """The ISSUE acceptance bar: on the write-heavy mix, sequential /
+    reactive / planned / planned+concurrent all converge to the same
+    namespace; the concurrent mode's batched_write_fraction is no worse
+    than deterministic planned mode's and it beats reactive on round
+    trips."""
+    ns_ref = SyntheticNamespace(NamespaceSpec(), n_dirs=16, files_per_dir=4)
+    trace = make_spotify_trace(ns_ref, 400, seed=5, mix=WRITE_HEAVY_MIX)
+
+    def build():
+        return _build(4)[:2]
+
+    store_seq, cl = build()
+    RequestPipeline(cl, batch_size=1).run(trace)
+    store_rea, cl = build()
+    rea = RequestPipeline(cl, batch_size=16).run(trace)
+    store_pln, cl = build()
+    pln = PlannedRequestPipeline(cl, batch_size=16).run(trace)
+    store_cc, cl = build()
+    cc_pipe = PlannedRequestPipeline(cl, batch_size=16, concurrent=True)
+    cc = cc_pipe.run(trace)
+    snap = namespace_snapshot(store_seq)
+    assert snap == namespace_snapshot(store_rea)
+    assert snap == namespace_snapshot(store_pln)
+    assert snap == namespace_snapshot(store_cc)
+    assert cc.ok + cc.failed == len(trace)
+    # concurrent mode batches block writes at least as well as
+    # deterministic planned mode (identical plans; small slack for
+    # stale-hint fallback differences under real concurrency)
+    assert cc.batched_write_fraction >= pln.batched_write_fraction - 0.01
+    assert cc.batched_write_fraction > 0.022       # the PR 3/4 bar
+    assert cc.total_cost.round_trips < rea.total_cost.round_trips
+    assert cc_pipe.plan_report.lease_ordered_ops > 0
+
+
+def test_concurrent_same_file_block_runs_stay_ordered():
+    """A hot file growing by 24 blocks while other files churn, executed
+    by the CONCURRENT planned pipeline: block indices must come out
+    exactly 0..23 — any cross-worker interleaving of the same-file run
+    would duplicate or skip an index."""
+    store, cluster = _small()
+    nn = cluster.namenodes[0]
+    nn.ops.create("/w/hot")
+    for i in range(4):
+        nn.ops.create(f"/w/cold{i}")
+    hot_id = nn.ops.stat("/w/hot").value["id"]
+    trace = []
+    for i in range(24):
+        trace.append(WorkloadOp("add_block", "/w/hot"))
+        trace.append(WorkloadOp("add_block", f"/w/cold{i % 4}"))
+        trace.append(WorkloadOp("read", f"/w/cold{i % 4}"))
+    stats = PlannedRequestPipeline(cluster, batch_size=8,
+                                   concurrent=True).run(trace)
+    assert stats.failed == 0
+    rows = store.table("block").scan_all(
+        lambda r: r["inode_id"] == hot_id)
+    assert sorted(r["index"] for r in rows) == list(range(24))
+
+
+def test_interleaved_same_partition_block_runs_stay_atomic():
+    """Two files hashing to the SAME partition with interleaved add_block
+    runs: the (partition, type, i) sort alone would leave each file's run
+    non-contiguous, letting the chunk cut split it across batches (and
+    potentially slots). The key-anchored deal must put each file's whole
+    run into exactly one batch — the atomic unit of per-file ordering —
+    and concurrent replay must produce exact block indices."""
+    store, cluster = _small()
+    nn = cluster.namenodes[0]
+    t = store.table("inode")
+    by_part = {}
+    pair = None
+    for i in range(64):
+        p = f"/w/f{i:02d}"
+        fid = nn.ops.create(p).value
+        part = t.partition_of(fid)
+        if part in by_part:
+            pair = (by_part[part], p)
+            break
+        by_part[part] = p
+    assert pair is not None, "no partition collision in 64 files"
+    a, b = pair
+    trace = []
+    for _ in range(6):                       # interleave the two runs
+        trace.append(WorkloadOp("add_block", a))
+        trace.append(WorkloadOp("add_block", b))
+    planner = BatchPlanner(cluster, batch_size=4)
+    batches = planner.plan_window(trace, 0, len(trace))
+    for path in (a, b):
+        homes = {bi for bi, bt in enumerate(batches)
+                 for i in bt.indices if trace[i].path == path}
+        assert len(homes) == 1               # whole run in ONE batch
+    for bt in batches:                       # per-key submission order
+        assert not bt.ordered
+        for path in (a, b):
+            idxs = [i for i in bt.indices if trace[i].path == path]
+            assert idxs == sorted(idxs)
+    stats = PlannedRequestPipeline(cluster, batch_size=4,
+                                   concurrent=True).run(trace)
+    assert stats.failed == 0
+    for path in (a, b):
+        fid = nn.ops.stat(path).value["id"]
+        rows = store.table("block").scan_all(
+            lambda r: r["inode_id"] == fid)
+        assert sorted(r["index"] for r in rows) == list(range(6))
+
+
+def test_same_file_contention_concurrent_equals_sequential():
+    """The ISSUE satellite: two clients interleaving append / add_block /
+    complete_block on ONE file. The non-holder is refused with
+    ``LeaseConflict`` on every attempt, the outcome stream matches
+    sequential replay exactly (contending ops pin to submission order),
+    and the final namespace is identical."""
+    trace = make_block_contention_trace("/w/f", 6)
+    store_seq, cluster_seq = _small()
+    cluster_seq.namenodes[0].ops.create("/w/f", client="c1")
+    seq = RequestPipeline(cluster_seq, batch_size=1).run(trace)
+    store_cc, cluster_cc = _small()
+    cluster_cc.namenodes[0].ops.create("/w/f", client="c1")
+    cc = PlannedRequestPipeline(cluster_cc, batch_size=8,
+                                concurrent=True).run(trace)
+    assert [(o.ok, o.error) for o in cc.outcomes] == \
+           [(o.ok, o.error) for o in seq.outcomes]
+    # the admission control actually fired: every c2 op conflicts
+    conflicts = [o for o in cc.outcomes if o.error == "LeaseConflict"]
+    assert len(conflicts) == 6 * 3                 # all of c2's attempts
+    assert namespace_snapshot(store_cc) == namespace_snapshot(store_seq)
+
+
+# ---------------------------------------------------------------------------
+# 4. piggybacked lease renewal
+# ---------------------------------------------------------------------------
+
+def test_steady_writer_never_trips_lease_recovery():
+    """ROADMAP PR-4 follow-up: a client that keeps WRITING (block ops)
+    without ever calling renew_lease stays live — every registered op it
+    executes refreshes its lease stamp, so the leader's recovery sweep
+    finds nothing to reclaim."""
+    store, cluster = _small()
+    dfs = DFSClient(cluster)
+    dfs.create("/w/f", client="c1")
+    limit = cluster.namenodes[0].ops.lease_limit
+    for i in range(4 * (limit + 1)):
+        cluster.tick()                       # clock marches well past limit
+        dfs.add_block("/w/f", client="c1")   # writing IS the heartbeat
+        assert cluster.recover_leases() == 0
+    lease = store.table("lease").get(("c1",))
+    assert lease is not None
+    assert lease["last_renewed"] == cluster.election.now
+    # ... and once the writer actually stops, expiry works as before
+    for _ in range(limit + 2):
+        cluster.tick()
+    assert cluster.recover_leases() >= 1
+    assert store.table("lease").get(("c1",)) is None
+
+
+def test_lease_recover_rechecks_liveness_under_lock():
+    """A holder that renewed between the leader's expiry scan and the
+    recovery transaction (the piggybacked-touch race) must NOT be
+    reclaimed: lease_recover re-reads the lease row under its exclusive
+    lock and skips live holders."""
+    store, cluster = _small()
+    dfs = DFSClient(cluster)
+    dfs.create("/w/f", client="c1")
+    limit = cluster.namenodes[0].ops.lease_limit
+    for _ in range(limit + 2):
+        cluster.tick()                        # c1 looks expired...
+    assert cluster.namenodes[0].ops.expired_lease_holders() == ["c1"]
+    cluster.namenodes[0].ops.touch_lease("c1")   # ...but renews just now
+    res = cluster.namenodes[0].ops.lease_recover("c1")
+    assert res.value is None                  # skipped, not reclaimed
+    assert store.table("lease").get(("c1",)) is not None
+    assert cluster.recover_leases() == 0      # sweep agrees: nothing done
+    row = store.table("inode").scan_index(
+        "id", dfs.stat("/w/f").inode_id)[0]
+    assert row["under_construction"] is True and row["client"] == "c1"
+
+
+def test_touch_lease_only_refreshes_existing_holders():
+    _store, cluster = _small()
+    nn = cluster.namenodes[0]
+    assert nn.ops.touch_lease("ghost") is False
+    dfs = DFSClient(cluster)
+    dfs.create("/w/f", client="c1")
+    assert nn.ops.touch_lease("c1") is True
+    # a failed op by another client must NOT stamp anything for it
+    from repro.core import LeaseConflict
+    with pytest.raises(LeaseConflict):
+        dfs.add_block("/w/f", client="c2")
+    assert _store.table("lease").get(("c2",)) is None
