@@ -2,13 +2,16 @@
 PY        ?= python
 PYTHONPATH := src
 
-.PHONY: test pytest lint smoke bench bench-all bench-quick docs-lint
+.PHONY: test pytest chaos lint smoke bench bench-all bench-quick docs-lint
 
 test: lint smoke           ## default flow: lint + example smoke + tier-1 suite
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -x -q
 
 pytest:                  ## tier-1 suite only (ROADMAP verify command)
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -x -q
+
+chaos:                   ## fault-injection / failover recovery suite (docs/CHAOS.md)
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest tests/test_chaos_recovery.py -q -m chaos
 
 lint:                    ## pyflakes if installed, else the AST fallback
 	PYTHONPATH=$(PYTHONPATH) $(PY) scripts/lint.py

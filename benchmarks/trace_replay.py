@@ -20,6 +20,11 @@ JSON. Two layers are exercised:
     fleet with lease-ordered dealing), with client hint-cache hit-rate
     telemetry.
 
+A ``failover`` section (§7.6, Fig 11) kills one of four namenodes
+mid-replay on the DES with fine-grained timeline bins and reports the
+throughput dip depth, time/ops to recovery and the number of zero-
+throughput bins (paper: none — clients fail over transparently).
+
   PYTHONPATH=src python -m benchmarks.trace_replay [--quick] \
       [--out BENCH_throughput.json] [--namenodes 1,4,16] [--batch-size 16]
 
@@ -197,6 +202,64 @@ def functional_batching_report(trace, *, n_namenodes: int = 4,
     }
 
 
+def failover_report(trace, profiles, *, n_namenodes: int = 4,
+                    batch_size: int = 16, horizon: float = 0.3,
+                    kill_frac: float = 0.4, restart_frac: float = 0.7,
+                    timeline_bin: float = 0.02, seed: int = 1) -> Dict:
+    """Kill one of ``n_namenodes`` mid-replay on the batched DES, restart
+    it later, and measure the throughput dip and recovery (§7.6: HopsFS
+    keeps serving through a namenode failure — surviving namenodes drain
+    the shared queue and clients requeue in-flight batches, so the dip is
+    a brief capacity loss, never HDFS-style downtime)."""
+    sim = BatchedHopsFSSim(n_namenodes=n_namenodes, n_ndb=8,
+                           profiles=profiles, batch_size=batch_size,
+                           seed=seed, timeline_bin=timeline_bin)
+    sim.start_clients(200 * n_namenodes, TraceReplay(trace))
+    kill_at = round(kill_frac * horizon, 4)
+    restart_at = round(restart_frac * horizon, 4)
+    victim = 0
+    sim.schedule_kill(kill_at, victim)
+    sim.schedule_restart(restart_at, victim)
+    res = sim.run(horizon)
+    counts = dict(res.timeline)
+    n_bins = int(horizon / timeline_bin)
+    series = [counts.get(b * timeline_bin, 0) for b in range(n_bins)]
+    kill_bin = int(kill_at / timeline_bin)
+    pre = series[1:kill_bin]             # drop the cold-start bin
+    steady = sum(pre) / len(pre) if pre else 0.0
+    post = series[kill_bin:]
+    dip = min(post) if post else 0
+    # recovery = first post-kill bin back at >=90% of steady throughput
+    recovery_bin = next(
+        (kill_bin + i for i, c in enumerate(post) if c >= 0.9 * steady),
+        None)
+    recovered = recovery_bin is not None
+    recovery_s = (round((recovery_bin - kill_bin + 1) * timeline_bin, 4)
+                  if recovered else None)
+    ops_to_recovery = (sum(series[kill_bin:recovery_bin + 1])
+                       if recovered else sum(post))
+    return {
+        "n_namenodes": n_namenodes,
+        "killed_namenode": victim,
+        "kill_at_s": kill_at,
+        "restart_at_s": restart_at,
+        "horizon_s": horizon,
+        "timeline_bin_s": timeline_bin,
+        "steady_ops_per_bin": round(steady, 1),
+        "dip_ops_per_bin": dip,
+        "dip_depth_pct": (round(100 * (1 - dip / steady), 1)
+                          if steady else 0.0),
+        "recovered": recovered,
+        "recovery_s": recovery_s,
+        "ops_to_recovery": ops_to_recovery,
+        "zero_bins_after_kill": sum(1 for c in post if c == 0),
+        "requeued_ops": sim.failed_ops,
+        "completed_ops": res.completed,
+        "fault_events": [[round(t, 4), action, nn]
+                         for t, action, nn in sim.fault_events],
+    }
+
+
 def run_replay(*, quick: bool = False, namenode_counts=(1, 4, 16),
                batch_size: int = 16, trace_ops: int = 5000,
                seed: int = 11) -> Dict:
@@ -236,6 +299,8 @@ def run_replay(*, quick: bool = False, namenode_counts=(1, 4, 16),
                            300 if quick else 600, seed=5,
                            mix=WRITE_HEAVY_MIX),
         batch_size=batch_size)
+    failover = failover_report(trace, profiles, batch_size=batch_size,
+                               horizon=horizon)
     return {
         "benchmark": "trace_replay_throughput",
         "paper_figure": "Fig 7 (throughput vs number of namenodes)",
@@ -256,6 +321,7 @@ def run_replay(*, quick: bool = False, namenode_counts=(1, 4, 16),
         "scaling": points,
         "functional_batching": func,
         "functional_batching_write_heavy": func_w,
+        "failover": failover,
     }
 
 
@@ -293,6 +359,12 @@ def bench_trace_replay(quick: bool = False) -> List[Row]:
                  f"{wc['batched_write_fraction']}, "
                  f"{wc['vs_reactive_savings_pct']}% fewer RTs vs reactive, "
                  f"hint hit rate {wc['hint_cache']['hit_rate']}"))
+    fo = report["failover"]
+    rows.append(("trace_replay.failover", 0.0,
+                 f"kill 1/{fo['n_namenodes']} NN mid-replay: dip "
+                 f"{fo['dip_depth_pct']}%, recovery {fo['recovery_s']} s "
+                 f"({fo['ops_to_recovery']} ops), "
+                 f"{fo['zero_bins_after_kill']} zero bins (paper: none)"))
     return rows
 
 
@@ -341,6 +413,12 @@ def main() -> None:
     hc = f["hint_cache"]
     print(f"closed loop (spotify): client hint hit rate {hc['hit_rate']}, "
           f"windows {f['planner']['window_sizes']}")
+    fo = report["failover"]
+    print(f"failover: killed NN {fo['killed_namenode']}/"
+          f"{fo['n_namenodes']} at {fo['kill_at_s']} s -> dip "
+          f"{fo['dip_depth_pct']}% of steady, recovered in "
+          f"{fo['recovery_s']} s ({fo['ops_to_recovery']} ops), "
+          f"{fo['zero_bins_after_kill']} zero bins after kill")
     print(f"wrote {args.out}")
 
 

@@ -20,7 +20,10 @@ Checks:
   * the top-level keys documented in docs/BENCHMARKS.md's "Output schema"
     block match the actual top-level keys of BENCH_throughput.json, both
     directions — the benchmark artifact and its documentation cannot
-    drift apart silently.
+    drift apart silently;
+  * the artifact's `failover` section (§7.6 kill-a-namenode-mid-replay
+    measurement) carries the full metric set the chaos suite and docs
+    rely on (dip depth, recovery time/ops, zero-bin count, fault events).
 """
 from __future__ import annotations
 
@@ -39,7 +42,7 @@ sys.path.insert(0, str(ROOT))            # benchmarks/, scripts/
 sys.path.insert(0, str(ROOT / "src"))    # repro
 
 DOCS = ["README.md", "docs/ARCHITECTURE.md", "docs/API.md",
-        "docs/BENCHMARKS.md", "docs/HINTS.md"]
+        "docs/BENCHMARKS.md", "docs/CHAOS.md", "docs/HINTS.md"]
 MIN_BYTES = 1500
 REF_PREFIXES = ("src/", "tests/", "benchmarks/", "examples/", "docs/",
                 "scripts/")
@@ -229,12 +232,48 @@ def check_benchmarks_schema(doc: Path, artifact: Path) -> list:
     return errors
 
 
+#: metric keys the `failover` section of BENCH_throughput.json must carry
+#: (consumed by docs/CHAOS.md and the chaos suite's bench cross-checks)
+FAILOVER_KEYS = frozenset({
+    "n_namenodes", "killed_namenode", "kill_at_s", "restart_at_s",
+    "horizon_s", "timeline_bin_s", "steady_ops_per_bin",
+    "dip_ops_per_bin", "dip_depth_pct", "recovered", "recovery_s",
+    "ops_to_recovery", "zero_bins_after_kill", "requeued_ops",
+    "completed_ops", "fault_events",
+})
+
+
+def check_failover_schema(artifact: Path) -> list:
+    """The bench artifact's §7.6 failover section must exist and carry
+    every documented metric key."""
+    if not artifact.exists():
+        return []                 # already reported by the schema check
+    try:
+        report = json.loads(artifact.read_text())
+    except Exception:
+        return []                 # already reported by the schema check
+    fo = report.get("failover")
+    if not isinstance(fo, dict):
+        return [f"{artifact.name}: no `failover` section (regenerate "
+                f"with `make bench`)"]
+    errors = []
+    for k in sorted(FAILOVER_KEYS - set(fo)):
+        errors.append(f"{artifact.name}: failover section missing "
+                      f"metric `{k}`")
+    ev = fo.get("fault_events")
+    if not ev:
+        errors.append(f"{artifact.name}: failover section recorded no "
+                      f"fault events — no namenode was killed")
+    return errors
+
+
 def main() -> int:
     errors = []
     for rel in DOCS:
         errors.extend(check_doc(ROOT / rel))
     errors.extend(check_benchmarks_schema(ROOT / "docs/BENCHMARKS.md",
                                           ROOT / "BENCH_throughput.json"))
+    errors.extend(check_failover_schema(ROOT / "BENCH_throughput.json"))
     if errors:
         print("docs-lint: FAIL")
         for e in errors:

@@ -16,10 +16,16 @@ Public surface:
   LeaderElection       — DB-as-shared-memory leader election (§3)
   HDFSNamenode / HDFSHACluster — the HDFS baseline (§2.1)
   profile_ops / HopsFSSim / HDFSSim — measured-cost DES (§7)
+  FaultInjector / ChaosPlan / RecoveryInvariants — deterministic chaos
+                         fault injection + failover convergence oracle
+                         (§7.6, docs/CHAOS.md)
 """
 from .batch_planner import (BatchPlanner, HintResolver, MultiCacheResolver,
                             PlanReport, PlannedBatch,
                             PlannedRequestPipeline, WindowController)
+from .chaos import (ChaosEvent, ChaosPlan, ChaosReport, Fault,
+                    FaultInjector, FaultSite, RecoveryInvariants,
+                    fault_schedules, replay_with_recovery)
 from .dfs_client import (BlockLocation, ConcatSummary, ContentSummary,
                          DFSClient, DeleteSummary, FileStatus,
                          TruncateSummary)
@@ -38,7 +44,8 @@ from .namenode import (BATCHABLE_READ_OPS, Client, GROUP_MUTABLE_OPS,
 from .ops_registry import (ArgSpec, OpSpec, OpRegistry, REGISTRY, REQUIRED,
                            WorkloadOp, register_op)
 from .store import (EXCLUSIVE, READ_COMMITTED, SHARED, LockTimeout,
-                    MetadataStore, NodeGroupDown, OpCost, StoreError)
+                    MetadataStore, NetworkPartition, NodeGroupDown, OpCost,
+                    StoreError)
 from .subtree import SubtreeOps, TreeNode
 from .tables import ROOT_ID, hdfs_capacity_files, hopsfs_capacity_files
 from .transactions import Transaction, run_with_retry
@@ -60,6 +67,10 @@ __all__ = [
     "split_path", "run_with_retry", "FSError", "FileNotFound",
     "FileAlreadyExists", "LeaseConflict", "SubtreeLockedError",
     "StoreError", "LockTimeout",
-    "NodeGroupDown", "ROOT_ID", "READ_COMMITTED", "SHARED", "EXCLUSIVE",
+    "NodeGroupDown", "NetworkPartition", "ROOT_ID", "READ_COMMITTED",
+    "SHARED", "EXCLUSIVE",
+    "FaultSite", "Fault", "ChaosPlan", "ChaosEvent", "ChaosReport",
+    "FaultInjector", "RecoveryInvariants", "fault_schedules",
+    "replay_with_recovery",
     "hdfs_capacity_files", "hopsfs_capacity_files",
 ]

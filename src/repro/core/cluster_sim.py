@@ -300,11 +300,13 @@ class HopsFSSim:
 
     def __init__(self, *, n_namenodes: int, n_ndb: int,
                  profiles: Dict[str, RTProfile],
-                 params: SimParams = DEFAULT_PARAMS, seed: int = 0):
+                 params: SimParams = DEFAULT_PARAMS, seed: int = 0,
+                 timeline_bin: float = 1.0):
         self.p = params
         self.sim = Sim()
         self.rng = random.Random(seed)
         self.profiles = profiles
+        self.timeline_bin = timeline_bin
         self.nn_handlers = [Server(self.sim, params.nn_handlers)
                             for _ in range(n_namenodes)]
         self.nn_cpu = [Server(self.sim, params.nn_cores)
@@ -317,6 +319,7 @@ class HopsFSSim:
         self.latencies: List[float] = []
         self.timeline: Dict[int, int] = {}
         self.failed_ops = 0
+        self.fault_events: List[Tuple[float, str, int]] = []
 
     # -- client behaviour ---------------------------------------------------
     def start_clients(self, n_clients: int, workload: SpotifyWorkload,
@@ -350,7 +353,7 @@ class HopsFSSim:
         self.completed += 1
         lat = self.sim.t - t0
         self.latencies.append(lat)
-        sec = int(self.sim.t)
+        sec = int(self.sim.t / self.timeline_bin)
         self.timeline[sec] = self.timeline.get(sec, 0) + 1
         issue_next()
 
@@ -442,10 +445,28 @@ class HopsFSSim:
     def restart_namenode(self, nn: int) -> None:
         self.nn_alive[nn] = True
 
+    def _fault(self, action: str, nn: int) -> None:
+        self.fault_events.append((self.sim.t, action, nn))
+        if action == "killed":
+            self.kill_namenode(nn)
+        else:
+            self.restart_namenode(nn)
+
+    def schedule_kill(self, at: float, nn: int) -> None:
+        """Mirror of a chaos-plan CRASH fault: kill ``nn`` at sim time
+        ``at`` and record the event in :attr:`fault_events`."""
+        self.sim.after(max(0.0, at - self.sim.t),
+                       lambda: self._fault("killed", nn))
+
+    def schedule_restart(self, at: float, nn: int) -> None:
+        self.sim.after(max(0.0, at - self.sim.t),
+                       lambda: self._fault("restarted", nn))
+
     # -- driver ---------------------------------------------------------------
     def run(self, seconds: float) -> SimResult:
         self.sim.run(seconds)
-        tl = sorted(self.timeline.items())
+        tl = sorted((b * self.timeline_bin, c)
+                    for b, c in self.timeline.items())
         return SimResult(self.completed, seconds, self.latencies, tl)
 
 
@@ -704,7 +725,8 @@ batch_planner.WindowController` feedback loop at DES scale: the pull cap
 class HDFSSim:
     """DES of HA-HDFS: one active namenode, global RW lock, failover gap."""
 
-    def __init__(self, *, params: SimParams = DEFAULT_PARAMS, seed: int = 0):
+    def __init__(self, *, params: SimParams = DEFAULT_PARAMS, seed: int = 0,
+                 timeline_bin: float = 1.0):
         self.p = params
         self.sim = Sim()
         self.rng = random.Random(seed)
@@ -715,6 +737,7 @@ class HDFSSim:
         self.completed = 0
         self.latencies: List[float] = []
         self.timeline: Dict[int, int] = {}
+        self.timeline_bin = timeline_bin
 
     def start_clients(self, n_clients: int, workload: SpotifyWorkload
                       ) -> None:
@@ -732,7 +755,7 @@ class HDFSSim:
     def _done(self, t0: float, issue_next: Callable[[], None]) -> None:
         self.completed += 1
         self.latencies.append(self.sim.t - t0)
-        sec = int(self.sim.t)
+        sec = int(self.sim.t / self.timeline_bin)
         self.timeline[sec] = self.timeline.get(sec, 0) + 1
         issue_next()
 
@@ -772,5 +795,6 @@ class HDFSSim:
 
     def run(self, seconds: float) -> SimResult:
         self.sim.run(seconds)
-        tl = sorted(self.timeline.items())
+        tl = sorted((b * self.timeline_bin, c)
+                    for b, c in self.timeline.items())
         return SimResult(self.completed, seconds, self.latencies, tl)

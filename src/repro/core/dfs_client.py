@@ -33,8 +33,8 @@ from .middleware import (CallContext, Handler, Middleware, compose, failover,
 from .namenode import (Client, Namenode, NamenodeCluster, PipelineStats,
                        RequestPipeline)
 from .ops_registry import REGISTRY, WorkloadOp
-from .store import (LockTimeout, NodeGroupDown, RowNotFound, StoreError,
-                    TransactionAborted)
+from .store import (LockTimeout, NetworkPartition, NodeGroupDown,
+                    RowNotFound, StoreError, TransactionAborted)
 
 # ---------------------------------------------------------------------------
 # typed results
@@ -97,7 +97,7 @@ ERROR_TYPES: Dict[str, Type[Exception]] = {
     cls.__name__: cls
     for cls in (FSError, FileNotFound, FileAlreadyExists, LeaseConflict,
                 SubtreeLockedError, StoreError, LockTimeout, NodeGroupDown,
-                TransactionAborted, RowNotFound)
+                TransactionAborted, RowNotFound, NetworkPartition)
 }
 
 
@@ -398,7 +398,8 @@ class BatchCall:
             try:
                 outcomes = nn.execute_batch([w for w, _, _ in todo])
             except StoreError as e:
-                if not nn.alive:              # died holding the batch
+                # died holding the batch, or unreachable: nothing executed
+                if not nn.alive or isinstance(e, NetworkPartition):
                     last = e
                     self._client.retries += 1
                     self._client._reset_sticky(CallContext(op="batch"))

@@ -356,6 +356,74 @@ class HopsFSOps:
             cost = txn.commit()
         return OpResult(len(lps), cost)
 
+    def scrub_leases(self) -> OpResult:
+        """Leader housekeeping: drop lease_path rows whose file is gone.
+        The HDFS LeaseManager removes a path entry the moment its file is
+        deleted; this model defers the removal to a housekeeping sweep so
+        the delete transaction keeps its Table-3 round-trip profile.
+        Returns the number of rows scrubbed."""
+        with Transaction(self.store, partition_hint=("lease_path", "client"),
+                         distribution_aware=self.dat) as txn:
+            scrubbed = 0
+            for lp in txn.full_scan("lease_path", lambda r: True):
+                if txn.index_scan("inode", "id", lp["inode_id"]):
+                    continue                      # file still exists
+                txn.read("lease_path", (lp["inode_id"],), EXCLUSIVE)
+                txn.delete("lease_path", (lp["inode_id"],))
+                scrubbed += 1
+            cost = txn.commit()
+        return OpResult(scrubbed, cost)
+
+    def recover_lease(self, path: str, *, client: str = "client"
+                      ) -> OpResult:
+        """Client-initiated lease recovery (the HDFS ``recoverLease`` RPC):
+        a NEW writer forces recovery of ``path``'s expired lease instead
+        of waiting for the leader's sweep.  Admission mirrors ``append``'s
+        takeover rule — the holder's lease must have outlived the soft
+        limit (``lease_limit`` liveness ticks without renewal); a live
+        holder raises :class:`LeaseConflict`.  Lock order matches every
+        other writer (inode first, the holder's lease row LAST), so the
+        under-lock liveness re-check serializes against the holder's own
+        piggybacked renewals exactly like ``lease_recover``.  Returns True
+        when the lease was recovered, False when there was nothing to
+        recover (not under construction, or already ours)."""
+        comps = split_path(path)
+        with self._begin(self._hint_for(comps, parent=False)) as txn:
+            rp = self._resolve(
+                txn, comps, last_lock=EXCLUSIVE, path=path,
+                aux=(("lease", lambda p, t:
+                      ((t.get("client") or client,) if t else None),
+                      READ_COMMITTED),))
+            target = rp.target
+            if target is None or target["is_dir"]:
+                raise FileNotFound(path)
+            holder = target.get("client")
+            if not target.get("under_construction") \
+                    or holder in (None, client):
+                cost = txn.commit()
+                return OpResult(False, cost)
+            # clear the file's writer state (cached until commit)
+            fixed = dict(target)
+            fixed["under_construction"] = False
+            fixed["client"] = None
+            txn.write("inode", fixed)
+            txn.delete("lease_path", (target["id"],))
+            # holder's lease row X-locked LAST: the soft-limit check runs
+            # under the lock, so a concurrent renewal wins cleanly
+            row = txn.read("lease", (holder,), EXCLUSIVE)
+            if self._lease_live(row):
+                cost = txn.cost.copy()
+                txn.abort()
+                raise LeaseConflict(
+                    f"{path}: lease held by {holder!r} is still live")
+            others = [lp for lp in txn.ppis("lease_path", "holder", holder,
+                                            READ_COMMITTED)
+                      if lp["inode_id"] != target["id"]]
+            if row is not None and not others:
+                txn.delete("lease", (holder,))    # last path: drop holder
+            cost = txn.commit()
+        return OpResult(True, cost)
+
     def _resolve(self, txn: Transaction, comps: Sequence[str], *,
                  last_lock: str, lock_parent: bool = False,
                  revalidate: bool = False, lock_last_in_batch: bool = False,

@@ -19,7 +19,7 @@ driver), which makes the protocol deterministic and testable.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Any, List, Optional
 
 from .store import MetadataStore
 from .transactions import Transaction
@@ -34,12 +34,19 @@ class LeaderElection:
         self.store = store
         self.max_missed = max_missed
         self.now = 0
+        #: chaos hook (chaos.FaultInjector.install): the "heartbeat" site —
+        #: a crash here is a namenode dying WITH its liveness proof, the
+        #: purest form of §7.6 failure (detected after max_missed ticks)
+        self.chaos: Optional[Any] = None
 
     def tick(self) -> None:
         self.now += 1
 
     def heartbeat(self, namenode_id: int) -> None:
         """One bounded-time write to the DB == liveness proof ([57])."""
+        if self.chaos is not None \
+                and not self.chaos.allow_heartbeat(namenode_id):
+            return      # the victim died instead of proving liveness
         with Transaction(self.store,
                          partition_hint=("leader", namenode_id)) as txn:
             txn.write("leader", {"namenode_id": namenode_id,

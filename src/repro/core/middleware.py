@@ -24,7 +24,8 @@ from typing import Any, Callable, Optional, Sequence
 
 from .fs import SubtreeLockedError
 from .ops_registry import REGISTRY, WorkloadOp
-from .store import LockTimeout, StoreError, TransactionAborted
+from .store import (LockTimeout, NetworkPartition, StoreError,
+                    TransactionAborted)
 
 
 @dataclass
@@ -112,7 +113,10 @@ def failover(attempts: int = 8,
              ) -> Middleware:
     """Transparent namenode failover (§7.6.1): a :class:`StoreError` from a
     namenode that is now DEAD means the op was in flight when it died —
-    retry elsewhere. Errors from a live namenode are genuine outcomes
+    retry elsewhere. A :class:`NetworkPartition` is retried even though
+    the namenode is alive: to the client an unreachable namenode and a
+    dead one are the same thing, and nothing executed on the other side.
+    Errors from a live, reachable namenode are genuine outcomes
     (FileNotFound, quota, ...) and propagate unchanged."""
     def mw(nxt: Handler) -> Handler:
         def handler(ctx: CallContext) -> Any:
@@ -124,7 +128,9 @@ def failover(attempts: int = 8,
                     raise               # inner middleware's business
                 except StoreError as e:
                     nn = ctx.namenode
-                    if nn is not None and not getattr(nn, "alive", True):
+                    if isinstance(e, NetworkPartition) or (
+                            nn is not None
+                            and not getattr(nn, "alive", True)):
                         ctx.retries += 1
                         last = e
                         if on_failover is not None:

@@ -169,6 +169,12 @@ class Namenode:
                              is_nn_alive=election.is_alive, **ops_kw)
         self.subtree = SubtreeOps(self.ops)
         self.alive = True
+        #: chaos injection hook (chaos.FaultInjector.install); None = off.
+        #: Sites fired here: "rpc" (perform/invoke), "batch_exchange"
+        #: (execute_batch), "group_txn_pre_lock"/"group_txn_post_lock"
+        #: (_write_group_txn) — see docs/CHAOS.md
+        self.chaos: Optional[Any] = None
+        self._in_batch = False   # suppress the rpc site for internal invokes
         self.ops_served = 0
         self.agg_cost = OpCost()     # committed-txn cost served by this NN
         self.batches_executed = 0
@@ -205,6 +211,17 @@ class Namenode:
             if res.value is not None:    # None = renewed since the scan
                 reclaimed += 1
         return reclaimed
+
+    def scrub_leases(self) -> int:
+        """Leader housekeeping twin of :meth:`recover_leases`: drop
+        lease_path rows orphaned by file deletion (the model defers the
+        HDFS LeaseManager's on-delete path removal to this sweep).
+        Returns the number of rows scrubbed."""
+        if not self.alive or not self.is_leader():
+            return 0
+        res = self.ops.scrub_leases()
+        self.agg_cost.merge(res.cost)
+        return res.value
 
     # -- response piggybacking (the closed-loop hint path) -------------
     def _piggyback_hints(self, paths: Sequence[str]
@@ -252,6 +269,8 @@ class Namenode:
         canonical positional entry point (DFSClient and Client use it)."""
         if not self.alive:
             raise StoreError(f"namenode {self.nn_id} is down")
+        if self.chaos is not None and not self._in_batch:
+            self.chaos.fire("rpc", self.nn_id)
         spec = REGISTRY[op]
         res = spec.resolve(self)(*args, **kw)
         return self._finish_op(spec, [a for a in args[:spec.paths]
@@ -264,6 +283,8 @@ class Namenode:
         end-to-end instead of being hardcoded here."""
         if not self.alive:
             raise StoreError(f"namenode {self.nn_id} is down")
+        if self.chaos is not None and not self._in_batch:
+            self.chaos.fire("rpc", self.nn_id)
         spec = REGISTRY[wop.op]
         paths, kw = spec.call_args(wop)
         res = spec.resolve(self)(*paths, **kw)
@@ -319,6 +340,19 @@ class Namenode:
         resolutions (one entry per op, None where unplanned)."""
         if not self.alive:
             raise StoreError(f"namenode {self.nn_id} is down")
+        if self.chaos is not None:
+            self.chaos.fire("batch_exchange", self.nn_id)
+        # ops inside the batch share THIS exchange: the per-op rpc site
+        # must not fire again for internal invokes
+        self._in_batch = True
+        try:
+            return self._execute_batch_inner(wops, hints)
+        finally:
+            self._in_batch = False
+
+    def _execute_batch_inner(self, wops: Sequence[WorkloadOp],
+                             hints: Optional[Sequence[Optional[PlanHint]]]
+                             ) -> List[OpOutcome]:
         results: List[Optional[OpOutcome]] = [None] * len(wops)
         i = 0
         while i < len(wops):
@@ -638,6 +672,8 @@ class Namenode:
             fallback.extend(idx for idx, *_ in items)
             return
         try:
+            if self.chaos is not None:     # crash before any lock is taken
+                self.chaos.fire("group_txn_pre_lock", self.nn_id)
             chains: Dict[int, Tuple[bool, List[Dict[str, Any]], int]] = {}
             rows: Dict[Tuple[int, str],
                        Tuple[Tuple[int, str],
@@ -681,6 +717,8 @@ class Namenode:
                         for tname, pk, lk in spec.group_aux(kw, parent_id,
                                                             target):
                             b.read(tname, pk, lk)
+            if self.chaos is not None:     # crash HOLDING the group's locks
+                self.chaos.fire("group_txn_post_lock", self.nn_id)
             # ---- validation + subtree checks + cache repair ------------
             valid: List[Tuple[int, List[str], Dict[str, Any],
                               Tuple[int, str], Tuple[int, str]]] = []
@@ -787,6 +825,11 @@ class NamenodeCluster:
         """Run the leader's lease-recovery housekeeping once."""
         ldr = self.leader()
         return ldr.recover_leases() if ldr is not None else 0
+
+    def scrub_leases(self) -> int:
+        """Run the leader's orphaned-lease-path scrub once."""
+        ldr = self.leader()
+        return ldr.scrub_leases() if ldr is not None else 0
 
     def kill(self, nn_id: int) -> None:
         self.namenodes[nn_id].alive = False

@@ -421,6 +421,11 @@ register_op("append", "ops", "append_file", args=(("client", "client"),),
             renews_lease=True)
 register_op("renew_lease", "ops", "renew_lease", paths=0,
             args=(("client", "client"),), renews_lease=True)
+# client-initiated soft-limit lease takeover (HDFS recoverLease): the new
+# writer forces recovery of an expired lease instead of waiting for the
+# leader's sweep — see HopsFSOps.recover_lease
+register_op("recover_lease", "ops", "recover_lease",
+            args=(("client", "client"),))
 register_op("chmod_file", "ops", "chmod_file", args=(("perm", 0o640),),
             group_mutable=True, group_apply=_apply_setattr("perm"),
             group_aux=_aux_setattr)

@@ -55,6 +55,14 @@ class NodeGroupDown(StoreError):
     """All replicas of a node group failed => cluster unavailable (§7.6.2)."""
 
 
+class NetworkPartition(StoreError):
+    """The client could not reach the namenode (the namenode itself may be
+    perfectly alive).  Raised by the chaos injector on partitioned
+    exchanges; the ``failover`` middleware treats it as retryable on
+    another namenode (§7.6.1 — to the client, an unreachable namenode and
+    a dead one are indistinguishable)."""
+
+
 # ---------------------------------------------------------------------------
 # Lock manager
 # ---------------------------------------------------------------------------

@@ -62,6 +62,9 @@ class SubtreeOps:
         # fault-injection hook: simulate the executing namenode dying after
         # N phase-3 batches (used by tests to verify §6.2 consistency)
         self.crash_after_batches = crash_after_batches
+        #: generalized chaos hook (chaos.FaultInjector.install); fires the
+        #: "subtree_chunk" site between phase-3 chunk commits
+        self.chaos: Optional[Any] = None
 
     # ------------------------------------------------------------------
     # Phase 1: subtree lock
@@ -189,6 +192,10 @@ class SubtreeOps:
             batches = 0
             for i in range(0, len(order), self.batch_size):
                 chunk = order[i:i + self.batch_size]
+                if self.chaos is not None:
+                    # chunk-commit boundary: a crash here leaves the
+                    # subtree flag set and a consistent smaller tree
+                    self.chaos.fire("subtree_chunk", self.ops.nn_id)
                 if self.crash_after_batches is not None \
                         and batches >= self.crash_after_batches:
                     # simulated namenode crash: subtree lock flag remains,
@@ -228,7 +235,10 @@ class SubtreeOps:
                     txn.write("inode", p)
                 cost.merge(txn.commit())
             return OpResult({"deleted": deleted, "crashed": False}, cost)
-        except Exception:
+        except Exception as e:
+            if getattr(e, "chaos_crash", False):
+                raise     # a crashed namenode cannot run cleanup: the
+                          # subtree flag stays for a survivor to reclaim
             self._unlock(root, cost)
             raise
 

@@ -23,10 +23,8 @@ Contract:
 """
 import pytest
 
-from repro.core import (BatchPlanner, DFSClient, MetadataStore,
-                        NamenodeCluster, PlannedRequestPipeline,
+from repro.core import (BatchPlanner, DFSClient, PlannedRequestPipeline,
                         RequestPipeline, WindowController, WorkloadOp,
-                        format_fs, materialize_namespace,
                         namespace_snapshot)
 from repro.core.cluster_sim import BatchedHopsFSSim, profile_ops
 from repro.core.workload import (NamespaceSpec, SyntheticNamespace,
@@ -35,33 +33,20 @@ from repro.core.workload import (NamespaceSpec, SyntheticNamespace,
                                  make_spotify_trace)
 
 
-def _build(n_namenodes: int, *, n_dirs: int = 16, files_per_dir: int = 4):
-    store = MetadataStore(n_datanodes=4)
-    format_fs(store)
-    cluster = NamenodeCluster(store, n_namenodes)
-    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=n_dirs,
-                            files_per_dir=files_per_dir)
-    materialize_namespace(cluster.namenodes[0], ns)
-    return store, cluster, ns
-
-
-def _small():
-    store = MetadataStore(n_datanodes=4)
-    format_fs(store)
-    cluster = NamenodeCluster(store, 2)
-    cluster.namenodes[0].ops.mkdirs("/w")
-    return store, cluster
+# cluster construction lives in the shared make_cluster fixture
+# (tests/conftest.py); make_cluster(2, dirs=("/w",)) is make_cluster(2, dirs=("/w",)) and
+# _build(n) is make_cluster(n, namespace=True).
 
 
 # ---------------------------------------------------------------------------
 # 1. response hint piggybacking
 # ---------------------------------------------------------------------------
 
-def test_responses_carry_piggybacked_hints():
+def test_responses_carry_piggybacked_hints(make_cluster):
     """A namenode response's ``hints`` hold the full (parent_id, name) ->
     inode_id chain of the op's path, enough for a cold client to resolve
     the same path without ever reading a namenode cache."""
-    _store, cluster = _small()
+    _store, cluster = make_cluster(2, dirs=("/w",))
     nn = cluster.namenodes[0]
     nn.ops.mkdirs("/w/a/b")
     nn.ops.create("/w/a/b/f")
@@ -76,11 +61,11 @@ def test_responses_carry_piggybacked_hints():
     assert parent == res.value["id"]
 
 
-def test_dfs_client_cache_warms_from_responses_and_invalidates():
+def test_dfs_client_cache_warms_from_responses_and_invalidates(make_cluster):
     """The facade's client cache warms from every response and drops
     entries on destructive ops — rename moves the mapping, delete removes
     it."""
-    _store, cluster = _small()
+    _store, cluster = make_cluster(2, dirs=("/w",))
     dfs = DFSClient(cluster)
     fid = dfs.create("/w/f")
     wid = dfs.stat("/w").inode_id
@@ -93,11 +78,11 @@ def test_dfs_client_cache_warms_from_responses_and_invalidates():
     assert dfs.hint_cache.invalidations >= 2
 
 
-def test_client_cache_resolves_without_namenode_caches():
+def test_client_cache_resolves_without_namenode_caches(make_cluster):
     """The closed-loop core claim: once warmed from responses, the client
     cache alone (namenode caches cleared = the fallback resolver is
     empty) still resolves paths for planning."""
-    _store, cluster, ns = _build(2)
+    _store, cluster, ns = make_cluster(2, namespace=True)
     trace = [WorkloadOp("read", f) for f in ns.files[:40]]
     pipe = PlannedRequestPipeline(cluster, batch_size=8)
     pipe.run(trace)
@@ -111,10 +96,10 @@ def test_client_cache_resolves_without_namenode_caches():
     assert planner.report.client_fallback_hits == 0
 
 
-def test_closed_loop_hit_rate_and_stale_telemetry():
+def test_closed_loop_hit_rate_and_stale_telemetry(make_cluster):
     """Across windows the planner's probes shift onto the client cache
     (hit rate > 0), and the report carries staleness telemetry fields."""
-    _store, cluster, ns = _build(2)
+    _store, cluster, ns = make_cluster(2, namespace=True)
     trace = make_spotify_trace(ns, 240, seed=5)
     pipe = PlannedRequestPipeline(cluster, batch_size=8, window=80)
     pipe.run(trace)
@@ -151,8 +136,8 @@ def test_window_controller_policy():
     assert c.history[0] == 64 and c.history[-1] == 16
 
 
-def test_adaptive_window_grows_on_clean_trace():
-    _store, cluster, ns = _build(2)
+def test_adaptive_window_grows_on_clean_trace(make_cluster):
+    _store, cluster, ns = make_cluster(2, namespace=True)
     trace = [WorkloadOp("read", ns.files[i % len(ns.files)])
              for i in range(240)]
     pipe = PlannedRequestPipeline(cluster, batch_size=8, window=48)
@@ -163,11 +148,11 @@ def test_adaptive_window_grows_on_clean_trace():
     assert pipe.planner.controller.window > 48
 
 
-def test_adaptive_window_shrinks_under_conflicts():
+def test_adaptive_window_shrinks_under_conflicts(make_cluster):
     """A pathological trace (every mutation collides on one path) drives
     the pin rate to ~1, and the controller backs the window off to its
     floor instead of speculating."""
-    _store, cluster = _small()
+    _store, cluster = make_cluster(2, dirs=("/w",))
     cluster.namenodes[0].ops.create("/w/hot")
     trace = [WorkloadOp("chmod_file", "/w/hot", args={"perm": 0o600})
              for _ in range(160)]
@@ -199,11 +184,11 @@ def test_des_mirrors_adaptive_window():
 # 3. concurrent-mode lease-ordered dealing
 # ---------------------------------------------------------------------------
 
-def test_concurrent_mode_no_longer_pins_all_mutations():
+def test_concurrent_mode_no_longer_pins_all_mutations(make_cluster):
     """The lifted restriction: concurrent planned execution deals free
     mutations (and lease-ordered block-write runs) out of the ordered
     queue — grouped writes engage in concurrent mode too."""
-    _store, cluster, ns = _build(2)
+    _store, cluster, ns = make_cluster(2, namespace=True)
     trace = make_spotify_trace(ns, 300, seed=5, mix=WRITE_HEAVY_MIX)
     pipe = PlannedRequestPipeline(cluster, batch_size=8, concurrent=True)
     stats = pipe.run(trace)
@@ -213,7 +198,7 @@ def test_concurrent_mode_no_longer_pins_all_mutations():
     assert rep.pinned_ops < rep.ops            # not everything was pinned
 
 
-def test_planned_concurrent_write_heavy_state_and_write_batching():
+def test_planned_concurrent_write_heavy_state_and_write_batching(make_cluster):
     """The ISSUE acceptance bar: on the write-heavy mix, sequential /
     reactive / planned / planned+concurrent all converge to the same
     namespace; the concurrent mode's batched_write_fraction is no worse
@@ -223,7 +208,7 @@ def test_planned_concurrent_write_heavy_state_and_write_batching():
     trace = make_spotify_trace(ns_ref, 400, seed=5, mix=WRITE_HEAVY_MIX)
 
     def build():
-        return _build(4)[:2]
+        return make_cluster(4, namespace=True)[:2]
 
     store_seq, cl = build()
     RequestPipeline(cl, batch_size=1).run(trace)
@@ -248,12 +233,12 @@ def test_planned_concurrent_write_heavy_state_and_write_batching():
     assert cc_pipe.plan_report.lease_ordered_ops > 0
 
 
-def test_concurrent_same_file_block_runs_stay_ordered():
+def test_concurrent_same_file_block_runs_stay_ordered(make_cluster):
     """A hot file growing by 24 blocks while other files churn, executed
     by the CONCURRENT planned pipeline: block indices must come out
     exactly 0..23 — any cross-worker interleaving of the same-file run
     would duplicate or skip an index."""
-    store, cluster = _small()
+    store, cluster = make_cluster(2, dirs=("/w",))
     nn = cluster.namenodes[0]
     nn.ops.create("/w/hot")
     for i in range(4):
@@ -272,14 +257,14 @@ def test_concurrent_same_file_block_runs_stay_ordered():
     assert sorted(r["index"] for r in rows) == list(range(24))
 
 
-def test_interleaved_same_partition_block_runs_stay_atomic():
+def test_interleaved_same_partition_block_runs_stay_atomic(make_cluster):
     """Two files hashing to the SAME partition with interleaved add_block
     runs: the (partition, type, i) sort alone would leave each file's run
     non-contiguous, letting the chunk cut split it across batches (and
     potentially slots). The key-anchored deal must put each file's whole
     run into exactly one batch — the atomic unit of per-file ordering —
     and concurrent replay must produce exact block indices."""
-    store, cluster = _small()
+    store, cluster = make_cluster(2, dirs=("/w",))
     nn = cluster.namenodes[0]
     t = store.table("inode")
     by_part = {}
@@ -319,17 +304,17 @@ def test_interleaved_same_partition_block_runs_stay_atomic():
         assert sorted(r["index"] for r in rows) == list(range(6))
 
 
-def test_same_file_contention_concurrent_equals_sequential():
+def test_same_file_contention_concurrent_equals_sequential(make_cluster):
     """The ISSUE satellite: two clients interleaving append / add_block /
     complete_block on ONE file. The non-holder is refused with
     ``LeaseConflict`` on every attempt, the outcome stream matches
     sequential replay exactly (contending ops pin to submission order),
     and the final namespace is identical."""
     trace = make_block_contention_trace("/w/f", 6)
-    store_seq, cluster_seq = _small()
+    store_seq, cluster_seq = make_cluster(2, dirs=("/w",))
     cluster_seq.namenodes[0].ops.create("/w/f", client="c1")
     seq = RequestPipeline(cluster_seq, batch_size=1).run(trace)
-    store_cc, cluster_cc = _small()
+    store_cc, cluster_cc = make_cluster(2, dirs=("/w",))
     cluster_cc.namenodes[0].ops.create("/w/f", client="c1")
     cc = PlannedRequestPipeline(cluster_cc, batch_size=8,
                                 concurrent=True).run(trace)
@@ -345,12 +330,12 @@ def test_same_file_contention_concurrent_equals_sequential():
 # 4. piggybacked lease renewal
 # ---------------------------------------------------------------------------
 
-def test_steady_writer_never_trips_lease_recovery():
+def test_steady_writer_never_trips_lease_recovery(make_cluster):
     """ROADMAP PR-4 follow-up: a client that keeps WRITING (block ops)
     without ever calling renew_lease stays live — every registered op it
     executes refreshes its lease stamp, so the leader's recovery sweep
     finds nothing to reclaim."""
-    store, cluster = _small()
+    store, cluster = make_cluster(2, dirs=("/w",))
     dfs = DFSClient(cluster)
     dfs.create("/w/f", client="c1")
     limit = cluster.namenodes[0].ops.lease_limit
@@ -368,12 +353,12 @@ def test_steady_writer_never_trips_lease_recovery():
     assert store.table("lease").get(("c1",)) is None
 
 
-def test_lease_recover_rechecks_liveness_under_lock():
+def test_lease_recover_rechecks_liveness_under_lock(make_cluster):
     """A holder that renewed between the leader's expiry scan and the
     recovery transaction (the piggybacked-touch race) must NOT be
     reclaimed: lease_recover re-reads the lease row under its exclusive
     lock and skips live holders."""
-    store, cluster = _small()
+    store, cluster = make_cluster(2, dirs=("/w",))
     dfs = DFSClient(cluster)
     dfs.create("/w/f", client="c1")
     limit = cluster.namenodes[0].ops.lease_limit
@@ -390,8 +375,8 @@ def test_lease_recover_rechecks_liveness_under_lock():
     assert row["under_construction"] is True and row["client"] == "c1"
 
 
-def test_touch_lease_only_refreshes_existing_holders():
-    _store, cluster = _small()
+def test_touch_lease_only_refreshes_existing_holders(make_cluster):
+    _store, cluster = make_cluster(2, dirs=("/w",))
     nn = cluster.namenodes[0]
     assert nn.ops.touch_lease("ghost") is False
     dfs = DFSClient(cluster)

@@ -16,34 +16,17 @@ Contract, mirroring what PR 3 asserted for the setattr path:
 """
 import pytest
 
-from repro.core import (BatchPlanner, DFSClient, LeaseConflict,
-                        MetadataStore, NamenodeCluster, OpCost,
+from repro.core import (BatchPlanner, DFSClient, LeaseConflict, OpCost,
                         PlannedRequestPipeline, RequestPipeline, WorkloadOp,
-                        format_fs, materialize_namespace,
                         namespace_snapshot)
 from repro.core.ops_registry import REGISTRY
 from repro.core.workload import (NamespaceSpec, SyntheticNamespace,
                                  WRITE_HEAVY_MIX, make_spotify_trace)
 
-
-def _single_nn():
-    store = MetadataStore(n_datanodes=4)
-    format_fs(store)
-    cluster = NamenodeCluster(store, 1)
-    nn = cluster.namenodes[0]
-    nn.ops.mkdirs("/a/b")
-    nn.ops.mkdirs("/a/c")
-    for i in range(4):
-        nn.ops.create(f"/a/b/f{i}")
-    return store, cluster, nn
-
-
-def _cluster(n_nn=2):
-    store = MetadataStore(n_datanodes=4)
-    format_fs(store)
-    cluster = NamenodeCluster(store, n_nn)
-    cluster.namenodes[0].ops.mkdirs("/w")
-    return store, cluster
+# setup recipes for the shared make_cluster fixture (tests/conftest.py)
+SINGLE_NN = dict(dirs=("/a/b", "/a/c"),
+                 files=tuple(f"/a/b/f{i}" for i in range(4)))
+W_DIR = dict(dirs=("/w",))
 
 
 def _block_indices(store, inode_id):
@@ -56,7 +39,7 @@ def _block_indices(store, inode_id):
 # 1. grouped block writes == sequential execution, byte for byte
 # ---------------------------------------------------------------------------
 
-def test_grouped_block_writes_equal_sequential_state():
+def test_grouped_block_writes_equal_sequential_state(make_cluster):
     """Runs of add_block/append/complete_block share one transaction; ids,
     sizes, block indices, ruc/replica rows and every other table must be
     byte-identical to sequential execution (execute phases run in
@@ -68,9 +51,11 @@ def test_grouped_block_writes_equal_sequential_state():
                for i in range(4)]
             + [WorkloadOp("add_block", "/a/b/f0"),
                WorkloadOp("add_block", "/a/b/missing")])   # in-group error
-    store_b, _, nn_b = _single_nn()
+    store_b, cl_b = make_cluster(1, **SINGLE_NN)
+    nn_b = cl_b.namenodes[0]
     out_b = nn_b.execute_batch(wops)
-    store_s, _, nn_s = _single_nn()
+    store_s, cl_s = make_cluster(1, **SINGLE_NN)
+    nn_s = cl_s.namenodes[0]
     out_s = [nn_s._safe_exec(w) for w in wops]
     assert store_b.dump_state() == store_s.dump_state()
     assert [(o.ok, o.error) for o in out_b] == \
@@ -86,22 +71,25 @@ def test_grouped_block_writes_equal_sequential_state():
     assert agg.as_dict() == nn_b.agg_cost.as_dict()
 
 
-def test_grouped_block_writes_save_round_trips():
+def test_grouped_block_writes_save_round_trips(make_cluster):
     wops = [WorkloadOp("add_block", f"/a/b/f{i % 4}") for i in range(8)]
-    store_b, _, nn_b = _single_nn()
+    store_b, cl_b = make_cluster(1, **SINGLE_NN)
+    nn_b = cl_b.namenodes[0]
     for o in nn_b.execute_batch(wops):
         assert o.ok and o.batched
-    store_s, _, nn_s = _single_nn()
+    store_s, cl_s = make_cluster(1, **SINGLE_NN)
+    nn_s = cl_s.namenodes[0]
     for w in wops:
         assert nn_s._safe_exec(w).ok
     assert nn_b.agg_cost.round_trips < nn_s.agg_cost.round_trips
 
 
-def test_same_file_block_ops_keep_submission_order_grouped():
+def test_same_file_block_ops_keep_submission_order_grouped(make_cluster):
     """Ten add_blocks on ONE file in one grouped transaction must produce
     indices 0..9 exactly — each op sees the blocks written by the ops
     before it (read-your-writes inside the shared transaction)."""
-    store, _, nn = _single_nn()
+    store, cl = make_cluster(1, **SINGLE_NN)
+    nn = cl.namenodes[0]
     fid = nn.ops.stat("/a/b/f0").value["id"]
     out = nn.execute_batch([WorkloadOp("add_block", "/a/b/f0")
                             for _ in range(10)])
@@ -113,11 +101,11 @@ def test_same_file_block_ops_keep_submission_order_grouped():
 # 2. planner: lease-ordered dealing never reorders same-file block ops
 # ---------------------------------------------------------------------------
 
-def test_planner_frees_same_type_block_runs():
+def test_planner_frees_same_type_block_runs(make_cluster):
     """A run of add_blocks on one file is NOT pinned (lease-ordered free
     dealing): it stays groupable, and the dealt order preserves
     submission order."""
-    store, cluster = _cluster()
+    store, cluster = make_cluster(2, **W_DIR)
     nn = cluster.namenodes[0]
     nn.ops.create("/w/hot")
     planner = BatchPlanner(cluster, batch_size=4)
@@ -130,11 +118,11 @@ def test_planner_frees_same_type_block_runs():
     assert planner.report.pinned_ops == 0
 
 
-def test_planner_pins_mixed_type_block_ops():
+def test_planner_pins_mixed_type_block_ops(make_cluster):
     """Mixed block-op types on ONE file (append → add_block → complete)
     would be reordered by the type sort, so they pin to submission order;
     block ops on OTHER files stay free."""
-    store, cluster = _cluster()
+    store, cluster = make_cluster(2, **W_DIR)
     nn = cluster.namenodes[0]
     nn.ops.create("/w/mixed")
     nn.ops.create("/w/other")
@@ -155,12 +143,12 @@ def test_planner_pins_mixed_type_block_ops():
     assert dealt == list(range(len(wops)))
 
 
-def test_planned_same_file_block_ops_never_reorder():
+def test_planned_same_file_block_ops_never_reorder(make_cluster):
     """End to end through the planned pipeline on one namenode: a hot file
     growing by 20 blocks (interleaved with other files' writes and reads)
     ends with indices exactly 0..19 — no duplicate or skipped index, which
     is what any reordering of same-file add_blocks would produce."""
-    store, cluster = _cluster(1)
+    store, cluster = make_cluster(1, **W_DIR)
     nn = cluster.namenodes[0]
     nn.ops.create("/w/hot")
     for i in range(4):
@@ -184,8 +172,8 @@ def test_planned_same_file_block_ops_never_reorder():
 # 3. leases: conflict, renewal, leader-driven recovery
 # ---------------------------------------------------------------------------
 
-def test_lease_conflict_blocks_second_writer():
-    store, cluster = _cluster()
+def test_lease_conflict_blocks_second_writer(make_cluster):
+    store, cluster = make_cluster(2, **W_DIR)
     dfs = DFSClient(cluster)
     dfs.create("/w/f", client="c1")
     with pytest.raises(LeaseConflict):
@@ -196,11 +184,11 @@ def test_lease_conflict_blocks_second_writer():
     assert dfs.add_block("/w/f", client="c1") > 0
 
 
-def test_leader_reclaims_dead_client_lease():
+def test_leader_reclaims_dead_client_lease(make_cluster):
     """The ISSUE scenario: a client dies (stops heartbeating), the leader
     reclaims its lease against the shared liveness clock, and a second
     client's append succeeds."""
-    store, cluster = _cluster()
+    store, cluster = make_cluster(2, **W_DIR)
     dfs = DFSClient(cluster)
     fid = dfs.create("/w/f", client="c1")
     dfs.add_block("/w/f", client="c1")
@@ -232,11 +220,11 @@ def test_leader_reclaims_dead_client_lease():
         dfs.add_block("/w/f", client="c1")
 
 
-def test_append_takes_over_expired_lease_without_recovery():
+def test_append_takes_over_expired_lease_without_recovery(make_cluster):
     """append acquires the lease itself, so it may take over an EXPIRED
     lease before the leader's sweep runs — and the takeover re-fences the
     file under the new holder."""
-    store, cluster = _cluster()
+    store, cluster = make_cluster(2, **W_DIR)
     dfs = DFSClient(cluster)
     dfs.create("/w/f", client="c1")
     for _ in range(cluster.namenodes[0].ops.lease_limit + 2):
@@ -249,11 +237,8 @@ def test_append_takes_over_expired_lease_without_recovery():
     assert dfs.add_block("/w/f", client="c2") > 0
 
 
-def test_auto_lease_recovery_on_tick():
-    store = MetadataStore(n_datanodes=4)
-    format_fs(store)
-    cluster = NamenodeCluster(store, 2, auto_lease_recovery=True)
-    cluster.namenodes[0].ops.mkdirs("/w")
+def test_auto_lease_recovery_on_tick(make_cluster):
+    store, cluster = make_cluster(2, auto_lease_recovery=True, **W_DIR)
     dfs = DFSClient(cluster)
     dfs.create("/w/f", client="c1")
     for _ in range(cluster.namenodes[0].ops.lease_limit + 2):
@@ -266,7 +251,7 @@ def test_auto_lease_recovery_on_tick():
 # 4. the write-heavy mix through the three execution modes
 # ---------------------------------------------------------------------------
 
-def test_write_heavy_mix_batches_block_writes():
+def test_write_heavy_mix_batches_block_writes(make_cluster):
     """The ISSUE acceptance bar: on the write-heavy mix the planned
     pipeline serves a batched_write_fraction STRICTLY above the PR 3
     read-mostly value (0.022), with fewer DB round trips than the
@@ -276,13 +261,7 @@ def test_write_heavy_mix_batches_block_writes():
     trace = make_spotify_trace(ns_ref, 400, seed=5, mix=WRITE_HEAVY_MIX)
 
     def build():
-        store = MetadataStore(n_datanodes=4)
-        format_fs(store)
-        cluster = NamenodeCluster(store, 4)
-        ns = SyntheticNamespace(NamespaceSpec(), n_dirs=16,
-                                files_per_dir=4)
-        materialize_namespace(cluster.namenodes[0], ns)
-        return store, cluster
+        return make_cluster(4, namespace=True)[:2]
 
     store_seq, cl = build()
     seq = RequestPipeline(cl, batch_size=1).run(trace)
