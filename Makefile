@@ -2,7 +2,7 @@
 PY        ?= python
 PYTHONPATH := src
 
-.PHONY: test pytest chaos lint smoke bench bench-all bench-quick docs-lint
+.PHONY: test pytest chaos elastic lint smoke bench bench-all bench-quick docs-lint
 
 test: lint smoke           ## default flow: lint + example smoke + tier-1 suite
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -x -q
@@ -12,6 +12,9 @@ pytest:                  ## tier-1 suite only (ROADMAP verify command)
 
 chaos:                   ## fault-injection / failover recovery suite (docs/CHAOS.md)
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest tests/test_chaos_recovery.py -q -m chaos
+
+elastic:                 ## elastic namenode pool suite (docs/ELASTICITY.md)
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest tests/test_elastic_pool.py -q
 
 lint:                    ## pyflakes if installed, else the AST fallback
 	PYTHONPATH=$(PYTHONPATH) $(PY) scripts/lint.py

@@ -260,6 +260,153 @@ def failover_report(trace, profiles, *, n_namenodes: int = 4,
     }
 
 
+def elasticity_report(trace, profiles, *, batch_size: int = 16,
+                      horizon: float = 0.3, timeline_bin: float = 0.02,
+                      scale_out_frac: float = 0.3,
+                      scale_in_frac: float = 0.7,
+                      phase_ops: int = 600, seed: int = 1) -> Dict:
+    """The elastic-pool benchmark, two layers like everything else here.
+
+    **DES**: replay on the batched planned pipeline starting at 2
+    namenodes, scale out to 4 mid-run and back in to 2 later, with
+    fine-grained timeline bins — throughput must RISE through scale-out
+    with no zero-throughput bins (joiners pull from the shared queue
+    immediately) and return to the 2-NN steady state after scale-in.
+
+    **Functional**: three phases of ONE continuous Spotify stream on the
+    real store. Phase A (2 NNs, fixed) measures the steady-state client
+    hint hit rate; phase B runs with an ``ElasticNamenodePool`` attached,
+    which scales 2→4 under queue pressure (joiners pre-warmed from the
+    client cache); idle ticks then scale back 4→2, warm-migrating the
+    victims' caches; phase C measures the post-migration hit rate — the
+    warm-migration claim is that it stays within a few percent of phase
+    A's. The full three-phase namespace must equal a fixed-size
+    sequential replay of the same trace (scale events move WORK, never
+    metadata)."""
+    from repro.core import PlannedRequestPipeline, RequestPipeline
+    from repro.core.pool import ElasticNamenodePool
+    from repro.core.hint_cache import InodeHintCache
+    from repro.core.workload import make_phased_trace
+
+    # -- DES: throughput through scale-out 2->4 and scale-in 4->2 ------
+    base_nns, peak_nns = 2, 4
+    sim = BatchedHopsFSSim(n_namenodes=base_nns, n_ndb=8,
+                           profiles=profiles, batch_size=batch_size,
+                           seed=seed, planned=True,
+                           timeline_bin=timeline_bin)
+    # client population sized for the PEAK fleet, so the base fleet is
+    # genuinely oversubscribed and scale-out has headroom to absorb
+    sim.start_clients(200 * peak_nns, TraceReplay(trace))
+    out_at = round(scale_out_frac * horizon, 4)
+    in_at = round(scale_in_frac * horizon, 4)
+    sim.schedule_scale_out(out_at, peak_nns - base_nns)
+    sim.schedule_scale_in(in_at, peak_nns - base_nns)
+    res = sim.run(horizon)
+    counts = dict(res.timeline)
+    n_bins = int(horizon / timeline_bin)
+    series = [counts.get(b * timeline_bin, 0) for b in range(n_bins)]
+    out_bin = int(out_at / timeline_bin)
+    in_bin = int(in_at / timeline_bin)
+    pre = series[1:out_bin]               # drop the cold-start bin
+    steady = sum(pre) / len(pre) if pre else 0.0
+    # settled scaled-phase throughput: skip the ramp bin after scale-out
+    scaled_bins = series[out_bin + 1:in_bin]
+    scaled = (sum(scaled_bins) / len(scaled_bins) if scaled_bins else 0.0)
+    post = series[in_bin:]
+    # recovery after scale-in = first bin back DOWN to within 25% of the
+    # 2-NN steady state (the fleet sheds capacity, so "recovered" means
+    # settled, not restored)
+    rec_bin = next((in_bin + i for i, c in enumerate(post)
+                    if c <= 1.25 * steady), None)
+    recovered = rec_bin is not None
+
+    # -- functional: warm migration on the real store ------------------
+    def build():
+        store = MetadataStore(n_datanodes=4)
+        format_fs(store)
+        cluster = NamenodeCluster(store, base_nns)
+        ns = SyntheticNamespace(NamespaceSpec(), n_dirs=20,
+                                files_per_dir=4)
+        materialize_namespace(cluster.namenodes[0], ns)
+        return store, cluster, ns
+
+    store, cluster, ns = build()
+    full, bounds = make_phased_trace(ns, [phase_ops] * 3, seed=5)
+    a, b, c = (full[:bounds[0]], full[bounds[0]:bounds[1]],
+               full[bounds[1]:])
+    cache = InodeHintCache()
+    window = batch_size * 8
+
+    def run_phase(wops, pool=None):
+        pipe = PlannedRequestPipeline(cluster, batch_size=batch_size,
+                                      window=window, client_cache=cache,
+                                      adaptive=False, pool=pool)
+        stats = pipe.run(wops)
+        return stats, pipe.plan_report
+
+    stats_a, rep_a = run_phase(a)
+    pool = ElasticNamenodePool(cluster, min_namenodes=base_nns,
+                               max_namenodes=peak_nns, high_load=60,
+                               low_load=20, hysteresis=2, cooldown=2)
+    pool.register_client_cache(cache)
+    stats_b, rep_b = run_phase(b, pool=pool)
+    # drain: idle control rounds scale the fleet back in, warm-migrating
+    # each victim's hint cache to the survivors
+    for _ in range(32):
+        if len(cluster.alive_namenodes()) <= base_nns:
+            break
+        pool.tick(queue_depth=0)
+    stats_c, rep_c = run_phase(c)
+    ok = stats_a.ok + stats_b.ok + stats_c.ok
+    failed = stats_a.failed + stats_b.failed + stats_c.failed
+
+    # fixed-size sequential oracle over the SAME full trace
+    store_seq, cluster_seq, _ = build()
+    RequestPipeline(cluster_seq, batch_size=1).run(full)
+    state_equal = (namespace_snapshot(store)
+                   == namespace_snapshot(store_seq))
+
+    before = rep_a.hint_hit_rate
+    after = rep_c.hint_hit_rate
+    return {
+        "n_namenodes_base": base_nns,
+        "n_namenodes_peak": peak_nns,
+        "scale_out_at_s": out_at,
+        "scale_in_at_s": in_at,
+        "horizon_s": horizon,
+        "timeline_bin_s": timeline_bin,
+        "steady_ops_per_bin": round(steady, 1),
+        "scaled_ops_per_bin": round(scaled, 1),
+        "scale_out_gain_pct": (round(100 * (scaled / steady - 1), 1)
+                               if steady else 0.0),
+        "zero_bins_during_scale_out": sum(
+            1 for v in series[out_bin:in_bin] if v == 0),
+        "scale_in_recovered": recovered,
+        "scale_in_recovery_s": (round((rec_bin - in_bin + 1)
+                                      * timeline_bin, 4)
+                                if recovered else None),
+        "completed_ops": res.completed,
+        "scale_events": [[round(t, 4), action, nn]
+                         for t, action, nn in sim.fault_events],
+        # functional warm-migration phases
+        "phase_ops": phase_ops,
+        "ok": ok,
+        "failed": failed,
+        "hint_hit_rate_before": round(before, 3),
+        "hint_hit_rate_after": round(after, 3),
+        "hint_hit_rate_drop_pct": (round(100 * (1 - after / before), 1)
+                                   if before else 0.0),
+        "hint_routed_batches": (rep_b.hint_routed_batches
+                                + rep_c.hint_routed_batches),
+        "migrated_hint_entries": pool.migrated_entries,
+        "pool_scale_outs": pool.scale_outs,
+        "pool_scale_ins": pool.scale_ins,
+        "pool_events": [[e.t, e.action, e.nn_id, e.migrated_entries]
+                        for e in pool.events],
+        "state_matches_sequential": state_equal,
+    }
+
+
 def run_replay(*, quick: bool = False, namenode_counts=(1, 4, 16),
                batch_size: int = 16, trace_ops: int = 5000,
                seed: int = 11) -> Dict:
@@ -301,6 +448,9 @@ def run_replay(*, quick: bool = False, namenode_counts=(1, 4, 16),
         batch_size=batch_size)
     failover = failover_report(trace, profiles, batch_size=batch_size,
                                horizon=horizon)
+    elasticity = elasticity_report(trace, profiles, batch_size=batch_size,
+                                   horizon=horizon,
+                                   phase_ops=300 if quick else 600)
     return {
         "benchmark": "trace_replay_throughput",
         "paper_figure": "Fig 7 (throughput vs number of namenodes)",
@@ -322,6 +472,7 @@ def run_replay(*, quick: bool = False, namenode_counts=(1, 4, 16),
         "functional_batching": func,
         "functional_batching_write_heavy": func_w,
         "failover": failover,
+        "elasticity": elasticity,
     }
 
 
@@ -365,6 +516,14 @@ def bench_trace_replay(quick: bool = False) -> List[Row]:
                  f"{fo['dip_depth_pct']}%, recovery {fo['recovery_s']} s "
                  f"({fo['ops_to_recovery']} ops), "
                  f"{fo['zero_bins_after_kill']} zero bins (paper: none)"))
+    el = report["elasticity"]
+    rows.append(("trace_replay.elasticity", 0.0,
+                 f"scale-out {el['n_namenodes_base']}->"
+                 f"{el['n_namenodes_peak']} NN: +{el['scale_out_gain_pct']}%"
+                 f" throughput, {el['zero_bins_during_scale_out']} zero "
+                 f"bins; hint hit rate {el['hint_hit_rate_before']} -> "
+                 f"{el['hint_hit_rate_after']} after warm migration "
+                 f"(state match: {el['state_matches_sequential']})"))
     return rows
 
 
@@ -419,6 +578,17 @@ def main() -> None:
           f"{fo['dip_depth_pct']}% of steady, recovered in "
           f"{fo['recovery_s']} s ({fo['ops_to_recovery']} ops), "
           f"{fo['zero_bins_after_kill']} zero bins after kill")
+    el = report["elasticity"]
+    print(f"elasticity: {el['n_namenodes_base']}->"
+          f"{el['n_namenodes_peak']}->{el['n_namenodes_base']} NN, "
+          f"+{el['scale_out_gain_pct']}% during scale-out "
+          f"({el['zero_bins_during_scale_out']} zero bins), scale-in "
+          f"settled in {el['scale_in_recovery_s']} s; pool "
+          f"{el['pool_scale_outs']} out/{el['pool_scale_ins']} in, "
+          f"hint hit rate {el['hint_hit_rate_before']} -> "
+          f"{el['hint_hit_rate_after']} "
+          f"({el['migrated_hint_entries']} entries migrated), "
+          f"state_matches_sequential={el['state_matches_sequential']}")
     print(f"wrote {args.out}")
 
 

@@ -23,7 +23,11 @@ Checks:
     drift apart silently;
   * the artifact's `failover` section (§7.6 kill-a-namenode-mid-replay
     measurement) carries the full metric set the chaos suite and docs
-    rely on (dip depth, recovery time/ops, zero-bin count, fault events).
+    rely on (dip depth, recovery time/ops, zero-bin count, fault events);
+  * the artifact's `elasticity` section (scale-the-fleet-mid-replay
+    measurement, docs/ELASTICITY.md) carries the full metric set the
+    elastic-pool suite and docs rely on (scale-out gain, zero-bin count,
+    hint hit rates around migration, oracle equality, scale events).
 """
 from __future__ import annotations
 
@@ -42,7 +46,8 @@ sys.path.insert(0, str(ROOT))            # benchmarks/, scripts/
 sys.path.insert(0, str(ROOT / "src"))    # repro
 
 DOCS = ["README.md", "docs/ARCHITECTURE.md", "docs/API.md",
-        "docs/BENCHMARKS.md", "docs/CHAOS.md", "docs/HINTS.md"]
+        "docs/BENCHMARKS.md", "docs/CHAOS.md", "docs/ELASTICITY.md",
+        "docs/HINTS.md"]
 MIN_BYTES = 1500
 REF_PREFIXES = ("src/", "tests/", "benchmarks/", "examples/", "docs/",
                 "scripts/")
@@ -267,6 +272,44 @@ def check_failover_schema(artifact: Path) -> list:
     return errors
 
 
+#: metric keys the `elasticity` section of BENCH_throughput.json must
+#: carry (consumed by docs/ELASTICITY.md and the elastic-pool suite)
+ELASTICITY_KEYS = frozenset({
+    "n_namenodes_base", "n_namenodes_peak", "scale_out_at_s",
+    "scale_in_at_s", "horizon_s", "timeline_bin_s", "steady_ops_per_bin",
+    "scaled_ops_per_bin", "scale_out_gain_pct",
+    "zero_bins_during_scale_out", "scale_in_recovered",
+    "scale_in_recovery_s", "completed_ops", "scale_events",
+    "hint_hit_rate_before", "hint_hit_rate_after",
+    "hint_hit_rate_drop_pct", "migrated_hint_entries",
+    "pool_scale_outs", "pool_scale_ins", "state_matches_sequential",
+})
+
+
+def check_elasticity_schema(artifact: Path) -> list:
+    """The bench artifact's elastic-pool section must exist and carry
+    every documented metric key."""
+    if not artifact.exists():
+        return []                 # already reported by the schema check
+    try:
+        report = json.loads(artifact.read_text())
+    except Exception:
+        return []                 # already reported by the schema check
+    el = report.get("elasticity")
+    if not isinstance(el, dict):
+        return [f"{artifact.name}: no `elasticity` section (regenerate "
+                f"with `make bench`)"]
+    errors = []
+    for k in sorted(ELASTICITY_KEYS - set(el)):
+        errors.append(f"{artifact.name}: elasticity section missing "
+                      f"metric `{k}`")
+    ev = el.get("scale_events")
+    if not ev:
+        errors.append(f"{artifact.name}: elasticity section recorded no "
+                      f"scale events — the fleet never resized")
+    return errors
+
+
 def main() -> int:
     errors = []
     for rel in DOCS:
@@ -274,6 +317,7 @@ def main() -> int:
     errors.extend(check_benchmarks_schema(ROOT / "docs/BENCHMARKS.md",
                                           ROOT / "BENCH_throughput.json"))
     errors.extend(check_failover_schema(ROOT / "BENCH_throughput.json"))
+    errors.extend(check_elasticity_schema(ROOT / "BENCH_throughput.json"))
     if errors:
         print("docs-lint: FAIL")
         for e in errors:

@@ -33,16 +33,17 @@ from .fs import (FSError, FileAlreadyExists, FileNotFound, HopsFSOps,
                  LeaseConflict, OpResult, SubtreeLockedError, format_fs,
                  split_path)
 from .hdfs_baseline import HDFSHACluster, HDFSNamenode
-from .hint_cache import InodeHintCache
+from .hint_cache import EPOCH_TAG, InodeHintCache, split_epoch_entries
 from .leader import LeaderElection
-from .middleware import (CallContext, compose, failover, subtree_retry,
-                         txn_retry)
+from .middleware import (CallContext, compose, failover,
+                         membership_refresh, subtree_retry, txn_retry)
 from .namenode import (BATCHABLE_READ_OPS, Client, GROUP_MUTABLE_OPS,
                        Namenode, NamenodeCluster, OpOutcome, PipelineStats,
                        PlanHint, RequestPipeline, materialize_namespace,
                        namespace_snapshot)
 from .ops_registry import (ArgSpec, OpSpec, OpRegistry, REGISTRY, REQUIRED,
                            WorkloadOp, register_op)
+from .pool import ElasticNamenodePool, LoadSample, ScaleEvent
 from .store import (EXCLUSIVE, READ_COMMITTED, SHARED, LockTimeout,
                     MetadataStore, NetworkPartition, NodeGroupDown, OpCost,
                     StoreError)
@@ -62,7 +63,10 @@ __all__ = [
     "register_op", "WorkloadOp",
     "DFSClient", "FileStatus", "BlockLocation", "ContentSummary",
     "DeleteSummary", "TruncateSummary", "ConcatSummary",
-    "CallContext", "compose", "failover", "subtree_retry", "txn_retry",
+    "CallContext", "compose", "failover", "membership_refresh",
+    "subtree_retry", "txn_retry",
+    "ElasticNamenodePool", "LoadSample", "ScaleEvent",
+    "EPOCH_TAG", "split_epoch_entries",
     "HDFSNamenode", "HDFSHACluster", "InodeHintCache", "format_fs",
     "split_path", "run_with_retry", "FSError", "FileNotFound",
     "FileAlreadyExists", "LeaseConflict", "SubtreeLockedError",

@@ -134,11 +134,25 @@ class WindowController:
 
     Deterministic (no randomness), clamped to [min_window, max_window],
     so planned runs stay reproducible. The same controller drives the
-    DES mirror (``cluster_sim.BatchedHopsFSSim(adaptive=True)``)."""
+    DES mirror (``cluster_sim.BatchedHopsFSSim(adaptive=True)``).
+
+    Since the elastic pool, the controller optionally drives a SECOND
+    knob: per-namenode ``batch_size``, AIMD-adapted from the measured
+    lock-wait fraction (``LockManager.wait_count / acquire_count`` over
+    the window). Bigger batches mean longer grouped transactions holding
+    more row locks at once; when peers start *waiting* on those locks the
+    batch is the contention amplifier, so it backs off multiplicatively
+    (divide by ``factor``) and regrows additively (``batch_step``) while
+    contention stays under ``contention_shrink`` — classic AIMD, applied
+    to transaction footprint instead of flow rate. Pass ``batch_base``
+    to enable; without it the knob is inert and ``observe`` behaves
+    exactly as before."""
 
     def __init__(self, base: int, *, min_window: int, max_window: int,
                  pin_shrink: float = 0.35, factor: int = 2,
-                 rt_slack: float = 1.05):
+                 rt_slack: float = 1.05, batch_base: Optional[int] = None,
+                 min_batch: int = 1, max_batch: Optional[int] = None,
+                 contention_shrink: float = 0.05, batch_step: int = 1):
         self.window = max(1, base)
         self.min_window = max(1, min_window)
         self.max_window = max(self.min_window, max_window)
@@ -147,8 +161,21 @@ class WindowController:
         self.rt_slack = rt_slack
         self._last_rt_per_op: Optional[float] = None
         self.history: List[int] = [self.window]
+        # the batch-size knob (None = not controlled)
+        self.batch_size: Optional[int] = (max(1, batch_base)
+                                          if batch_base is not None else None)
+        self.min_batch = max(1, min_batch)
+        self.max_batch = (max(self.min_batch, max_batch)
+                          if max_batch is not None
+                          else (self.batch_size * 4
+                                if self.batch_size is not None else None))
+        self.contention_shrink = contention_shrink
+        self.batch_step = max(1, batch_step)
+        self.batch_history: List[int] = (
+            [self.batch_size] if self.batch_size is not None else [])
 
-    def observe(self, ops: int, pinned: int, round_trips: int) -> int:
+    def observe(self, ops: int, pinned: int, round_trips: int,
+                *, lock_wait_frac: float = 0.0) -> int:
         if ops <= 0:
             return self.window
         pin_rate = pinned / ops
@@ -162,6 +189,14 @@ class WindowController:
             self.window = max(self.min_window, self.window // self.factor)
         self._last_rt_per_op = rt_per_op
         self.history.append(self.window)
+        if self.batch_size is not None:
+            if lock_wait_frac > self.contention_shrink:
+                self.batch_size = max(self.min_batch,
+                                      self.batch_size // self.factor)
+            else:
+                self.batch_size = min(self.max_batch,  # type: ignore[arg-type]
+                                      self.batch_size + self.batch_step)
+            self.batch_history.append(self.batch_size)
         return self.window
 
 
@@ -212,6 +247,8 @@ class PlanReport:
     client_misses: int = 0
     client_stale: int = 0          # absorbed hints contradicting cached ids
     client_invalidations: int = 0  # destructive-op invalidations
+    hint_routed_batches: int = 0   # batches dealt to a warm namenode
+                                   # instead of the partition-hash slot
     window_sizes: List[int] = field(default_factory=list)
 
     @property
@@ -273,16 +310,20 @@ class BatchPlanner:
                  window: Optional[int] = None,
                  pin_all_mutations: bool = False,
                  client_cache: Optional[InodeHintCache] = None,
-                 adaptive: bool = False):
+                 adaptive: bool = False, hint_routing: bool = False):
         self.cluster = cluster
         self.batch_size = max(1, batch_size)
         n_slots = max(1, len(cluster.alive_namenodes()))
         self.n_slots = n_slots
+        self.hint_routing = hint_routing
         base = window or self.batch_size * n_slots * 8
         self.window = base
         self.controller: Optional[WindowController] = (
             WindowController(base, min_window=self.batch_size,
-                             max_window=base * 4) if adaptive else None)
+                             max_window=base * 4,
+                             batch_base=self.batch_size,
+                             min_batch=max(1, self.batch_size // 8))
+            if adaptive else None)
         # pin_all_mutations survives as an explicit conservative mode (and
         # for A/B tests); the closed-loop pipeline no longer needs it in
         # concurrent mode — windows are execution barriers there, so
@@ -390,6 +431,28 @@ class BatchPlanner:
                 lease_key_of[i] = spec.lease_order(wops[i])
         return pinned, lease_freed, lease_key_of
 
+    @staticmethod
+    def _warm_slot(path: str, alive: Sequence[Any]) -> Optional[int]:
+        """Slot index (into the alive list) of the first namenode whose
+        hint cache resolves ``path``'s full chain — side-effect-free
+        peeks, mirroring ``RequestPipeline._warm_namenode``."""
+        from .tables import ROOT_ID
+        comps = split_path(path)
+        if not comps:
+            return None
+        for k, nn in enumerate(alive):
+            cache = nn.ops.cache
+            if cache is None:
+                continue
+            parent: Optional[int] = ROOT_ID
+            for name in comps:
+                parent = cache.peek(parent, name)
+                if parent is None:
+                    break
+            if parent is not None:
+                return k
+        return None
+
     # -- planning -------------------------------------------------------
     def plan_window(self, wops: Sequence[WorkloadOp], lo: int, hi: int
                     ) -> List[PlannedBatch]:
@@ -398,6 +461,13 @@ class BatchPlanner:
         absorbing response hints between calls — so each window resolves
         against the freshest client cache state."""
         n_partitions = self.cluster.store.n_partitions
+        # membership is LIVE under the elastic pool: re-derive the slot
+        # count per window so dealt batches spread over the namenodes
+        # alive NOW (on a static fleet this is the frozen constructor
+        # value). run_window maps slots onto the current alive list, so
+        # a fleet that shrank between plan and execute stays safe.
+        alive = self.cluster.alive_namenodes()
+        self.n_slots = max(1, len(alive))
         fallback = MultiCacheResolver.of_cluster(self.cluster)
         if self._resolver is not None:
             self._resolver.fallback = fallback
@@ -483,6 +553,13 @@ class BatchPlanner:
             chunk = free[c:end]
             c = end
             slot = parts[chunk[0]] % self.n_slots
+            if self.hint_routing and len(alive) > 1:
+                # deal to the namenode already warm for this chunk's lead
+                # path; the partition hash stays the cold-path fallback
+                warm = self._warm_slot(wops[chunk[0]].path, alive)
+                if warm is not None:
+                    slot = warm
+                    self.report.hint_routed_batches += 1
             mutates = any(
                 (s := REGISTRY.get(wops[i].op)) is None or not s.read_only
                 for i in chunk)
@@ -522,15 +599,22 @@ class BatchPlanner:
                 self.client_cache.invalidations - self._inv0
 
     def observe_window(self, *, ops: int, pinned: int,
-                       round_trips: int) -> int:
+                       round_trips: int,
+                       lock_wait_frac: float = 0.0) -> int:
         """Close the feedback loop after a window executed (and its hints
         were absorbed): the controller resizes the live window from the
         observed pin rate and measured round trips per op (no-op on a
         fixed window), and the client telemetry snapshot is refreshed so
-        the final window's absorptions are counted too."""
+        the final window's absorptions are counted too.
+        ``lock_wait_frac`` is the window's measured lock-wait fraction
+        (store-level ``wait_count``/``acquire_count`` deltas) — the signal
+        the controller's second knob AIMD-adapts ``batch_size`` from."""
         self._refresh_client_telemetry()
         if self.controller is not None:
-            self.window = self.controller.observe(ops, pinned, round_trips)
+            self.window = self.controller.observe(
+                ops, pinned, round_trips, lock_wait_frac=lock_wait_frac)
+            if self.controller.batch_size is not None:
+                self.batch_size = self.controller.batch_size
         return self.window
 
     def plan(self, wops: Sequence[WorkloadOp]) -> List[PlannedBatch]:
@@ -572,7 +656,8 @@ class PlannedRequestPipeline(RequestPipeline):
     def __init__(self, cluster: NamenodeCluster, *, batch_size: int = 16,
                  concurrent: bool = False, window: Optional[int] = None,
                  client_cache: Optional[InodeHintCache] = None,
-                 adaptive: bool = True):
+                 adaptive: bool = True, pool: Any = None,
+                 hint_routing: Optional[bool] = None):
         super().__init__(cluster, batch_size=batch_size,
                          concurrent=concurrent)
         self.window = window
@@ -581,6 +666,15 @@ class PlannedRequestPipeline(RequestPipeline):
         #: shareable with a DFSClient so facade calls warm it too)
         self.client_cache = (client_cache if client_cache is not None
                              else InodeHintCache())
+        #: elastic pool driving membership (optional): ticked once per
+        #: executed window with the remaining queue depth so scale
+        #: decisions ride the replay's own logical clock
+        self.pool = pool
+        # warm-NN routing defaults ON exactly when membership is elastic —
+        # a pool invalidates the static partition→namenode affinity, and
+        # on a fixed fleet the partition hash already IS the warm slot
+        self.hint_routing = (hint_routing if hint_routing is not None
+                             else pool is not None)
         self.planner: Optional[BatchPlanner] = None
 
     @property
@@ -614,7 +708,8 @@ class PlannedRequestPipeline(RequestPipeline):
                                     batch_size=self.batch_size,
                                     window=self.window,
                                     client_cache=self.client_cache,
-                                    adaptive=self.adaptive)
+                                    adaptive=self.adaptive,
+                                    hint_routing=self.hint_routing)
         planner = self.planner
         outcomes: List[Optional[OpOutcome]] = [None] * len(wops)
         residual: deque = deque()      # ops orphaned by namenode deaths
@@ -727,6 +822,7 @@ class PlannedRequestPipeline(RequestPipeline):
                                        hints=[None] * len(idxs),
                                        nn_slot=0))
 
+        locks = self.cluster.store.locks
         t0 = time.perf_counter()
         lo = 0
         while lo < len(wops):
@@ -734,14 +830,21 @@ class PlannedRequestPipeline(RequestPipeline):
                 break
             hi = min(lo + planner.window, len(wops))
             pinned_before = planner.report.pinned_ops
+            w0, a0 = locks.wait_count, locks.acquire_count
             batches = planner.plan_window(wops, lo, hi)
             run_window(batches)
             drain_residual()
             rts = self._absorb_window(wops, outcomes, lo, hi)
+            acquired = locks.acquire_count - a0
             planner.observe_window(
                 ops=hi - lo,
                 pinned=planner.report.pinned_ops - pinned_before,
-                round_trips=rts)
+                round_trips=rts,
+                lock_wait_frac=((locks.wait_count - w0) / acquired
+                                if acquired else 0.0))
+            self.batch_size = planner.batch_size
+            if self.pool is not None:
+                self.pool.tick(queue_depth=len(wops) - hi)
             lo = hi
         wall = time.perf_counter() - t0
         for i, oc in enumerate(outcomes):

@@ -511,7 +511,7 @@ def replay_with_recovery(cluster: Any, wops: Sequence[WorkloadOp], *,
             outcome_cost.merge(oc.result.cost)
         else:
             failed += 1
-    per_nn = {nn.nn_id: nn.agg_cost.diff(cost0[nn.nn_id])
+    per_nn = {nn.nn_id: nn.agg_cost.diff(cost0.get(nn.nn_id, OpCost()))
               for nn in cluster.namenodes}
     return ChaosReport(outcomes=outcomes, ok=ok, failed=failed,
                        recovery_rounds=rounds, retried_ops=retried,

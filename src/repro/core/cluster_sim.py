@@ -28,7 +28,7 @@ import heapq
 import random
 from collections import deque
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from .fs import HopsFSOps
 from .ops_registry import REGISTRY
@@ -462,6 +462,52 @@ class HopsFSSim:
         self.sim.after(max(0.0, at - self.sim.t),
                        lambda: self._fault("restarted", nn))
 
+    # -- elastic membership (the DES mirror of pool.py) -----------------------
+    def scale_out_namenode(self) -> int:
+        """Append one namenode mid-run (the DES mirror of
+        ``ElasticNamenodePool.scale_out``): fresh handler + CPU servers,
+        alive immediately — clients pick it up on their next
+        ``_alive_nns()`` read. Returns the new namenode's id."""
+        nn = len(self.nn_handlers)
+        self.nn_handlers.append(Server(self.sim, self.p.nn_handlers))
+        self.nn_cpu.append(Server(self.sim, self.p.nn_cores))
+        self.nn_alive.append(True)
+        self._on_scale_out(nn)
+        self.fault_events.append((self.sim.t, "scale_out", nn))
+        return nn
+
+    def scale_in_namenode(self) -> Optional[int]:
+        """Retire the highest-id alive namenode (never below one member).
+        Returns the victim's id, or None if the fleet is already minimal."""
+        alive = self._alive_nns()
+        if len(alive) <= 1:
+            return None
+        nn = alive[-1]
+        self.nn_alive[nn] = False
+        self._on_scale_in(nn)
+        self.fault_events.append((self.sim.t, "scale_in", nn))
+        return nn
+
+    def _on_scale_out(self, nn: int) -> None:
+        """Subclass hook: extend per-namenode parallel state."""
+
+    def _on_scale_in(self, nn: int) -> None:
+        """Subclass hook: react to a planned retirement."""
+
+    def schedule_scale_out(self, at: float, n: int = 1) -> None:
+        """Scale out by ``n`` namenodes at sim time ``at``."""
+        def act():
+            for _ in range(n):
+                self.scale_out_namenode()
+        self.sim.after(max(0.0, at - self.sim.t), act)
+
+    def schedule_scale_in(self, at: float, n: int = 1) -> None:
+        """Scale in by ``n`` namenodes at sim time ``at``."""
+        def act():
+            for _ in range(n):
+                self.scale_in_namenode()
+        self.sim.after(max(0.0, at - self.sim.t), act)
+
     # -- driver ---------------------------------------------------------------
     def run(self, seconds: float) -> SimResult:
         self.sim.run(seconds)
@@ -605,6 +651,14 @@ batch_planner.WindowController` feedback loop at DES scale: the pull cap
             del self._bucket_seqs[key]
         self.pending -= k
         return out
+
+    # -- elastic membership --------------------------------------------
+    def _on_scale_out(self, nn: int) -> None:
+        # parallel per-namenode state must grow with the fleet, and the
+        # joiner should start pulling from the shared queue immediately
+        self._inflight.append(0)
+        self.nn_ops_completed.append(0)
+        self.sim.after(0.0, self._dispatch)
 
     # -- dispatch ------------------------------------------------------
     def _dispatch(self) -> None:

@@ -29,7 +29,7 @@ from .fs import (FSError, FileAlreadyExists, FileNotFound, LeaseConflict,
                  OpResult, SubtreeLockedError)
 from .hint_cache import InodeHintCache, absorb_response
 from .middleware import (CallContext, Handler, Middleware, compose, failover,
-                         subtree_retry, txn_retry)
+                         membership_refresh, subtree_retry, txn_retry)
 from .namenode import (Client, Namenode, NamenodeCluster, PipelineStats,
                        RequestPipeline)
 from .ops_registry import REGISTRY, WorkloadOp
@@ -146,8 +146,24 @@ class DFSClient:
         #: batch planner resolves against responses this client actually
         #: saw instead of reading namenode caches — see docs/HINTS.md
         self.hint_cache = InodeHintCache()
+        #: elastic pool this client follows (None on a static fleet)
+        self.pool: Any = None
 
     # -- plumbing -------------------------------------------------------
+    def attach_pool(self, pool: Any) -> None:
+        """Follow an :class:`~repro.core.pool.ElasticNamenodePool`: this
+        client's hint cache becomes a pre-warm donor for joiners, and a
+        ``membership_refresh`` middleware (outermost — it must see every
+        attempt) drops the sticky namenode selection whenever the pool's
+        membership epoch moves, so calls rebalance onto the new fleet
+        without interrupting anything in flight. ``run_trace`` also starts
+        ticking the pool per planned window."""
+        self.pool = pool
+        pool.register_client_cache(self.hint_cache)
+        self.middleware.insert(
+            0, membership_refresh(pool, self._reset_sticky))
+        self._handler = compose(self.middleware, self._terminal)
+
     def _reset_sticky(self, ctx: CallContext) -> None:
         self._selector._sticky = None
 
@@ -298,7 +314,8 @@ class DFSClient:
     def run_trace(self, wops: Sequence[WorkloadOp], *, batch_size: int = 16,
                   concurrent: bool = False, planned: bool = False,
                   window: Optional[int] = None,
-                  adaptive: bool = True) -> PipelineStats:
+                  adaptive: bool = True,
+                  hint_routing: Optional[bool] = None) -> PipelineStats:
         """Replay a trace through the batched request pipeline over this
         client's cluster (the Fig 7 methodology). ``planned=True`` routes
         through the client-side columnar batch planner
@@ -307,7 +324,10 @@ class DFSClient:
         reactive FIFO dealing. The planned pipeline is closed-loop: it
         plans against THIS client's ``hint_cache`` (warmed by response
         piggybacking, shared with the facade's own calls) and resizes its
-        planning window adaptively (``adaptive=False`` pins the window)."""
+        planning window adaptively (``adaptive=False`` pins the window).
+        With a pool attached (:meth:`attach_pool`) the pipeline ticks it
+        once per executed window and routes batches hint-aware — override
+        with ``hint_routing`` either way."""
         if planned:
             from .batch_planner import PlannedRequestPipeline
             return PlannedRequestPipeline(self.cluster,
@@ -315,7 +335,10 @@ class DFSClient:
                                           concurrent=concurrent,
                                           window=window,
                                           client_cache=self.hint_cache,
-                                          adaptive=adaptive).run(wops)
+                                          adaptive=adaptive,
+                                          pool=self.pool,
+                                          hint_routing=hint_routing).run(
+                                              wops)
         return RequestPipeline(self.cluster, batch_size=batch_size,
                                concurrent=concurrent).run(wops)
 

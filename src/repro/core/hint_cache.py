@@ -27,6 +27,25 @@ from typing import Any, Iterable, List, Optional, Sequence, Tuple
 
 from .tables import ROOT_ID, split_path
 
+#: parent-id tag of the epoch entries piggybacked inside ``OpResult.hints``
+#: (real parent ids are always >= ROOT_ID, so -1 can never collide with a
+#: genuine (parent_id, name, inode_id) resolution). Two shapes ride under
+#: it: ``(-1, "", epoch)`` — the store's current hint epoch — and
+#: ``(-1, "/a/b", epoch)`` — a path invalidated at that epoch. Producers:
+#: ``MetadataStore.hint_piggyback``; consumer: :func:`absorb_response`.
+EPOCH_TAG = -1
+
+
+def split_epoch_entries(hints: Iterable[Tuple[int, str, int]]
+                        ) -> Tuple[List[Tuple[int, str, int]],
+                                   List[Tuple[int, str, int]]]:
+    """Partition a response's hints into (resolutions, epoch entries)."""
+    res: List[Tuple[int, str, int]] = []
+    epochs: List[Tuple[int, str, int]] = []
+    for h in hints:
+        (epochs if h[0] == EPOCH_TAG else res).append(h)
+    return res, epochs
+
 
 class InodeHintCache:
     """LRU of (parent_id, name) -> inode_id."""
@@ -38,6 +57,12 @@ class InodeHintCache:
         self.misses = 0
         self.invalidations = 0
         self.stale_overwrites = 0   # puts that contradicted a cached id
+        #: cross-client invalidation-push state: highest store hint epoch
+        #: this cache has observed, and the count of wholesale clears a
+        #: coverage gap forced (the bounded invalidation log aged out
+        #: epochs this cache never saw)
+        self.seen_epoch = 0
+        self.epoch_resets = 0
 
     def get(self, parent_id: int, name: str) -> Optional[int]:
         key = (parent_id, name)
@@ -96,9 +121,54 @@ class InodeHintCache:
 
     def absorb(self, hints: Iterable[Tuple[int, str, int]]) -> None:
         """Warm the cache from response-piggybacked resolutions
-        (``OpResult.hints``): each entry is (parent_id, name, inode_id)."""
+        (``OpResult.hints``): each entry is (parent_id, name, inode_id).
+        Tagged epoch entries (:data:`EPOCH_TAG`) are skipped — they are
+        :meth:`observe_epoch`'s business, not cache content."""
         for parent_id, name, inode_id in hints:
+            if parent_id == EPOCH_TAG:
+                continue
             self.put(parent_id, name, inode_id)
+
+    def observe_epoch(self, entries: Iterable[Tuple[int, str, int]]) -> None:
+        """Apply a response's piggybacked invalidation-epoch entries (the
+        cross-client push): invalidate every logged path newer than
+        :attr:`seen_epoch`; if the log tail starts AFTER the first epoch
+        this cache missed (the bounded log aged it out), fall back to a
+        wholesale :meth:`clear` — correctness over retention. Advances
+        ``seen_epoch`` to the piggybacked current epoch either way."""
+        current = self.seen_epoch
+        min_logged = None
+        todo: List[Tuple[int, str]] = []
+        for _tag, payload, e in entries:
+            if payload:
+                if min_logged is None or e < min_logged:
+                    min_logged = e
+                todo.append((e, payload))
+            elif e > current:
+                current = e
+        if current <= self.seen_epoch:
+            return
+        if min_logged is not None and min_logged > self.seen_epoch + 1:
+            # epochs (seen, min_logged) were invalidations we never saw
+            self.clear()
+            self.epoch_resets += 1
+        else:
+            for e, path in todo:
+                if e > self.seen_epoch:
+                    self.invalidate_path(split_path(path))
+        self.seen_epoch = current
+
+    def export_entries(self, limit: Optional[int] = None
+                       ) -> List[Tuple[int, str, int]]:
+        """The cache contents as absorbable (parent_id, name, inode_id)
+        hints, oldest-first so :meth:`absorb` on the receiver reproduces
+        the LRU recency order. With ``limit``, only the NEWEST ``limit``
+        entries — the warm working set a retiring namenode migrates to its
+        successors (and a joining one is pre-warmed with)."""
+        items = [(p, n, v) for (p, n), v in self._lru.items()]
+        if limit is not None and len(items) > limit:
+            items = items[-limit:]
+        return items
 
     def clear(self) -> None:
         self._lru.clear()
@@ -169,7 +239,17 @@ def absorb_response(cache: InodeHintCache, wop: Any, spec: Any,
     with the hints), and concat's ``srcs`` — then warm the cache from the
     response's piggybacked hints (``OpResult.hints``). ``wop`` is the
     executed :class:`~repro.core.ops_registry.WorkloadOp`, ``spec`` its
-    OpSpec (or None for unregistered ops)."""
+    OpSpec (or None for unregistered ops).
+
+    Since the cross-client invalidation push, responses also carry tagged
+    epoch entries (:data:`EPOCH_TAG`): the store's current hint epoch plus
+    the recently invalidated paths. Those are applied FIRST
+    (:meth:`InodeHintCache.observe_epoch` — they describe world state
+    older than this response), then the op's own destructive
+    invalidation, then the fresh post-execution resolutions."""
+    hints, epochs = split_epoch_entries(hints)
+    if epochs:
+        cache.observe_epoch(epochs)
     if spec is not None and spec.destructive:
         # OpSpec.path_args applies rename's implicit ".mv" destination —
         # the same canonical rule the planner's conflict analysis uses

@@ -108,6 +108,31 @@ def txn_retry(retries: int = 3, backoff: float = 0.005,
     return mw
 
 
+def membership_refresh(pool: Any,
+                       on_change: Callable[[CallContext], None]
+                       ) -> Middleware:
+    """Elastic-membership awareness for clients: before each attempt,
+    compare the pool's ``membership_epoch`` against the epoch seen at the
+    previous call through this middleware; on a change, invoke
+    ``on_change(ctx)`` BEFORE the attempt proceeds. ``DFSClient`` wires
+    ``on_change`` to drop its sticky namenode selection, so calls
+    rebalance onto the new fleet lazily — in-flight calls are never
+    interrupted, and leases survive because lease state lives in the
+    store, not the namenode (the pool's scale-in already ran the leader's
+    ``recover_leases``/``scrub_leases`` housekeeping)."""
+    seen = [pool.membership_epoch]
+
+    def mw(nxt: Handler) -> Handler:
+        def handler(ctx: CallContext) -> Any:
+            cur = pool.membership_epoch
+            if cur != seen[0]:
+                seen[0] = cur
+                on_change(ctx)
+            return nxt(ctx)
+        return handler
+    return mw
+
+
 def failover(attempts: int = 8,
              on_failover: Optional[Callable[[CallContext], None]] = None
              ) -> Middleware:

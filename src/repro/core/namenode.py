@@ -160,6 +160,7 @@ class Namenode:
     def __init__(self, store: MetadataStore, nn_id: int,
                  election: LeaderElection, **ops_kw):
         self.nn_id = nn_id
+        self.store = store
         self.election = election
         # client leases are renewed/expired against the SAME logical clock
         # the election uses, so client death is detected exactly like
@@ -255,7 +256,14 @@ class Namenode:
         live holder is a heartbeat, ``HopsFSOps.touch_lease``)."""
         self.ops_served += 1
         self.agg_cost.merge(res.cost)
-        res.hints = self._piggyback_hints(paths)
+        if spec is not None and spec.destructive:
+            # cross-client invalidation push: log the destroyed/moved
+            # paths under a fresh store-wide hint epoch, so OTHER
+            # clients' caches learn of them from their own next response
+            # (concat's srcs are paths too, but arrive as a kwarg)
+            self.store.record_hint_invalidation(
+                list(paths) + [str(s) for s in kw.get("srcs", ()) or ()])
+        res.hints = self._piggyback_hints(paths) + self.store.hint_piggyback()
         if spec is not None and spec.has_client_arg \
                 and not spec.renews_lease and "client" in kw:
             # skipped for renews_lease ops: their handler already stamped
@@ -393,7 +401,8 @@ class Namenode:
             if spec is None:
                 continue
             paths, kw = spec.call_args(wop)
-            oc.result.hints = self._piggyback_hints(paths)
+            oc.result.hints = self._piggyback_hints(paths) \
+                + self.store.hint_piggyback()
             if spec.has_client_arg and not spec.renews_lease \
                     and "client" in kw:
                 clients.add(kw["client"])
@@ -807,6 +816,10 @@ class NamenodeCluster:
         self.store = store
         self.election = LeaderElection(store)
         self.auto_lease_recovery = auto_lease_recovery
+        # kept for elastic membership: add_namenode builds late joiners
+        # with the same ops configuration the founders got (copied per
+        # namenode — Namenode.__init__ setdefaults into the dict)
+        self._ops_kw = dict(ops_kw)
         self.namenodes = [Namenode(store, i, self.election, **ops_kw)
                           for i in range(n_namenodes)]
         for nn in self.namenodes:
@@ -837,6 +850,35 @@ class NamenodeCluster:
     def restart(self, nn_id: int) -> None:
         self.namenodes[nn_id].alive = True
         self.election.heartbeat(nn_id)
+
+    # -- elastic membership (the ElasticNamenodePool's substrate) -------
+    def add_namenode(self, **ops_kw) -> Namenode:
+        """Scale-out: append a fresh stateless namenode (ids are list
+        indices, so new members always take ``len(namenodes)``), register
+        it with the election, and — if a chaos injector is attached to the
+        fleet — extend the injector to it (faults must be able to strike
+        late joiners too). The caller (the pool) pre-warms its hint cache
+        BEFORE the next batch is dealt, so it never serves cold."""
+        kw = dict(self._ops_kw)
+        kw.update(ops_kw)
+        nn = Namenode(self.store, len(self.namenodes), self.election, **kw)
+        donor = next((m for m in self.namenodes if m.chaos is not None),
+                     None)
+        if donor is not None:
+            nn.chaos = donor.chaos
+            nn.subtree.chaos = donor.subtree.chaos
+        self.namenodes.append(nn)
+        self.election.heartbeat(nn.nn_id)
+        return nn
+
+    def retire(self, nn_id: int) -> None:
+        """Scale-in: stop serving AND leave the election immediately
+        (``LeaderElection.remove`` deletes the heartbeat row, so the
+        leader role moves this tick instead of after the staleness bound —
+        a retirement is planned, unlike a crash). The slot stays in
+        ``namenodes`` (ids are indices); ``alive_namenodes`` excludes it."""
+        self.namenodes[nn_id].alive = False
+        self.election.remove(nn_id)
 
     def alive_namenodes(self) -> List[Namenode]:
         return [nn for nn in self.namenodes if nn.alive]
@@ -962,13 +1004,44 @@ class RequestPipeline:
     namenode count or batch size), which is what the state-equivalence
     tests rely on. ``concurrent=True`` runs one worker thread per alive
     namenode against the same queue, exercising real row-lock contention
-    on the shared store."""
+    on the shared store.
+
+    ``hint_routing=True`` (the elastic-fleet mode) replaces blind
+    round-robin dealing with hint-aware routing: a batch goes to the
+    namenode whose inode hint cache already resolves its first op's path
+    (side-effect-free peeks), falling back to round-robin when nobody is
+    warm. On a static fleet the partition hash already gives stable
+    affinity, so this stays off by default — it matters when membership
+    changes mid-run and the warm cache IS the routing signal."""
 
     def __init__(self, cluster: NamenodeCluster, *, batch_size: int = 16,
-                 concurrent: bool = False):
+                 concurrent: bool = False, hint_routing: bool = False):
         self.cluster = cluster
         self.batch_size = max(1, batch_size)
         self.concurrent = concurrent
+        self.hint_routing = hint_routing
+
+    @staticmethod
+    def _warm_namenode(path: str, alive: Sequence[Namenode]
+                       ) -> Optional[Namenode]:
+        """First alive namenode whose hint cache resolves ``path``'s full
+        component chain — pure peeks, so routing probes never skew any
+        namenode's own cache statistics."""
+        comps = split_path(path)
+        if not comps:
+            return None
+        for nn in alive:
+            cache = nn.ops.cache
+            if cache is None:
+                continue
+            parent: Optional[int] = ROOT_ID
+            for name in comps:
+                parent = cache.peek(parent, name)
+                if parent is None:
+                    break
+            if parent is not None:
+                return nn
+        return None
 
     def run(self, wops: Sequence[WorkloadOp]) -> PipelineStats:
         wops = list(wops)
@@ -1043,9 +1116,13 @@ class RequestPipeline:
                 alive = self.cluster.alive_namenodes()
                 if not alive:
                     break
+                idxs = pull()
                 nn = alive[rr % len(alive)]
                 rr += 1
-                idxs = pull()
+                if self.hint_routing and idxs and len(alive) > 1:
+                    warm = self._warm_namenode(wops[idxs[0]].path, alive)
+                    if warm is not None:
+                        nn = warm
                 run_one(nn, idxs)
         wall = time.perf_counter() - t0
         # ops left without an outcome (every namenode died mid-run) fail
@@ -1063,9 +1140,12 @@ class RequestPipeline:
         """Conserved-accounting roll-up shared by the reactive and planned
         pipelines: per-namenode cost deltas, total cost over successful
         outcomes, and the batched read/write op split."""
-        per_nn_cost = {nn.nn_id: nn.agg_cost.diff(cost0[nn.nn_id])
+        # namenodes absent from the snapshots joined mid-run (elastic
+        # scale-out): their whole lifetime cost belongs to this run
+        per_nn_cost = {nn.nn_id: nn.agg_cost.diff(cost0.get(nn.nn_id,
+                                                            OpCost()))
                        for nn in self.cluster.namenodes}
-        per_nn_ops = {nn.nn_id: nn.ops_served - served0[nn.nn_id]
+        per_nn_ops = {nn.nn_id: nn.ops_served - served0.get(nn.nn_id, 0)
                       for nn in self.cluster.namenodes}
         total = OpCost()
         ok = failed = 0

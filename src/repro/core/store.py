@@ -24,6 +24,7 @@ from __future__ import annotations
 import threading
 import time
 import zlib
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
@@ -105,6 +106,15 @@ class LockManager:
         # txn_id -> keys it holds; guarded by its own (O(1)-hold) mutex
         self._held_mu = threading.Lock()
         self._held: Dict[int, Set[_LockKey]] = {}
+        #: cumulative contention telemetry: every non-READ_COMMITTED
+        #: acquire counts once; acquires that found a conflicting holder
+        #: (and therefore waited — possibly timing out) count once more.
+        #: wait_count/acquire_count is the LOCK-WAIT FRACTION the elastic
+        #: pool samples and the WindowController's batch-size knob feeds
+        #: on. Best-effort under concurrency (plain ints), exact on the
+        #: deterministic pipelines.
+        self.acquire_count = 0
+        self.wait_count = 0
 
     def _stripe(self, key: _LockKey) -> int:
         return hash(key) % self.n_stripes
@@ -124,12 +134,17 @@ class LockManager:
             # deadline computed once, outside the wait loop (hot path)
             deadline = time.monotonic() + self.timeout
             lk.waiters += 1
+            self.acquire_count += 1
+            waited = False
             try:
                 while True:
                     if not lk.holders or lk.holders == {txn_id}:
                         break
                     if mode == SHARED and lk.mode == SHARED:
                         break
+                    if not waited:
+                        waited = True
+                        self.wait_count += 1
                     # conflicting: wait (bounded by NDB txn-inactive timeout)
                     remaining = deadline - time.monotonic()
                     if remaining <= 0 or not lk.cond.wait(remaining):
@@ -411,6 +426,57 @@ class MetadataStore:
         self._mu = threading.Lock()
         self.epoch = 0            # global checkpoint epoch (§2.2.1)
         self.total_row_ops = 0    # lifetime row ops (DES capacity feed)
+        # cross-client hint invalidation push (the store-level analogue of
+        # NDB's event API the real HopsFS uses for cache invalidation):
+        # every destructive op bumps hint_epoch and logs the invalidated
+        # paths; namenodes piggyback the epoch plus the recent log tail on
+        # EVERY response, so clients that never saw the destructive op
+        # still drop their stale InodeHintCache entries
+        self.hint_epoch = 0
+        self._hint_log: deque = deque(maxlen=self.HINT_LOG_MAX)
+        self._hint_mu = threading.Lock()
+        self._hint_pb: Tuple[int, Tuple] = (0, ())   # memoized piggyback
+
+    #: bounded invalidation log: epochs older than hint_epoch-HINT_LOG_TAIL
+    #: are no longer piggybacked — a client that far behind clears its
+    #: cache wholesale instead of replaying individual invalidations
+    HINT_LOG_MAX = 64
+    HINT_LOG_TAIL = 8
+
+    # -- cross-client hint invalidation (epoch push) ---------------------
+    def record_hint_invalidation(self, paths) -> int:
+        """One destructive op committed: bump the hint epoch and log its
+        invalidated paths (one epoch per op, every path tagged with it).
+        Returns the new epoch."""
+        with self._hint_mu:
+            self.hint_epoch += 1
+            e = self.hint_epoch
+            for p in paths:
+                if p:
+                    self._hint_log.append((e, str(p)))
+            return e
+
+    def hint_piggyback(self) -> Tuple:
+        """The tagged entries every response appends to ``OpResult.hints``:
+        a ``(-1, "", epoch)`` marker carrying the store's current hint
+        epoch, then one ``(-1, path, epoch)`` entry per recently
+        invalidated path (epochs within :data:`HINT_LOG_TAIL` of current).
+        Empty while no destructive op has ever run — read-only workloads
+        pay nothing. Memoized per epoch: the hot path is one lock-free
+        tuple reuse."""
+        cur = self.hint_epoch
+        if cur == 0:
+            return ()
+        memo_epoch, memo = self._hint_pb
+        if memo_epoch == cur:
+            return memo
+        with self._hint_mu:
+            cur = self.hint_epoch
+            floor = cur - self.HINT_LOG_TAIL
+            out = ((-1, "", cur),) + tuple(
+                (-1, p, e) for e, p in self._hint_log if e > floor)
+            self._hint_pb = (cur, out)
+            return out
 
     # -- topology --------------------------------------------------------
     def group_of_partition(self, part: int) -> NodeGroup:

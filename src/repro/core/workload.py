@@ -239,6 +239,27 @@ def make_spotify_trace(ns: SyntheticNamespace, n_ops: int, *,
     return SpotifyWorkload(ns, seed=seed, mix=mix).make_trace(n_ops)
 
 
+def make_phased_trace(ns: SyntheticNamespace, phase_ops: Sequence[int], *,
+                      seed: int = 13,
+                      mix: Sequence[Tuple[str, float, float]]
+                      = SPOTIFY_TRACE_MIX
+                      ) -> Tuple[List[WorkloadOp], List[int]]:
+    """One CONTINUOUS workload stream cut into phases: returns the full
+    trace plus the cumulative phase boundaries ``[len(p0), len(p0)+len(p1),
+    ...]``. The elasticity bench replays phases through the same pipeline
+    with membership changes between them — a single stream (one generator,
+    one liveness state) keeps the phases a real continuation of each other
+    instead of three unrelated traces, so hint-cache warmth genuinely
+    carries across scale events."""
+    w = SpotifyWorkload(ns, seed=seed, mix=mix)
+    trace: List[WorkloadOp] = []
+    boundaries: List[int] = []
+    for n in phase_ops:
+        trace.extend(w.make_trace(n))
+        boundaries.append(len(trace))
+    return trace, boundaries
+
+
 def make_block_contention_trace(path: str, n_rounds: int, *,
                                 clients: Sequence[str] = ("c1", "c2"),
                                 block_size: int = 1 << 20

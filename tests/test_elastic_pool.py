@@ -1,0 +1,450 @@
+"""Elastic namenode pool (ISSUE 7): load-adaptive scale-out/in with warm
+hint migration, hint-aware routing, cross-client invalidation push, and
+the WindowController's second (batch-size) knob.
+
+Layered like the subsystem itself:
+
+  * epoch piggyback — destructive ops bump a store-level invalidation
+    epoch that rides ``OpResult.hints``; OTHER clients' caches apply the
+    invalidations (or wholesale-reset when the bounded log aged past
+    them) without any server push channel;
+  * contention telemetry — ``LockManager`` wait/acquire counters, and the
+    ``WindowController`` batch-size AIMD that feeds on them;
+  * the pool — scale-out under queue pressure (joiners pre-warmed from
+    client caches), scale-in when idle (victims warm-migrate to
+    survivors, leases survive via leader housekeeping), hysteresis and
+    cooldown;
+  * routing — batches dealt to the namenode already warm for their path;
+  * equivalence — an elastic replay's namespace equals a fixed-size
+    sequential oracle's, including under a namenode CRASH striking
+    mid-scale-out (the chaos-compose case).
+"""
+import pytest
+
+from repro.core import (DFSClient, ElasticNamenodePool, Fault,
+                        FaultInjector, ChaosPlan, FaultSite,
+                        PlannedRequestPipeline, RequestPipeline,
+                        WindowController, WorkloadOp, namespace_snapshot)
+from repro.core.chaos import CRASH, RETRYABLE_ERRORS, RecoveryInvariants
+from repro.core.hint_cache import EPOCH_TAG, InodeHintCache
+from repro.core.store import EXCLUSIVE, LockManager, LockTimeout
+from repro.core.workload import (NamespaceSpec, SpotifyWorkload,
+                                 SyntheticNamespace, make_phased_trace)
+
+
+def _trace(n=400, seed=13, n_dirs=16, files_per_dir=4):
+    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=n_dirs,
+                            files_per_dir=files_per_dir)
+    return SpotifyWorkload(ns, seed=seed).make_trace(n)
+
+
+# ---------------------------------------------------------------------------
+# cross-client hint invalidation push (the epoch fold into OpResult.hints)
+# ---------------------------------------------------------------------------
+
+def test_destructive_op_bumps_store_epoch(make_cluster):
+    store, cluster = make_cluster(1, dirs=("/w",), files=("/w/f",))
+    assert store.hint_epoch == 0
+    assert store.hint_piggyback() == ()
+    cluster.namenodes[0].perform("delete_file", "/w/f")
+    assert store.hint_epoch == 1
+    pb = store.hint_piggyback()
+    assert (EPOCH_TAG, "", 1) in pb
+    assert (EPOCH_TAG, "/w/f", 1) in pb
+
+
+def test_epoch_push_invalidates_other_clients_cache(make_cluster):
+    """Client A cached /w/f; client B deletes it; client A's NEXT response
+    (any op) carries the invalidation epoch and drops A's stale entry —
+    no server-side staleness detection involved."""
+    store, cluster = make_cluster(2, dirs=("/w",), files=("/w/f",))
+    a, b = DFSClient(cluster), DFSClient(cluster)
+    a.stat("/w/f")
+    wid = a.hint_cache.peek(0, "w") or a.hint_cache.last_resolved_id(["w"])
+    assert wid is not None
+    assert a.hint_cache.peek(wid, "f") is not None
+    b.delete("/w/f")
+    a.ls("/w")                       # unrelated op; epoch rides its hints
+    assert a.hint_cache.seen_epoch == store.hint_epoch > 0
+    assert a.hint_cache.peek(wid, "f") is None
+
+
+def test_epoch_gap_forces_wholesale_reset(make_cluster):
+    """A client that slept through more invalidations than the bounded
+    log retains cannot apply them one-by-one — it must clear wholesale
+    (correctness over retention)."""
+    files = tuple(f"/w/f{i}" for i in range(12))
+    store, cluster = make_cluster(2, dirs=("/w",), files=files)
+    a, b = DFSClient(cluster), DFSClient(cluster)
+    a.stat(files[-1])
+    assert a.hint_cache.entries > 0
+    assert a.hint_cache.seen_epoch == 0
+    for f in files[:-1]:             # 11 epochs while A sleeps
+        b.delete(f)
+    assert store.hint_epoch == 11 > store.HINT_LOG_TAIL
+    a.ls("/w")
+    assert a.hint_cache.epoch_resets == 1
+    assert a.hint_cache.seen_epoch == store.hint_epoch
+
+
+def test_epoch_entries_never_pollute_absorb():
+    cache = InodeHintCache()
+    cache.absorb([(EPOCH_TAG, "", 3), (EPOCH_TAG, "/a", 2), (0, "a", 7)])
+    assert cache.entries == 1
+    assert cache.peek(0, "a") == 7
+
+
+# ---------------------------------------------------------------------------
+# lock-wait telemetry + the WindowController's batch-size knob (AIMD)
+# ---------------------------------------------------------------------------
+
+def _measured_wait_frac(locks, fn):
+    w0, a0 = locks.wait_count, locks.acquire_count
+    fn()
+    da = locks.acquire_count - a0
+    return (locks.wait_count - w0) / da if da else 0.0
+
+
+def test_lock_manager_counts_waits_under_contention():
+    locks = LockManager(timeout=0.01)
+    locks.acquire(1, "inodes", (0, "a"), EXCLUSIVE)
+
+    def contend():
+        with pytest.raises(LockTimeout):
+            locks.acquire(2, "inodes", (0, "a"), EXCLUSIVE)
+    frac = _measured_wait_frac(locks, contend)
+    assert locks.wait_count == 1
+    assert frac == 1.0
+    locks.release_all(1)
+    # uncontended acquire: counted, but no wait
+    frac = _measured_wait_frac(
+        locks, lambda: locks.acquire(3, "inodes", (0, "a"), EXCLUSIVE))
+    assert frac == 0.0
+
+
+def test_batch_size_shrinks_under_induced_contention_and_regrows():
+    """Satellite: the controller's second knob. The lock-wait fraction is
+    MEASURED from a real LockManager — a held exclusive row forces the
+    competing acquire to wait (contended phase), then the same row
+    uncontended (calm phase) — and fed to the controller: multiplicative
+    shrink under contention, additive regrowth after."""
+    locks = LockManager(timeout=0.01)
+    ctl = WindowController(128, min_window=16, max_window=512,
+                           batch_base=16, min_batch=2,
+                           contention_shrink=0.05)
+    assert ctl.batch_size == 16
+
+    # contended: holder pins the row, every competing acquire waits
+    locks.acquire(1, "inodes", (0, "hot"), EXCLUSIVE)
+
+    def contended():
+        for t in range(2, 6):
+            try:
+                locks.acquire(t, "inodes", (0, "hot"), EXCLUSIVE)
+            except LockTimeout:
+                pass
+    frac = _measured_wait_frac(locks, contended)
+    assert frac > 0.05
+    shrunk = []
+    for _ in range(3):
+        ctl.observe(128, 0, 128, lock_wait_frac=frac)
+        shrunk.append(ctl.batch_size)
+    assert shrunk[0] < 16                  # multiplicative decrease
+    assert shrunk == sorted(shrunk, reverse=True)
+    assert ctl.batch_size >= ctl.min_batch
+
+    # calm: row released, acquires sail through -> additive regrowth
+    locks.release_all(1)
+    frac = _measured_wait_frac(
+        locks, lambda: locks.acquire(9, "inodes", (0, "hot"), EXCLUSIVE))
+    assert frac == 0.0
+    low = ctl.batch_size
+    for _ in range(4):
+        ctl.observe(128, 0, 128, lock_wait_frac=frac)
+    assert ctl.batch_size == min(ctl.max_batch, low + 4 * ctl.batch_step)
+    assert ctl.batch_history[0] == 16      # full trajectory recorded
+
+
+def test_batch_knob_disabled_without_batch_base():
+    ctl = WindowController(64, min_window=8, max_window=256)
+    assert ctl.batch_size is None
+    ctl.observe(64, 0, 64, lock_wait_frac=0.9)   # must be a no-op knob
+    assert ctl.batch_size is None
+    assert ctl.batch_history == []
+
+
+def test_planned_pipeline_propagates_adapted_batch_size(make_cluster):
+    store, cluster, ns = make_cluster(2, namespace=True)
+    trace = SpotifyWorkload(ns, seed=3).make_trace(300)
+    pipe = PlannedRequestPipeline(cluster, batch_size=16, window=64)
+    pipe.run(trace)
+    ctl = pipe.planner.controller
+    assert ctl is not None and ctl.batch_size is not None
+    # the live knob is threaded back to planner AND pipeline every window
+    assert pipe.batch_size == pipe.planner.batch_size == ctl.batch_size
+    assert len(ctl.batch_history) >= 2
+
+
+# ---------------------------------------------------------------------------
+# the pool: scale-out under load, scale-in when idle, warm migration
+# ---------------------------------------------------------------------------
+
+def _elastic_setup(make_cluster, *, n=2, **pool_kw):
+    store, cluster, ns = make_cluster(n, namespace=True)
+    kw = dict(min_namenodes=n, max_namenodes=4, high_load=60,
+              low_load=20, hysteresis=2, cooldown=2)
+    kw.update(pool_kw)
+    return store, cluster, ns, ElasticNamenodePool(cluster, **kw)
+
+
+def test_pool_scales_out_under_load_and_prewarms(make_cluster):
+    store, cluster, ns, pool = _elastic_setup(make_cluster)
+    client = DFSClient(cluster)
+    client.attach_pool(pool)
+    trace = SpotifyWorkload(ns, seed=13).make_trace(600)
+    stats = client.run_trace(trace, planned=True, window=100,
+                             adaptive=False)
+    assert stats.failed == 0
+    assert pool.scale_outs >= 1
+    assert len(cluster.alive_namenodes()) > 2
+    joiner = cluster.namenodes[2]
+    # pre-warmed from the client cache BEFORE serving: the scale_out
+    # event records the migrated entries and the joiner's cache is hot
+    ev = next(e for e in pool.events if e.action == "scale_out")
+    assert ev.migrated_entries > 0
+    assert joiner.ops.cache.entries > 0
+
+
+def test_pool_scales_in_when_idle_with_warm_migration(make_cluster):
+    store, cluster, ns, pool = _elastic_setup(make_cluster, n=3,
+                                              min_namenodes=2,
+                                              hysteresis=2, cooldown=1)
+    victim = cluster.namenodes[2]
+    victim.perform("stat", ns.files[-1])   # give the victim cache warmth
+    assert victim.ops.cache.entries > 0
+    migrated_to = cluster.namenodes[1].ops.cache.entries
+    for _ in range(8):
+        if len(cluster.alive_namenodes()) <= 2:
+            break
+        pool.tick(queue_depth=0)
+    assert pool.scale_ins == 1
+    assert not victim.alive
+    # retirement left the election immediately (planned, not a crash)
+    assert cluster.election.leader() != victim.nn_id
+    # the victim's working set moved to the survivors
+    assert pool.migrated_entries > 0
+    assert cluster.namenodes[1].ops.cache.entries > migrated_to
+
+
+def test_pool_scale_in_preserves_renewed_leases(make_cluster):
+    """Membership changes must not drop in-flight leases: a client
+    writing through a scale-in (and renewing, as real clients do) keeps
+    its lease; the leader's housekeeping only reclaims EXPIRED holders."""
+    store, cluster, ns, pool = _elastic_setup(make_cluster, n=3,
+                                              min_namenodes=2,
+                                              hysteresis=2, cooldown=1)
+    client = DFSClient(cluster)
+    client.create("/w_lease", client="writer")
+    client.add_block("/w_lease", client="writer")
+    for _ in range(8):
+        if len(cluster.alive_namenodes()) <= 2:
+            break
+        client.renew_lease(client="writer")
+        pool.tick(queue_depth=0)
+    assert pool.scale_ins == 1
+    # the lease survived: the same writer can keep writing, and complete
+    client.add_block("/w_lease", client="writer")
+    client.complete_block("/w_lease", size=1024, client="writer")
+
+
+def test_pool_hysteresis_and_cooldown_prevent_thrash(make_cluster):
+    store, cluster, ns, pool = _elastic_setup(
+        make_cluster, high_load=10, low_load=5, hysteresis=3, cooldown=4)
+    # constant high load: first action only after `hysteresis` ticks ...
+    pool.tick(queue_depth=1000)
+    pool.tick(queue_depth=1000)
+    assert pool.scale_outs == 0
+    pool.tick(queue_depth=1000)
+    assert pool.scale_outs == 1
+    # ... and the next not before `cooldown` more ticks
+    pool.tick(queue_depth=1000)
+    pool.tick(queue_depth=1000)
+    pool.tick(queue_depth=1000)
+    assert pool.scale_outs == 1
+    pool.tick(queue_depth=1000)
+    assert pool.scale_outs == 2
+    assert len(cluster.alive_namenodes()) == 4
+    # at max_namenodes: high load never scales past the ceiling
+    for _ in range(8):
+        pool.tick(queue_depth=1000)
+    assert len(cluster.alive_namenodes()) == 4
+
+
+def test_membership_epoch_rebalances_sticky_clients(make_cluster):
+    store, cluster, ns, pool = _elastic_setup(make_cluster)
+    client = DFSClient(cluster, policy="sticky")
+    client.attach_pool(pool)
+    client.stat("/")
+    assert client._selector._sticky is not None
+    pool.scale_out("test")
+    # the epoch moved: the next call re-picks instead of sticking
+    before = pool.membership_epoch
+    client.stat("/")
+    assert pool.membership_epoch == before
+    # rebalanced without dropping the call (it succeeded above); sticky
+    # re-pins AFTER the refresh, so subsequent calls are stable again
+    assert client._selector._sticky is not None
+
+
+# ---------------------------------------------------------------------------
+# hint-aware routing
+# ---------------------------------------------------------------------------
+
+def test_warm_namenode_lookup_prefers_warm_cache(make_cluster):
+    store, cluster = make_cluster(3, dirs=("/w",), files=("/w/f",))
+    # the fixture created the paths through NN 0, warming it: make the
+    # warmth exclusive to NN 2 so the lookup has exactly one answer
+    cluster.namenodes[0].ops.cache.clear()
+    cluster.namenodes[1].ops.cache.clear()
+    warm = cluster.namenodes[2]
+    warm.perform("stat", "/w/f")         # only NN 2 resolves the chain
+    alive = cluster.alive_namenodes()
+    assert RequestPipeline._warm_namenode("/w/f", alive) is warm
+    # unknown path: no warm namenode -> caller falls back
+    assert RequestPipeline._warm_namenode("/nope/x", alive) is None
+
+
+def test_planner_routes_batches_to_warm_slots(make_cluster):
+    store, cluster, ns = make_cluster(3, namespace=True)
+    cluster.namenodes[0].ops.cache.clear()   # NN 0 built the namespace
+    warm = cluster.namenodes[1]
+    for f in ns.files[:8]:
+        warm.perform("stat", f)
+    trace = [WorkloadOp("stat", f) for f in ns.files[:8]]
+    pipe = PlannedRequestPipeline(cluster, batch_size=4, window=8,
+                                  adaptive=False, hint_routing=True)
+    stats = pipe.run(trace)
+    assert stats.failed == 0
+    assert pipe.plan_report.hint_routed_batches > 0
+    # the warm namenode actually served the routed work
+    assert stats.per_nn_ops[warm.nn_id] > 0
+
+
+def test_hint_routing_off_by_default_on_static_fleet(make_cluster):
+    store, cluster, ns = make_cluster(2, namespace=True)
+    pipe = PlannedRequestPipeline(cluster, batch_size=8, window=32,
+                                  adaptive=False)
+    pipe.run(SpotifyWorkload(ns, seed=5).make_trace(64))
+    assert pipe.hint_routing is False
+    assert pipe.plan_report.hint_routed_batches == 0
+
+
+# ---------------------------------------------------------------------------
+# equivalence: elastic replay == fixed-size sequential oracle
+# ---------------------------------------------------------------------------
+
+def test_elastic_replay_namespace_equals_sequential(make_cluster,
+                                                    oracle_replay):
+    store, cluster, ns, pool = _elastic_setup(make_cluster)
+    client = DFSClient(cluster)
+    client.attach_pool(pool)
+    trace, bounds = make_phased_trace(ns, [300, 300], seed=13)
+    client.run_trace(trace[:bounds[0]], planned=True, window=100,
+                     adaptive=False)
+    for _ in range(12):                  # idle: scale back in + migrate
+        if len(cluster.alive_namenodes()) <= 2:
+            break
+        pool.tick(queue_depth=0)
+    client.run_trace(trace[bounds[0]:], planned=True, window=100,
+                     adaptive=False)
+    assert pool.scale_outs >= 1 and pool.scale_ins >= 1
+    oracle_snap, _ = oracle_replay(trace, namespace=True)
+    assert namespace_snapshot(store) == oracle_snap
+
+
+# ---------------------------------------------------------------------------
+# chaos-compose: a namenode CRASH strikes DURING scale-out
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+def test_kill_during_scale_out_recovers_to_oracle(make_cluster,
+                                                  oracle_replay):
+    """The composed failure mode: the pool admits a (cold-ish) joiner
+    under load, and an established namenode CRASHES at the batch exchange
+    in the very next window. Survivors + joiner must drain the replay,
+    and the §7.6 recovery protocol must converge to the fault-free
+    sequential oracle's namespace with all RecoveryInvariants holding.
+    The chaos hook propagation in ``add_namenode`` is load-bearing here:
+    the injector must be able to see (and strike) late joiners too."""
+    store, cluster, ns = make_cluster(2, namespace=True)
+    pool = ElasticNamenodePool(cluster, min_namenodes=2, max_namenodes=4,
+                               high_load=1, low_load=0.5, hysteresis=1,
+                               cooldown=0)
+    trace = SpotifyWorkload(ns, seed=7).make_trace(300)
+    # window 1 (50 ops, ~7+ exchanges) -> pool tick -> scale-out; the
+    # 10th batch exchange lands in window 2, right after the join
+    plan = ChaosPlan((Fault(FaultSite.BATCH_EXCHANGE, at=9, victim=0,
+                            kind=CRASH),))
+    inj = FaultInjector(plan, cluster)
+    pipe = PlannedRequestPipeline(cluster, batch_size=8, window=50,
+                                  adaptive=False, pool=pool)
+    with inj:
+        stats = pipe.run(trace)
+    assert pool.scale_outs >= 1
+    crash = [e for e in inj.events if e.kind == CRASH]
+    assert crash and crash[0].nn_id == 0
+    scale_t = next(e.t for e in pool.events if e.action == "scale_out")
+    assert not cluster.namenodes[0].alive
+    assert len(cluster.alive_namenodes()) >= 2
+
+    # §7.6 recovery: election past the staleness bound, leader
+    # housekeeping, re-drive transients on survivors, final scrub
+    outcomes = list(stats.outcomes)
+    for _ in range(3):
+        todo = [i for i, oc in enumerate(outcomes)
+                if not oc.ok and oc.error in RETRYABLE_ERRORS]
+        if not todo:
+            break
+        for _ in range(cluster.election.max_missed + 1):
+            cluster.tick()
+        cluster.recover_leases()
+        rstats = RequestPipeline(cluster, batch_size=8).run(
+            [trace[i] for i in todo])
+        for i, oc in zip(todo, rstats.outcomes):
+            outcomes[i] = oc
+    cluster.scrub_leases()
+    assert all(oc.ok or oc.error not in RETRYABLE_ERRORS
+               for oc in outcomes)
+
+    oracle_snap, oracle_outcomes = oracle_replay(trace, namespace=True)
+    RecoveryInvariants(store, cluster).assert_all(oracle_snap)
+    # the crash struck after the scale-out, i.e. the fault genuinely
+    # composed with an elastic membership change
+    assert scale_t <= cluster.election.now
+
+
+# ---------------------------------------------------------------------------
+# DES mirror: scale events in the cluster simulator
+# ---------------------------------------------------------------------------
+
+def test_des_scale_out_adds_capacity_without_zero_bins():
+    from repro.core.cluster_sim import BatchedHopsFSSim, profile_ops
+    from repro.core.workload import TraceReplay
+    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=20)
+    trace = SpotifyWorkload(ns, seed=13).make_trace(800)
+    sim = BatchedHopsFSSim(n_namenodes=2, n_ndb=4,
+                           profiles=profile_ops(), batch_size=8,
+                           seed=1, planned=True, timeline_bin=0.01)
+    sim.start_clients(400, TraceReplay(trace))
+    sim.schedule_scale_out(0.03, 2)
+    sim.schedule_scale_in(0.07, 1)
+    res = sim.run(0.1)
+    assert [e[1:] for e in sim.fault_events] == [
+        ("scale_out", 2), ("scale_out", 3), ("scale_in", 3)]
+    assert len(sim.nn_handlers) == 4
+    assert sim.nn_alive == [True, True, True, False]
+    # joiners actually served work, and service never stopped
+    assert sim.nn_ops_completed[2] > 0
+    counts = dict(res.timeline)
+    series = [counts.get(round(b * 0.01, 10), 0) for b in range(10)]
+    assert all(c > 0 for c in series[1:])
