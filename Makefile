@@ -2,7 +2,7 @@
 PY        ?= python
 PYTHONPATH := src
 
-.PHONY: test pytest chaos elastic lint smoke bench bench-all bench-quick docs-lint
+.PHONY: test pytest chaos elastic overload lint smoke bench bench-all bench-quick docs-lint
 
 test: lint smoke           ## default flow: lint + example smoke + tier-1 suite
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -x -q
@@ -15,6 +15,9 @@ chaos:                   ## fault-injection / failover recovery suite (docs/CHAO
 
 elastic:                 ## elastic namenode pool suite (docs/ELASTICITY.md)
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest tests/test_elastic_pool.py -q
+
+overload:                ## overload-hardened request path suite (docs/ROBUSTNESS.md)
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest tests/test_admission.py -q
 
 lint:                    ## pyflakes if installed, else the AST fallback
 	PYTHONPATH=$(PYTHONPATH) $(PY) scripts/lint.py

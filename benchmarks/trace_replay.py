@@ -407,6 +407,183 @@ def elasticity_report(trace, profiles, *, batch_size: int = 16,
     }
 
 
+def overload_report(*, batch_size: int = 16, n_ops: int = 600,
+                    n_tenants: int = 6, n_namenodes: int = 3,
+                    deadline_budget: int = 8, deadline_per_op: float = 0.05,
+                    delay_ticks: int = 6, seed: int = 9) -> Dict:
+    """Gray-failure overload bench (docs/ROBUSTNESS.md): one namenode
+    turns SLOW (alive, heartbeating, every batch exchange with it ages
+    the shared logical clock — the chaos ``DELAY`` kind) while a Zipf
+    s≈1.1 multi-tenant trace with per-op deadlines replays through the
+    planned pipeline. Two runs on identical stores:
+
+      * **unprotected** — the plain planned pipeline. The planner keeps
+        dealing to the slow namenode, the clock races ahead of the
+        deadline horizon, and ops complete LATE (past their deadline —
+        work nobody is waiting for).
+      * **protected** — admission controller + breaker board. The slow
+        namenode sheds already-expired work (``DeadlineExpired``), the
+        shed batches trip its circuit breaker, the planner reroutes
+        around it, and the clock stops racing. Nothing completes past
+        its deadline (admission is checked AFTER the exchange's clock
+        advance, so the guarantee is exact, not statistical).
+
+    Goodput is ``ok AND completed_at <= deadline`` on the election
+    clock. The protected run must beat the unprotected run on goodput
+    and on worst per-tenant p99, with zero late completions. A recovery
+    pass (breaker healed, deadlines inert) then re-drives shed ops and
+    the final namespace must equal the fault-free sequential oracle —
+    shedding loses timeliness, never metadata."""
+    from repro.core import (AdmissionController, BreakerBoard, ChaosPlan,
+                            DELAY, Fault, FaultInjector, FaultSite,
+                            PlannedRequestPipeline, RequestPipeline,
+                            stamp_deadlines)
+    from repro.core.chaos import RETRYABLE_ERRORS
+    from repro.core.workload import make_zipf_tenant_trace
+
+    def build():
+        store = MetadataStore(n_datanodes=4)
+        format_fs(store)
+        cluster = NamenodeCluster(store, n_namenodes)
+        ns = SyntheticNamespace(NamespaceSpec(), n_dirs=20,
+                                files_per_dir=4)
+        materialize_namespace(cluster.namenodes[0], ns)
+        return store, cluster, ns
+
+    def fresh_trace(ns, now):
+        trace = make_zipf_tenant_trace(ns, n_ops, n_tenants=n_tenants,
+                                       seed=seed)
+        return stamp_deadlines(trace, now=now, budget=deadline_budget,
+                               per_op=deadline_per_op)
+
+    def injector(cluster):
+        # one gray-slow namenode: every batch exchange with NN 1 ages the
+        # shared clock by ``delay_ticks`` while the slowdown is active
+        plan = ChaosPlan(faults=[Fault(FaultSite.BATCH_EXCHANGE, at=4,
+                                       victim=1, kind=DELAY,
+                                       heal_after=10_000,
+                                       delay_ticks=delay_ticks)])
+        return FaultInjector(plan, cluster)
+
+    def measure(trace, outcomes, now0):
+        ok = late = good = 0
+        per_tenant: Dict[str, List[int]] = {}
+        shed: Dict[str, int] = {}
+        for wop, oc in zip(trace, outcomes):
+            if oc.ok:
+                ok += 1
+                done = oc.result.completed_at
+                if wop.deadline is not None and done is not None \
+                        and done > wop.deadline:
+                    late += 1
+                else:
+                    good += 1
+                per_tenant.setdefault(wop.tenant, []).append(
+                    (done if done is not None else now0) - now0)
+            else:
+                shed[oc.error] = shed.get(oc.error, 0) + 1
+
+        def p99(xs):
+            return sorted(xs)[min(len(xs) - 1, int(0.99 * len(xs)))]
+
+        p99s = {t: p99(xs) for t, xs in sorted(per_tenant.items())}
+        return {
+            "ok": ok,
+            "goodput_ops": good,
+            "goodput_frac": round(good / len(trace), 3),
+            "late_completions": late,
+            "failed_by_error": dict(sorted(shed.items())),
+            "per_tenant_p99_ticks": p99s,
+            "worst_tenant_p99_ticks": max(p99s.values()) if p99s else 0,
+            "clock_advance_ticks": None,   # filled by caller
+        }
+
+    window = batch_size * 4
+
+    # -- unprotected: naive planned pipeline under the gray failure -----
+    store_u, cluster_u, ns_u = build()
+    now0_u = cluster_u.election.now
+    trace_u = fresh_trace(ns_u, now0_u)
+    inj_u = injector(cluster_u)
+    inj_u.install()
+    try:
+        pipe_u = PlannedRequestPipeline(cluster_u, batch_size=batch_size,
+                                        window=window, adaptive=False)
+        stats_u = pipe_u.run(trace_u)
+    finally:
+        inj_u.uninstall()
+    unprotected = measure(trace_u, stats_u.outcomes, now0_u)
+    unprotected["clock_advance_ticks"] = cluster_u.election.now - now0_u
+
+    # -- protected: admission + breakers on an identical cluster --------
+    store_p, cluster_p, ns_p = build()
+    now0_p = cluster_p.election.now
+    trace_p = fresh_trace(ns_p, now0_p)
+    admission = AdmissionController(cluster_p.election,
+                                    queue_capacity=max(n_ops, 1))
+    admission.install(cluster_p)
+    board = BreakerBoard(cluster_p.election, failure_threshold=1,
+                         reset_after=64)
+    inj_p = injector(cluster_p)
+    inj_p.install()
+    try:
+        pipe_p = PlannedRequestPipeline(cluster_p, batch_size=batch_size,
+                                        window=window, adaptive=False,
+                                        admission=admission,
+                                        breakers=board)
+        stats_p = pipe_p.run(trace_p)
+    finally:
+        inj_p.uninstall()
+    protected = measure(trace_p, stats_p.outcomes, now0_p)
+    protected["clock_advance_ticks"] = cluster_p.election.now - now0_p
+
+    # -- recovery: slow NN healed, deadlines inert — shed ops re-driven;
+    # shedding must cost timeliness only, never metadata
+    admission.uninstall()
+    outcomes = list(stats_p.outcomes)
+    todo = [i for i, oc in enumerate(outcomes)
+            if not oc.ok and oc.error in RETRYABLE_ERRORS]
+    if todo:
+        rstats = RequestPipeline(cluster_p, batch_size=1).run(
+            [trace_p[i] for i in todo])
+        for i, oc in zip(todo, rstats.outcomes):
+            outcomes[i] = oc
+    cluster_p.recover_leases()
+    cluster_p.scrub_leases()
+
+    # fault-free sequential oracle over the same logical trace
+    store_o, cluster_o, ns_o = build()
+    trace_o = fresh_trace(ns_o, cluster_o.election.now)
+    RequestPipeline(cluster_o, batch_size=1).run(trace_o)
+    state_equal = (namespace_snapshot(store_p)
+                   == namespace_snapshot(store_o))
+
+    rep_p = pipe_p.plan_report
+    return {
+        "n_namenodes": n_namenodes,
+        "slow_namenode": 1,
+        "delay_ticks_per_exchange": delay_ticks,
+        "n_ops": n_ops,
+        "n_tenants": n_tenants,
+        "zipf_s": 1.1,
+        "batch_size": batch_size,
+        "deadline_budget_ticks": deadline_budget,
+        "deadline_per_op_ticks": deadline_per_op,
+        "unprotected": unprotected,
+        "protected": protected,
+        "goodput_gain_pct": (
+            round(100 * (protected["goodput_ops"]
+                         / max(1, unprotected["goodput_ops"]) - 1), 1)),
+        "planner_deadline_shed": rep_p.deadline_shed,
+        "planner_breaker_rerouted": rep_p.breaker_rerouted,
+        "breaker_trips": board.trips,
+        "breaker_open_at_end": sorted(board.open_ids()),
+        "admission": admission.report(),
+        "recovery_redriven_ops": len(todo),
+        "state_matches_sequential": state_equal,
+    }
+
+
 def run_replay(*, quick: bool = False, namenode_counts=(1, 4, 16),
                batch_size: int = 16, trace_ops: int = 5000,
                seed: int = 11) -> Dict:
@@ -451,6 +628,8 @@ def run_replay(*, quick: bool = False, namenode_counts=(1, 4, 16),
     elasticity = elasticity_report(trace, profiles, batch_size=batch_size,
                                    horizon=horizon,
                                    phase_ops=300 if quick else 600)
+    overload = overload_report(batch_size=batch_size,
+                               n_ops=300 if quick else 600)
     return {
         "benchmark": "trace_replay_throughput",
         "paper_figure": "Fig 7 (throughput vs number of namenodes)",
@@ -473,6 +652,7 @@ def run_replay(*, quick: bool = False, namenode_counts=(1, 4, 16),
         "functional_batching_write_heavy": func_w,
         "failover": failover,
         "elasticity": elasticity,
+        "overload": overload,
     }
 
 
@@ -516,6 +696,15 @@ def bench_trace_replay(quick: bool = False) -> List[Row]:
                  f"{fo['dip_depth_pct']}%, recovery {fo['recovery_s']} s "
                  f"({fo['ops_to_recovery']} ops), "
                  f"{fo['zero_bins_after_kill']} zero bins (paper: none)"))
+    ov = report["overload"]
+    rows.append(("trace_replay.overload", 0.0,
+                 f"gray-slow NN: goodput "
+                 f"{ov['unprotected']['goodput_frac']} -> "
+                 f"{ov['protected']['goodput_frac']} protected, late "
+                 f"{ov['unprotected']['late_completions']} -> "
+                 f"{ov['protected']['late_completions']}, "
+                 f"{ov['breaker_trips']} breaker trips (state match: "
+                 f"{ov['state_matches_sequential']})"))
     el = report["elasticity"]
     rows.append(("trace_replay.elasticity", 0.0,
                  f"scale-out {el['n_namenodes_base']}->"
@@ -589,6 +778,17 @@ def main() -> None:
           f"{el['hint_hit_rate_after']} "
           f"({el['migrated_hint_entries']} entries migrated), "
           f"state_matches_sequential={el['state_matches_sequential']}")
+    ov = report["overload"]
+    print(f"overload: 1 gray-slow NN of {ov['n_namenodes']}, goodput "
+          f"{ov['unprotected']['goodput_frac']} -> "
+          f"{ov['protected']['goodput_frac']} protected "
+          f"(+{ov['goodput_gain_pct']}%), late completions "
+          f"{ov['unprotected']['late_completions']} -> "
+          f"{ov['protected']['late_completions']}, worst tenant p99 "
+          f"{ov['unprotected']['worst_tenant_p99_ticks']} -> "
+          f"{ov['protected']['worst_tenant_p99_ticks']} ticks, "
+          f"{ov['breaker_trips']} breaker trips, "
+          f"state_matches_sequential={ov['state_matches_sequential']}")
     print(f"wrote {args.out}")
 
 

@@ -27,7 +27,13 @@ Checks:
   * the artifact's `elasticity` section (scale-the-fleet-mid-replay
     measurement, docs/ELASTICITY.md) carries the full metric set the
     elastic-pool suite and docs rely on (scale-out gain, zero-bin count,
-    hint hit rates around migration, oracle equality, scale events).
+    hint hit rates around migration, oracle equality, scale events);
+  * the artifact's `overload` section (gray-failure goodput measurement,
+    docs/ROBUSTNESS.md) carries the full metric set the admission suite
+    and docs rely on (protected vs unprotected goodput and p99, breaker
+    trips, admission telemetry, oracle equality) and its headline
+    acceptance criteria hold: zero protected late completions, protected
+    goodput strictly above unprotected.
 """
 from __future__ import annotations
 
@@ -47,7 +53,7 @@ sys.path.insert(0, str(ROOT / "src"))    # repro
 
 DOCS = ["README.md", "docs/ARCHITECTURE.md", "docs/API.md",
         "docs/BENCHMARKS.md", "docs/CHAOS.md", "docs/ELASTICITY.md",
-        "docs/HINTS.md"]
+        "docs/HINTS.md", "docs/ROBUSTNESS.md"]
 MIN_BYTES = 1500
 REF_PREFIXES = ("src/", "tests/", "benchmarks/", "examples/", "docs/",
                 "scripts/")
@@ -310,6 +316,71 @@ def check_elasticity_schema(artifact: Path) -> list:
     return errors
 
 
+#: metric keys the `overload` section of BENCH_throughput.json must
+#: carry (consumed by docs/ROBUSTNESS.md and the admission suite)
+OVERLOAD_KEYS = frozenset({
+    "n_namenodes", "slow_namenode", "delay_ticks_per_exchange", "n_ops",
+    "n_tenants", "zipf_s", "batch_size", "deadline_budget_ticks",
+    "deadline_per_op_ticks", "unprotected", "protected",
+    "goodput_gain_pct", "planner_deadline_shed",
+    "planner_breaker_rerouted", "breaker_trips", "breaker_open_at_end",
+    "admission", "recovery_redriven_ops", "state_matches_sequential",
+})
+
+#: per-run metric keys of the `unprotected` / `protected` sub-sections
+OVERLOAD_RUN_KEYS = frozenset({
+    "ok", "goodput_ops", "goodput_frac", "late_completions",
+    "failed_by_error", "per_tenant_p99_ticks", "worst_tenant_p99_ticks",
+    "clock_advance_ticks",
+})
+
+
+def check_overload_schema(artifact: Path) -> list:
+    """The bench artifact's gray-failure overload section must exist,
+    carry every documented metric key, and satisfy the acceptance
+    criteria the robustness layer is sold on."""
+    if not artifact.exists():
+        return []                 # already reported by the schema check
+    try:
+        report = json.loads(artifact.read_text())
+    except Exception:
+        return []                 # already reported by the schema check
+    ov = report.get("overload")
+    if not isinstance(ov, dict):
+        return [f"{artifact.name}: no `overload` section (regenerate "
+                f"with `make bench`)"]
+    errors = []
+    for k in sorted(OVERLOAD_KEYS - set(ov)):
+        errors.append(f"{artifact.name}: overload section missing "
+                      f"metric `{k}`")
+    for run in ("unprotected", "protected"):
+        sub = ov.get(run)
+        if not isinstance(sub, dict):
+            continue              # missing-key error already emitted
+        for k in sorted(OVERLOAD_RUN_KEYS - set(sub)):
+            errors.append(f"{artifact.name}: overload.{run} missing "
+                          f"metric `{k}`")
+    u, p = ov.get("unprotected"), ov.get("protected")
+    if isinstance(u, dict) and isinstance(p, dict):
+        if p.get("late_completions") != 0:
+            errors.append(f"{artifact.name}: overload.protected completed "
+                          f"{p.get('late_completions')} ops past their "
+                          f"deadline — deadline shedding is not airtight")
+        if not (p.get("goodput_frac", 0) > u.get("goodput_frac", 1)):
+            errors.append(f"{artifact.name}: overload protection did not "
+                          f"beat the unprotected run on goodput "
+                          f"({p.get('goodput_frac')} <= "
+                          f"{u.get('goodput_frac')})")
+    if not ov.get("breaker_trips"):
+        errors.append(f"{artifact.name}: overload section recorded no "
+                      f"breaker trips — the slow namenode was never "
+                      f"quarantined")
+    if ov.get("state_matches_sequential") is not True:
+        errors.append(f"{artifact.name}: overload recovery did not "
+                      f"converge on the sequential oracle's namespace")
+    return errors
+
+
 def main() -> int:
     errors = []
     for rel in DOCS:
@@ -318,6 +389,7 @@ def main() -> int:
                                           ROOT / "BENCH_throughput.json"))
     errors.extend(check_failover_schema(ROOT / "BENCH_throughput.json"))
     errors.extend(check_elasticity_schema(ROOT / "BENCH_throughput.json"))
+    errors.extend(check_overload_schema(ROOT / "BENCH_throughput.json"))
     if errors:
         print("docs-lint: FAIL")
         for e in errors:

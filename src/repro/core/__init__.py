@@ -19,12 +19,20 @@ Public surface:
   FaultInjector / ChaosPlan / RecoveryInvariants — deterministic chaos
                          fault injection + failover convergence oracle
                          (§7.6, docs/CHAOS.md)
+  AdmissionController / BreakerBoard / RetryBudget — overload-hardened
+                         request path: deadlines, weighted fair queueing,
+                         retry budgets, circuit breakers
+                         (docs/ROBUSTNESS.md)
 """
+from .admission import (AdmissionController, BREAKER_FAILURES, BreakerBoard,
+                        CircuitBreaker, DeadlineExpired, OverloadShed,
+                        RetryBudget, TenantLoad, circuit_breaker,
+                        stamp_deadlines)
 from .batch_planner import (BatchPlanner, HintResolver, MultiCacheResolver,
                             PlanReport, PlannedBatch,
                             PlannedRequestPipeline, WindowController)
-from .chaos import (ChaosEvent, ChaosPlan, ChaosReport, Fault,
-                    FaultInjector, FaultSite, RecoveryInvariants,
+from .chaos import (CRASH, ChaosEvent, ChaosPlan, ChaosReport, DELAY, Fault,
+                    FaultInjector, FaultSite, PARTITION, RecoveryInvariants,
                     fault_schedules, replay_with_recovery)
 from .dfs_client import (BlockLocation, ConcatSummary, ContentSummary,
                          DFSClient, DeleteSummary, FileStatus,
@@ -75,6 +83,9 @@ __all__ = [
     "SHARED", "EXCLUSIVE",
     "FaultSite", "Fault", "ChaosPlan", "ChaosEvent", "ChaosReport",
     "FaultInjector", "RecoveryInvariants", "fault_schedules",
-    "replay_with_recovery",
+    "replay_with_recovery", "CRASH", "PARTITION", "DELAY",
+    "AdmissionController", "BreakerBoard", "CircuitBreaker", "RetryBudget",
+    "TenantLoad", "DeadlineExpired", "OverloadShed", "BREAKER_FAILURES",
+    "circuit_breaker", "stamp_deadlines",
     "hdfs_capacity_files", "hopsfs_capacity_files",
 ]

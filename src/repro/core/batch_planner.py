@@ -249,6 +249,8 @@ class PlanReport:
     client_invalidations: int = 0  # destructive-op invalidations
     hint_routed_batches: int = 0   # batches dealt to a warm namenode
                                    # instead of the partition-hash slot
+    deadline_shed: int = 0         # ops never dealt: deadline already past
+    breaker_rerouted: int = 0      # batches moved off an open-breaker slot
     window_sizes: List[int] = field(default_factory=list)
 
     @property
@@ -310,12 +312,19 @@ class BatchPlanner:
                  window: Optional[int] = None,
                  pin_all_mutations: bool = False,
                  client_cache: Optional[InodeHintCache] = None,
-                 adaptive: bool = False, hint_routing: bool = False):
+                 adaptive: bool = False, hint_routing: bool = False,
+                 breakers: Any = None):
         self.cluster = cluster
         self.batch_size = max(1, batch_size)
         n_slots = max(1, len(cluster.alive_namenodes()))
         self.n_slots = n_slots
         self.hint_routing = hint_routing
+        #: optional admission.BreakerBoard — dealing skips namenodes
+        #: whose circuit breaker is open (gray-failure protection)
+        self.breakers = breakers
+        #: indices the LAST plan_window refused to deal because their
+        #: deadline already passed (the pipeline marks them shed)
+        self.deadline_shed: List[int] = []
         base = window or self.batch_size * n_slots * 8
         self.window = base
         self.controller: Optional[WindowController] = (
@@ -431,6 +440,26 @@ class BatchPlanner:
                 lease_key_of[i] = spec.lease_order(wops[i])
         return pinned, lease_freed, lease_key_of
 
+    def _routable_slot(self, slot: int, alive: Sequence[Any]) -> int:
+        """Breaker-aware dealing (docs/ROBUSTNESS.md): skip slots whose
+        namenode has an OPEN circuit breaker — a tripped namenode stops
+        receiving free chunks — falling to the deterministic next slot.
+        Half-open breakers admit exactly their probe budget (``routable``
+        consumes a probe per dealt batch). If the whole fleet tripped,
+        the original slot is kept: routing must proceed somewhere, and
+        the breakers re-probe as their reset timers expire."""
+        if self.breakers is None or not alive:
+            return slot
+        n = len(alive)
+        slot %= n
+        for d in range(n):
+            k = (slot + d) % n
+            if self.breakers.routable(alive[k].nn_id):
+                if d:
+                    self.report.breaker_rerouted += 1
+                return k
+        return slot
+
     @staticmethod
     def _warm_slot(path: str, alive: Sequence[Any]) -> Optional[int]:
         """Slot index (into the alive list) of the first namenode whose
@@ -477,6 +506,22 @@ class BatchPlanner:
         batches: List[PlannedBatch] = []
         self.report.ops += hi - lo
         window = list(range(lo, hi))
+        # deadline-aware dealing: deal only ops that can still make
+        # their deadline — expired ops are shed client-side, sparing the
+        # fleet a round trip that could not produce useful work
+        now = self.cluster.election.now
+        self.deadline_shed = [i for i in window
+                              if wops[i].deadline is not None
+                              and now > wops[i].deadline]
+        if self.deadline_shed:
+            self.report.deadline_shed += len(self.deadline_shed)
+            expired = set(self.deadline_shed)
+            window = [i for i in window if i not in expired]
+        if not window:
+            self.report.windows += 1
+            self.report.window_sizes.append(hi - lo)
+            self._refresh_client_telemetry()
+            return batches
         ct = lower_trace([wops[i] for i in window], resolver)
         # _sigs: the kernel's path-equality probe, no consumer here yet
         comp_parts, hint_parts, _sigs, used_kernel = _chain_partitions(
@@ -560,6 +605,7 @@ class BatchPlanner:
                 if warm is not None:
                     slot = warm
                     self.report.hint_routed_batches += 1
+            slot = self._routable_slot(slot, alive)
             mutates = any(
                 (s := REGISTRY.get(wops[i].op)) is None or not s.read_only
                 for i in chunk)
@@ -573,11 +619,12 @@ class BatchPlanner:
         # final state is unaffected by reads)
         pin_order = [i for i in window if i in pinned]
         self.report.pinned_ops += len(pin_order)
+        pin_slot = self._routable_slot(0, alive)
         for c in range(0, len(pin_order), self.batch_size):
             chunk = pin_order[c:c + self.batch_size]
             batches.append(PlannedBatch(
                 indices=chunk, hints=[hints[i] for i in chunk],
-                nn_slot=0, ordered=True))
+                nn_slot=pin_slot, ordered=True))
         self.report.windows += 1
         self.report.window_sizes.append(hi - lo)
         self.report.batches += len(batches)
@@ -657,11 +704,19 @@ class PlannedRequestPipeline(RequestPipeline):
                  concurrent: bool = False, window: Optional[int] = None,
                  client_cache: Optional[InodeHintCache] = None,
                  adaptive: bool = True, pool: Any = None,
-                 hint_routing: Optional[bool] = None):
+                 hint_routing: Optional[bool] = None,
+                 admission: Any = None, breakers: Any = None):
         super().__init__(cluster, batch_size=batch_size,
                          concurrent=concurrent)
         self.window = window
         self.adaptive = adaptive
+        #: optional admission.AdmissionController — fed the remaining
+        #: queue depth per window (its pressure signal); the controller
+        #: itself must be install()ed on the cluster by the caller
+        self.admission = admission
+        #: optional admission.BreakerBoard — batches are dealt away from
+        #: open-breaker namenodes and every batch outcome is recorded
+        self.breakers = breakers
         #: the client-side hint cache, persistent across run() calls (and
         #: shareable with a DFSClient so facade calls warm it too)
         self.client_cache = (client_cache if client_cache is not None
@@ -709,7 +764,8 @@ class PlannedRequestPipeline(RequestPipeline):
                                     window=self.window,
                                     client_cache=self.client_cache,
                                     adaptive=self.adaptive,
-                                    hint_routing=self.hint_routing)
+                                    hint_routing=self.hint_routing,
+                                    breakers=self.breakers)
         planner = self.planner
         outcomes: List[Optional[OpOutcome]] = [None] * len(wops)
         residual: deque = deque()      # ops orphaned by namenode deaths
@@ -727,6 +783,8 @@ class PlannedRequestPipeline(RequestPipeline):
                 res = nn.execute_batch([wops[i] for i in batch.indices],
                                        hints=batch.hints)
             except StoreError:
+                if self.breakers is not None:
+                    self.breakers.record(nn.nn_id, ok=False)
                 with rlock:
                     residual.extend(batch.indices)
                 return False
@@ -736,6 +794,14 @@ class PlannedRequestPipeline(RequestPipeline):
                     died.append(i)
                 else:
                     outcomes[i] = oc
+            if self.breakers is not None:
+                # transport-class outcomes trip the breaker; genuine FS
+                # outcomes count as proof of health
+                from .admission import BREAKER_FAILURES
+                sick = bool(died) or any(
+                    oc is not None and not oc.ok
+                    and oc.error in BREAKER_FAILURES for oc in res)
+                self.breakers.record(nn.nn_id, ok=not sick)
             if died:
                 with rlock:
                     residual.extend(died)
@@ -829,9 +895,17 @@ class PlannedRequestPipeline(RequestPipeline):
             if not self.cluster.alive_namenodes():
                 break
             hi = min(lo + planner.window, len(wops))
+            if self.admission is not None:
+                # backlog report: the admission controllers' pressure
+                # signal for WFQ load shedding
+                self.admission.observe_queue(len(wops) - lo)
             pinned_before = planner.report.pinned_ops
             w0, a0 = locks.wait_count, locks.acquire_count
             batches = planner.plan_window(wops, lo, hi)
+            # ops the planner refused to deal (deadline already passed)
+            # are shed client-side — no round trip, no execution
+            for i in planner.deadline_shed:
+                outcomes[i] = OpOutcome(None, "DeadlineExpired")
             run_window(batches)
             drain_residual()
             rts = self._absorb_window(wops, outcomes, lo, hi)

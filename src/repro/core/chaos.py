@@ -72,6 +72,11 @@ PARTITIONABLE = (FaultSite.RPC, FaultSite.BATCH_EXCHANGE)
 
 CRASH = "crash"
 PARTITION = "partition"
+#: gray failure: the victim stays alive and heartbeating but every
+#: exchange with it burns ``delay_ticks`` of the shared logical clock —
+#: the "limping but not dead" server the crash/partition kinds can't
+#: model. Heals after ``heal_after`` slowed exchanges.
+DELAY = "delay"
 
 
 @dataclass(frozen=True)
@@ -79,21 +84,32 @@ class Fault:
     """One scheduled fault: at the ``at``-th firing of ``site`` (counted
     per site, 0-based) on a namenode matching ``victim`` (None = any),
     inject ``kind``.  Partitions heal after ``heal_after`` refused
-    exchanges, so every plan terminates."""
+    exchanges and delays after ``heal_after`` slowed ones, so every
+    plan terminates."""
     site: FaultSite
     at: int = 0
     victim: Optional[int] = None
     kind: str = CRASH
     heal_after: int = 3
+    #: DELAY only: logical-clock ticks each slowed exchange burns
+    delay_ticks: int = 2
 
     def __post_init__(self) -> None:
-        assert self.kind in (CRASH, PARTITION), self.kind
+        assert self.kind in (CRASH, PARTITION, DELAY), self.kind
         assert self.at >= 0
         if self.kind == PARTITION:
             assert FaultSite(self.site) in PARTITIONABLE, \
                 f"partition only makes sense at a client exchange, " \
                 f"not {self.site}"
             assert self.heal_after >= 1, "partitions must heal"
+        if self.kind == DELAY:
+            # a slow heartbeat is indistinguishable from a missed one in
+            # this model (the election already covers that); DELAY models
+            # slow WORK, so it lives at the request-path sites
+            assert FaultSite(self.site) is not FaultSite.HEARTBEAT, \
+                "delay faults fire on the request path, not heartbeats"
+            assert self.heal_after >= 1, "delays must heal"
+            assert self.delay_ticks >= 1
 
 
 @dataclass(frozen=True)
@@ -113,12 +129,17 @@ class ChaosPlan:
         for _ in range(n_faults):
             site = rng.choice(list(sites))
             kind = rng.choice([k for k in kinds
-                               if k == CRASH or site in PARTITIONABLE])
+                               if k == CRASH
+                               or (k == PARTITION and site in PARTITIONABLE)
+                               or (k == DELAY
+                                   and site is not FaultSite.HEARTBEAT)])
             faults.append(Fault(site=site, at=rng.randrange(max_at + 1),
                                 victim=rng.choice(
                                     [None] + list(range(n_namenodes))),
                                 kind=kind,
-                                heal_after=rng.randrange(1, 5)))
+                                heal_after=rng.randrange(1, 5),
+                                delay_ticks=(rng.randrange(1, 4)
+                                             if kind == DELAY else 2)))
         return ChaosPlan(tuple(faults))
 
 
@@ -132,11 +153,13 @@ def fault_schedules(*, n_namenodes: int, max_at: int = 16,
     import hypothesis.strategies as st
 
     def mk_fault(site: FaultSite, at: int, victim: Optional[int],
-                 kind: str, heal_after: int) -> Fault:
-        if site not in PARTITIONABLE:
+                 kind: str, heal_after: int, delay_ticks: int) -> Fault:
+        if kind == PARTITION and site not in PARTITIONABLE:
+            kind = CRASH
+        if kind == DELAY and site is FaultSite.HEARTBEAT:
             kind = CRASH
         return Fault(site=site, at=at, victim=victim, kind=kind,
-                     heal_after=heal_after)
+                     heal_after=heal_after, delay_ticks=delay_ticks)
 
     fault = st.builds(
         mk_fault,
@@ -146,7 +169,8 @@ def fault_schedules(*, n_namenodes: int, max_at: int = 16,
                          st.integers(min_value=0,
                                      max_value=n_namenodes - 1)),
         kind=st.sampled_from(list(kinds)),
-        heal_after=st.integers(min_value=1, max_value=4))
+        heal_after=st.integers(min_value=1, max_value=4),
+        delay_ticks=st.integers(min_value=1, max_value=3))
     return st.builds(lambda fs: ChaosPlan(tuple(fs)),
                      st.lists(fault, min_size=1, max_size=max_faults))
 
@@ -159,6 +183,7 @@ class ChaosEvent:
     nn_id: int
     kind: str
     action: str          # "killed" | "partitioned" | "refused" | "healed"
+                         # | "slowed" | "delayed" | "delay-healed"
                          # | "skipped-last-nn"
 
 
@@ -178,6 +203,8 @@ class FaultInjector:
         self.counts: Dict[FaultSite, int] = {s: 0 for s in FaultSite}
         self.pending: List[Fault] = list(plan.faults)
         self.partitioned: Dict[int, int] = {}   # nn_id -> refusals left
+        self.slowed: Dict[int, int] = {}        # nn_id -> slow exchanges left
+        self.delay_ticks: Dict[int, int] = {}   # nn_id -> ticks per exchange
         self.events: List[ChaosEvent] = []
         self._mu = threading.Lock()
         self._installed = False
@@ -199,6 +226,8 @@ class FaultInjector:
             nn.subtree.chaos = None
         self.cluster.election.chaos = None
         self.partitioned.clear()
+        self.slowed.clear()
+        self.delay_ticks.clear()
         self._installed = False
 
     def __enter__(self) -> "FaultInjector":
@@ -236,8 +265,14 @@ class FaultInjector:
         """One injection point fired on namenode ``nn_id``.  Raises the
         injected error (StoreError for a crash — tagged ``chaos_crash`` so
         a crashed namenode's cleanup handlers know NOT to run —
-        NetworkPartition for a refused exchange) or returns normally."""
+        NetworkPartition for a refused exchange) or returns normally.
+        A DELAY fault raises nothing: the exchange proceeds, but first
+        the shared logical clock advances ``delay_ticks`` — the victim
+        is limping, so everyone else's leases, deadlines, and election
+        staleness age while it works (gray failure, not clean death)."""
         fsite = FaultSite(site)
+        advance = 0
+        err: Optional[Exception] = None
         with self._mu:
             n = self.counts[fsite]
             self.counts[fsite] = n + 1
@@ -252,23 +287,57 @@ class FaultInjector:
                     self.partitioned[nn_id] = left
                     self.events.append(ChaosEvent(fsite, n, nn_id,
                                                   PARTITION, "refused"))
-                raise NetworkPartition(
+                err = NetworkPartition(
                     f"client partitioned from namenode {nn_id}")
-            fault = self._match(fsite, n, nn_id)
-            if fault is None:
-                return
-            self.pending.remove(fault)
-            if fault.kind == PARTITION:
-                self.partitioned[nn_id] = fault.heal_after
-                self.events.append(ChaosEvent(fsite, n, nn_id, PARTITION,
-                                              "partitioned"))
-                raise NetworkPartition(
-                    f"client partitioned from namenode {nn_id}")
-            if self._kill(fsite, n, nn_id, fault):
-                e = StoreError(f"chaos: namenode {nn_id} crashed at "
-                               f"{fsite.value}#{n}")
-                e.chaos_crash = True     # crashed NNs run no cleanup
-                raise e
+            # an active slowdown burns clock on every exchange
+            if err is None and nn_id in self.slowed:
+                advance = self.delay_ticks.get(nn_id, 1)
+                left = self.slowed[nn_id] - 1
+                if left <= 0:
+                    del self.slowed[nn_id]
+                    self.delay_ticks.pop(nn_id, None)
+                    self.events.append(ChaosEvent(fsite, n, nn_id,
+                                                  DELAY, "delay-healed"))
+                else:
+                    self.slowed[nn_id] = left
+                    self.events.append(ChaosEvent(fsite, n, nn_id,
+                                                  DELAY, "delayed"))
+            if err is None:
+                fault = self._match(fsite, n, nn_id)
+                if fault is not None:
+                    self.pending.remove(fault)
+                    if fault.kind == PARTITION:
+                        self.partitioned[nn_id] = fault.heal_after
+                        self.events.append(ChaosEvent(fsite, n, nn_id,
+                                                      PARTITION,
+                                                      "partitioned"))
+                        err = NetworkPartition(
+                            f"client partitioned from namenode {nn_id}")
+                    elif fault.kind == DELAY:
+                        self.slowed[nn_id] = fault.heal_after
+                        self.delay_ticks[nn_id] = fault.delay_ticks
+                        advance += fault.delay_ticks
+                        self.events.append(ChaosEvent(fsite, n, nn_id,
+                                                      DELAY, "slowed"))
+                    elif self._kill(fsite, n, nn_id, fault):
+                        e = StoreError(f"chaos: namenode {nn_id} crashed "
+                                       f"at {fsite.value}#{n}")
+                        e.chaos_crash = True  # crashed NNs run no cleanup
+                        err = e
+        # clock advancement OUTSIDE the injector lock: tick() heartbeats
+        # the fleet, which re-enters allow_heartbeat (and thus _mu)
+        if advance:
+            self._advance_clock(advance)
+        if err is not None:
+            raise err
+
+    def _advance_clock(self, ticks: int) -> None:
+        """Model the wall-clock time a gray-slow exchange burns: advance
+        the SHARED logical clock via full heartbeat rounds, so live
+        namenodes stay live (only time passes — nobody is falsely
+        declared dead) while leases age and deadlines approach."""
+        for _ in range(ticks):
+            self.cluster.tick()
 
     def allow_heartbeat(self, nn_id: int) -> bool:
         """HEARTBEAT-site twin of :meth:`fire`: returning False suppresses
@@ -286,11 +355,13 @@ class FaultInjector:
     def heal_all(self) -> None:
         with self._mu:
             self.partitioned.clear()
+            self.slowed.clear()
+            self.delay_ticks.clear()
 
     @property
     def injected(self) -> List[ChaosEvent]:
         return [e for e in self.events
-                if e.action in ("killed", "partitioned")]
+                if e.action in ("killed", "partitioned", "slowed")]
 
 
 # ---------------------------------------------------------------------------
@@ -411,7 +482,12 @@ class RecoveryInvariants:
 #: transport/abort failures, NOT genuine FS outcomes (FileNotFound, ...)
 RETRYABLE_ERRORS = frozenset({
     "StoreError", "NetworkPartition", "LockTimeout", "TransactionAborted",
-    "SubtreeLockedError"})
+    "SubtreeLockedError",
+    # admission sheds (repro.core.admission): the op itself is valid —
+    # only its timing budget or a pressure policy refused it, so the
+    # recovery protocol re-drives it once the fault/pressure cleared
+    # (required for namespace equality when MUTATIONS are shed)
+    "DeadlineExpired", "OverloadShed"})
 
 
 @dataclass

@@ -21,10 +21,13 @@ methods are typed sugar over it.
 """
 from __future__ import annotations
 
+import random
+import time
 from dataclasses import dataclass
 from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
                     Type)
 
+from .admission import DeadlineExpired, OverloadShed
 from .fs import (FSError, FileAlreadyExists, FileNotFound, LeaseConflict,
                  OpResult, SubtreeLockedError)
 from .hint_cache import InodeHintCache, absorb_response
@@ -97,7 +100,8 @@ ERROR_TYPES: Dict[str, Type[Exception]] = {
     cls.__name__: cls
     for cls in (FSError, FileNotFound, FileAlreadyExists, LeaseConflict,
                 SubtreeLockedError, StoreError, LockTimeout, NodeGroupDown,
-                TransactionAborted, RowNotFound, NetworkPartition)
+                TransactionAborted, RowNotFound, NetworkPartition,
+                DeadlineExpired, OverloadShed)
 }
 
 
@@ -124,18 +128,43 @@ class DFSClient:
                  seed: int = 0, subtree_retries: int = 8,
                  subtree_backoff: float = 0.002,
                  failover_attempts: int = 8,
-                 middleware: Optional[Sequence[Middleware]] = None):
+                 middleware: Optional[Sequence[Middleware]] = None,
+                 retry_budget: Any = None, breakers: Any = None,
+                 sleep: Callable[[float], None] = time.sleep):
         self.cluster = cluster
-        self._selector = Client(cluster, policy=policy, seed=seed)
+        self._selector = Client(cluster, policy=policy, seed=seed,
+                                board=breakers)
         self.failover_attempts = failover_attempts
+        #: shared token-bucket retry budget (admission.RetryBudget) every
+        #: retrying middleware of this client draws from; refilled once
+        #: per logical call (``note_call`` in :meth:`call`)
+        self.retry_budget = retry_budget
+        #: per-namenode circuit breakers (admission.BreakerBoard): the
+        #: selector routes around open breakers, and a breaker-recording
+        #: middleware wraps every attempt
+        self.breakers = breakers
         if middleware is None:
+            # deterministic per-client jitter: seeded, so replays
+            # reproduce while concurrent clients still de-synchronize
+            jitter = random.Random(seed ^ 0x5EED)
             middleware = [
                 failover(attempts=failover_attempts,
-                         on_failover=self._reset_sticky),
+                         on_failover=self._reset_sticky,
+                         sleep=sleep, jitter=jitter,
+                         budget=retry_budget),
                 subtree_retry(retries=subtree_retries,
-                              backoff=subtree_backoff),
-                txn_retry(),     # §7.5: timed-out txns aborted, re-run
+                              backoff=subtree_backoff, sleep=sleep,
+                              budget=retry_budget),
+                txn_retry(sleep=sleep, jitter=jitter,
+                          budget=retry_budget),
+                # §7.5: timed-out txns aborted, re-run
             ]
+            if breakers is not None:
+                from .admission import circuit_breaker
+                # inside failover, outside the per-error retries: every
+                # failover attempt records on the breaker of the
+                # namenode that served it
+                middleware.insert(1, circuit_breaker(breakers))
         self.middleware: List[Middleware] = list(middleware)
         self._handler: Handler = compose(self.middleware, self._terminal)
         self.retries = 0
@@ -191,8 +220,13 @@ class DFSClient:
         if op not in REGISTRY:
             raise KeyError(f"unknown op {op!r}; registered: "
                            f"{sorted(REGISTRY.names())}")
-        wop = WorkloadOp(op, path, path2, args=args)
-        ctx = CallContext(op=op, wop=wop)
+        deadline = args.pop("deadline", None)
+        tenant = args.pop("tenant", None)
+        wop = WorkloadOp(op, path, path2, args=args,
+                         deadline=deadline, tenant=tenant)
+        ctx = CallContext(op=op, wop=wop, deadline=deadline)
+        if self.retry_budget is not None:
+            self.retry_budget.note_call()
         try:
             res = self._handler(ctx)
             self._absorb(wop, res)
@@ -291,6 +325,15 @@ class DFSClient:
         lease recovery does not reclaim its files under construction."""
         self.call("renew_lease", client=client)
 
+    def recover_lease(self, path: str, *, client: str = "client") -> bool:
+        """HDFS ``recoverLease``: force recovery of ``path``'s lease for a
+        new writer once the holder outlived the SOFT lease limit, instead
+        of waiting for the leader's hard-limit sweep. Returns True when a
+        lease was recovered, False when there was nothing to recover; a
+        holder still inside the soft limit raises
+        :class:`~repro.core.fs.LeaseConflict`."""
+        return bool(self.call("recover_lease", path, client=client).value)
+
     def truncate(self, path: str, new_size: int = 0) -> TruncateSummary:
         v = self.call("truncate", path, new_size=new_size).value
         return TruncateSummary(path, v["size"], v["removed_blocks"])
@@ -315,7 +358,8 @@ class DFSClient:
                   concurrent: bool = False, planned: bool = False,
                   window: Optional[int] = None,
                   adaptive: bool = True,
-                  hint_routing: Optional[bool] = None) -> PipelineStats:
+                  hint_routing: Optional[bool] = None,
+                  admission: Any = None) -> PipelineStats:
         """Replay a trace through the batched request pipeline over this
         client's cluster (the Fig 7 methodology). ``planned=True`` routes
         through the client-side columnar batch planner
@@ -337,7 +381,9 @@ class DFSClient:
                                           client_cache=self.hint_cache,
                                           adaptive=adaptive,
                                           pool=self.pool,
-                                          hint_routing=hint_routing).run(
+                                          hint_routing=hint_routing,
+                                          admission=admission,
+                                          breakers=self.breakers).run(
                                               wops)
         return RequestPipeline(self.cluster, batch_size=batch_size,
                                concurrent=concurrent).run(wops)

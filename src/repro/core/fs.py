@@ -83,6 +83,11 @@ class OpResult:
     value: Any
     cost: OpCost
     hints: Tuple[Tuple[int, str, int], ...] = ()
+    #: election-clock tick at which the serving namenode finished the op
+    #: (stamped by the RPC layer, ``Namenode._finish_op`` /
+    #: ``_commit_group``) — the admission layer's goodput measure is
+    #: ``completed_at <= WorkloadOp.deadline``. None outside a namenode.
+    completed_at: Optional[int] = None
 
 
 @dataclass
@@ -154,7 +159,8 @@ class HopsFSOps:
                  adp: bool = True,
                  is_nn_alive: Optional[Callable[[int], bool]] = None,
                  lease_now: Optional[Callable[[], int]] = None,
-                 lease_limit: int = 3):
+                 lease_limit: int = 3,
+                 lease_soft_limit: Optional[int] = None):
         self.store = store
         self.nn_id = namenode_id
         self.cache: Optional[InodeHintCache] = (
@@ -174,6 +180,12 @@ class HopsFSOps:
         # (constant 0) never expires leases, keeping single-NN tests inert.
         self._lease_now = lease_now or (lambda: 0)
         self.lease_limit = lease_limit
+        # HDFS recoverLease semantics: past the SOFT limit a NEW writer
+        # may force takeover (append / recover_lease); only past the HARD
+        # limit (lease_limit) does the leader's sweep reclaim. Defaults to
+        # the hard limit, i.e. no takeover window, the pre-soft behaviour.
+        self.lease_soft_limit = (lease_limit if lease_soft_limit is None
+                                 else min(lease_soft_limit, lease_limit))
 
     # ------------------------------------------------------------------
     # transaction / lock-phase helpers
@@ -246,6 +258,16 @@ class HopsFSOps:
                 and self._lease_now() - row.get("last_renewed", 0)
                 <= self.lease_limit)
 
+    def _lease_live_soft(self, row: Optional[Dict[str, Any]]) -> bool:
+        """Soft-limit liveness: within ``lease_soft_limit`` ticks the
+        holder is protected even from takeover ops; between the soft and
+        hard limits a NEW writer may force recovery (append's takeover,
+        :meth:`recover_lease`) while the leader's sweep still waits for
+        the hard limit — HDFS's soft/hard lease split."""
+        return (row is not None
+                and self._lease_now() - row.get("last_renewed", 0)
+                <= self.lease_soft_limit)
+
     def _check_lease(self, txn: Transaction, target: Dict[str, Any],
                      client: str, path: str, *,
                      takeover: bool = False) -> None:
@@ -261,7 +283,8 @@ class HopsFSOps:
         holder = target.get("client")
         if not target.get("under_construction") or holder in (None, client):
             return
-        if not takeover or self._lease_live(txn.peek("lease", (holder,))):
+        if not takeover \
+                or self._lease_live_soft(txn.peek("lease", (holder,))):
             raise LeaseConflict(f"{path}: lease held by {holder!r}")
 
     def renew_lease(self, *, client: str = "client") -> OpResult:
@@ -379,9 +402,11 @@ class HopsFSOps:
         """Client-initiated lease recovery (the HDFS ``recoverLease`` RPC):
         a NEW writer forces recovery of ``path``'s expired lease instead
         of waiting for the leader's sweep.  Admission mirrors ``append``'s
-        takeover rule — the holder's lease must have outlived the soft
-        limit (``lease_limit`` liveness ticks without renewal); a live
-        holder raises :class:`LeaseConflict`.  Lock order matches every
+        takeover rule — the holder's lease must have outlived the SOFT
+        limit (``lease_soft_limit`` liveness ticks without renewal, which
+        may be shorter than the hard ``lease_limit`` the leader's sweep
+        honours); a holder inside the soft limit raises
+        :class:`LeaseConflict`.  Lock order matches every
         other writer (inode first, the holder's lease row LAST), so the
         under-lock liveness re-check serializes against the holder's own
         piggybacked renewals exactly like ``lease_recover``.  Returns True
@@ -411,7 +436,7 @@ class HopsFSOps:
             # holder's lease row X-locked LAST: the soft-limit check runs
             # under the lock, so a concurrent renewal wins cleanly
             row = txn.read("lease", (holder,), EXCLUSIVE)
-            if self._lease_live(row):
+            if self._lease_live_soft(row):
                 cost = txn.cost.copy()
                 txn.abort()
                 raise LeaseConflict(

@@ -15,9 +15,18 @@ context; middleware around it decide whether an exception is retryable.
 ``DFSClient`` accepts a custom middleware stack, so policies (more
 aggressive backoff, circuit breaking, tracing) compose without touching
 the namenode or the registry.
-"""
+
+Overload protection (docs/ROBUSTNESS.md): every retrying middleware here
+takes an injectable ``sleep`` (tests pass a fake clock — no wall-clock
+sleeps), an optional ``jitter`` RNG that de-synchronizes backoff so
+simultaneous aborters do not re-collide in lockstep (a retry herd), and
+an optional shared ``budget`` (:class:`~repro.core.admission.RetryBudget`)
+— a token bucket ALL retry middleware on a client draw from, so the
+fleet-wide retry rate is bounded by a fraction of the call rate instead
+of multiplying per-middleware attempt counters."""
 from __future__ import annotations
 
+import random
 import time
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
@@ -36,6 +45,10 @@ class CallContext:
     namenode: Any = None        # namenode used by the LAST attempt
     attempts: int = 0
     retries: int = 0            # subtree-abort + failover retries
+    #: latest election-clock tick by which the call must complete (copied
+    #: from ``wop.deadline`` by DFSClient); admission-aware namenodes shed
+    #: the op once the clock passes it instead of executing stale work
+    deadline: Optional[int] = None
 
 
 Handler = Callable[[CallContext], Any]
@@ -50,11 +63,29 @@ def compose(middleware: Sequence[Middleware], terminal: Handler) -> Handler:
     return h
 
 
+def _jittered(base: float, jitter: Optional[random.Random]) -> float:
+    """Equal-jitter: half the nominal backoff deterministic, half random —
+    concurrent retriers spread over [base/2, base) instead of re-colliding
+    at exactly ``base`` (the classic synchronized retry herd)."""
+    if jitter is None:
+        return base
+    return base * (0.5 + 0.5 * jitter.random())
+
+
+def _spend(budget: Any, last: Exception) -> None:
+    """Gate one retry on the shared token bucket: an exhausted budget
+    surfaces the LAST error immediately instead of amplifying load."""
+    if budget is not None and not budget.try_spend():
+        raise last
+
+
 def subtree_retry(retries: int = 8, backoff: float = 0.002,
-                  sleep: Callable[[float], None] = time.sleep) -> Middleware:
+                  sleep: Callable[[float], None] = time.sleep,
+                  budget: Any = None) -> Middleware:
     """Ops that hit a live subtree lock voluntarily aborted (§6.3); retry
     them with linear backoff exactly as the HopsFS client does, surfacing
-    :class:`SubtreeLockedError` only once the budget is exhausted."""
+    :class:`SubtreeLockedError` once the attempt count — or the shared
+    retry ``budget`` — is exhausted."""
     def mw(nxt: Handler) -> Handler:
         def handler(ctx: CallContext) -> Any:
             last: Optional[Exception] = None
@@ -63,6 +94,8 @@ def subtree_retry(retries: int = 8, backoff: float = 0.002,
                     return nxt(ctx)
                 except SubtreeLockedError as e:
                     last = e
+                    if attempt < max(1, retries) - 1:
+                        _spend(budget, e)
                     ctx.retries += 1
                     if backoff:
                         sleep(backoff * (attempt + 1))
@@ -72,7 +105,9 @@ def subtree_retry(retries: int = 8, backoff: float = 0.002,
 
 
 def txn_retry(retries: int = 3, backoff: float = 0.005,
-              sleep: Callable[[float], None] = time.sleep) -> Middleware:
+              sleep: Callable[[float], None] = time.sleep,
+              budget: Any = None,
+              jitter: Optional[random.Random] = None) -> Middleware:
     """Paper §7.5: transactions that hit the NDB inactive timeout (or were
     aborted by the engine) are automatically retried — the timed-out
     transaction aborted atomically, so re-running the op is safe and is
@@ -100,9 +135,11 @@ def txn_retry(retries: int = 3, backoff: float = 0.005,
                     if spec is not None and spec.subtree:
                         raise               # multi-txn op: not re-runnable
                     last = e
+                    if attempt < attempts - 1:
+                        _spend(budget, e)
                     ctx.retries += 1
                     if backoff and attempt < attempts - 1:
-                        sleep(backoff * (2 ** attempt))
+                        sleep(_jittered(backoff * (2 ** attempt), jitter))
             raise last  # type: ignore[misc]
         return handler
     return mw
@@ -134,19 +171,29 @@ def membership_refresh(pool: Any,
 
 
 def failover(attempts: int = 8,
-             on_failover: Optional[Callable[[CallContext], None]] = None
-             ) -> Middleware:
+             on_failover: Optional[Callable[[CallContext], None]] = None,
+             *, backoff: float = 0.0,
+             sleep: Callable[[float], None] = time.sleep,
+             jitter: Optional[random.Random] = None,
+             budget: Any = None) -> Middleware:
     """Transparent namenode failover (§7.6.1): a :class:`StoreError` from a
     namenode that is now DEAD means the op was in flight when it died —
     retry elsewhere. A :class:`NetworkPartition` is retried even though
     the namenode is alive: to the client an unreachable namenode and a
     dead one are the same thing, and nothing executed on the other side.
     Errors from a live, reachable namenode are genuine outcomes
-    (FileNotFound, quota, ...) and propagate unchanged."""
+    (FileNotFound, quota, ...) and propagate unchanged.
+
+    ``backoff`` (default 0 — failover itself is immediate, the dead
+    namenode will not get better) enables exponential, jittered waits
+    between attempts for deployments where partitions heal with time;
+    the shared ``budget`` bounds how many failover retries the client
+    may spend fleet-wide."""
     def mw(nxt: Handler) -> Handler:
         def handler(ctx: CallContext) -> Any:
             last: Optional[Exception] = None
-            for _ in range(max(1, attempts)):
+            n = max(1, attempts)
+            for attempt in range(n):
                 try:
                     return nxt(ctx)
                 except SubtreeLockedError:
@@ -156,10 +203,15 @@ def failover(attempts: int = 8,
                     if isinstance(e, NetworkPartition) or (
                             nn is not None
                             and not getattr(nn, "alive", True)):
-                        ctx.retries += 1
                         last = e
+                        if attempt < n - 1:
+                            _spend(budget, e)
+                        ctx.retries += 1
                         if on_failover is not None:
                             on_failover(ctx)
+                        if backoff and attempt < n - 1:
+                            sleep(_jittered(backoff * (2 ** attempt),
+                                            jitter))
                         continue
                     raise
             raise last  # type: ignore[misc]

@@ -175,6 +175,11 @@ class Namenode:
         #: (execute_batch), "group_txn_pre_lock"/"group_txn_post_lock"
         #: (_write_group_txn) — see docs/CHAOS.md
         self.chaos: Optional[Any] = None
+        #: admission-control hook (admission.AdmissionController.install);
+        #: None = admit everything. Consulted AFTER the chaos site fires
+        #: (a gray-slow exchange ages the clock first, THEN stale work is
+        #: shed) — see docs/ROBUSTNESS.md
+        self.admission: Optional[Any] = None
         self._in_batch = False   # suppress the rpc site for internal invokes
         self.ops_served = 0
         self.agg_cost = OpCost()     # committed-txn cost served by this NN
@@ -264,6 +269,9 @@ class Namenode:
             self.store.record_hint_invalidation(
                 list(paths) + [str(s) for s in kw.get("srcs", ()) or ()])
         res.hints = self._piggyback_hints(paths) + self.store.hint_piggyback()
+        # goodput stamp: the election-clock tick this op finished at —
+        # compared against WorkloadOp.deadline by the admission layer
+        res.completed_at = self.election.now
         if spec is not None and spec.has_client_arg \
                 and not spec.renews_lease and "client" in kw:
             # skipped for renews_lease ops: their handler already stamped
@@ -293,6 +301,12 @@ class Namenode:
             raise StoreError(f"namenode {self.nn_id} is down")
         if self.chaos is not None and not self._in_batch:
             self.chaos.fire("rpc", self.nn_id)
+        if self.admission is not None:
+            # sequential-path admission: shed work already past its
+            # deadline. Inside a batch this is a RE-check (the batch was
+            # admitted as a whole, but a mid-batch group txn may have
+            # burned clock) — record=False avoids double accounting
+            self.admission.check_op(wop, record=not self._in_batch)
         spec = REGISTRY[wop.op]
         paths, kw = spec.call_args(wop)
         res = spec.resolve(self)(*paths, **kw)
@@ -354,7 +368,23 @@ class Namenode:
         # must not fire again for internal invokes
         self._in_batch = True
         try:
-            return self._execute_batch_inner(wops, hints)
+            if self.admission is None:
+                return self._execute_batch_inner(wops, hints)
+            # batch admission AFTER the exchange's chaos site: a gray-slow
+            # exchange ages the clock first, so work that expired while
+            # this namenode limped is shed here instead of executed
+            decisions = self.admission.admit_batch(wops)
+            results: List[Optional[OpOutcome]] = [
+                None if d is None else OpOutcome(None, d, batched=True)
+                for d in decisions]
+            keep = [i for i, d in enumerate(decisions) if d is None]
+            if keep:
+                sub = [wops[i] for i in keep]
+                subh = ([hints[i] for i in keep]
+                        if hints is not None else None)
+                for i, oc in zip(keep, self._execute_batch_inner(sub, subh)):
+                    results[i] = oc
+            return results  # type: ignore[return-value]
         finally:
             self._in_batch = False
 
@@ -469,8 +499,10 @@ class Namenode:
                 if first_done:
                     cost.merge(unattributed)
                     first_done = False
-                results[idx] = OpOutcome(OpResult(values[idx], cost),
-                                         batched=True)
+                results[idx] = OpOutcome(
+                    OpResult(values[idx], cost,
+                             completed_at=self.election.now),
+                    batched=True)
                 served.merge(cost)
                 self.ops_served += 1
                 self.batched_ops += 1
@@ -895,7 +927,7 @@ class Client:
     ``DFSClient`` facade uses."""
 
     def __init__(self, cluster: NamenodeCluster, policy: str = "sticky",
-                 seed: int = 0):
+                 seed: int = 0, board: Any = None):
         assert policy in ("random", "round_robin", "sticky")
         self.cluster = cluster
         self.policy = policy
@@ -903,6 +935,10 @@ class Client:
         self._rr = self.rng.randrange(1 << 16)
         self._sticky: Optional[int] = None
         self.retries = 0
+        #: optional admission.BreakerBoard — selection avoids namenodes
+        #: whose circuit breaker is open (unless every breaker is open,
+        #: in which case routing proceeds and the breakers re-probe)
+        self.board = board
 
         def _on_failover(ctx: CallContext) -> None:
             self._sticky = None
@@ -914,6 +950,12 @@ class Client:
         alive = self.cluster.alive_namenodes()
         if not alive:
             raise StoreError("no alive namenodes")
+        if self.board is not None:
+            # breaker-aware: don't route at a tripped namenode; if the
+            # whole fleet tripped, fall through (half-open probes heal)
+            routable = [nn for nn in alive
+                        if self.board.routable(nn.nn_id)]
+            alive = routable or alive
         if self.policy == "random":
             return self.rng.choice(alive)
         if self.policy == "round_robin":
@@ -921,8 +963,10 @@ class Client:
             self._rr += 1
             return nn
         # sticky: stay with one namenode (better hint-cache locality §5.1.1)
-        if self._sticky is None or not self.cluster.namenodes[
-                self._sticky].alive:
+        if self._sticky is not None and not any(
+                nn.nn_id == self._sticky for nn in alive):
+            self._sticky = None          # dead OR breaker-open: re-pick
+        if self._sticky is None:
             self._sticky = self.rng.choice(alive).nn_id
         return self.cluster.namenodes[self._sticky]
 

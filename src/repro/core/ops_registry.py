@@ -51,6 +51,12 @@ class WorkloadOp:
     path2: Optional[str] = None
     on_dir: bool = False
     args: Dict[str, Any] = field(default_factory=dict)
+    #: admission-control metadata (repro.core.admission): the latest
+    #: election-clock tick by which this op must COMPLETE (None = no
+    #: deadline — never shed), and the billing tenant the weighted
+    #: fair queue accounts it to (None = the anonymous tenant).
+    deadline: Optional[int] = None
+    tenant: Optional[str] = None
 
 
 @dataclass(frozen=True)

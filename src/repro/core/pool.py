@@ -56,7 +56,7 @@ the ``membership_refresh`` middleware uses this to rebalance
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Optional
+from typing import Any, Callable, List, Optional
 
 from .hint_cache import InodeHintCache
 from .namenode import Namenode, NamenodeCluster
@@ -99,12 +99,17 @@ class ElasticNamenodePool:
                  low_load: float = 16.0,
                  hysteresis: int = 2,
                  cooldown: int = 2,
-                 prewarm_limit: int = 4096):
+                 prewarm_limit: int = 4096,
+                 breakers: Any = None):
         if min_namenodes < 1:
             raise ValueError("min_namenodes must be >= 1")
         if low_load >= high_load:
             raise ValueError("low_load must be < high_load")
         self.cluster = cluster
+        #: optional admission.BreakerBoard — scale-in prefers retiring a
+        #: namenode whose breaker is OPEN (the fleet sheds its gray-slow
+        #: member first instead of a healthy late joiner)
+        self.breakers = breakers
         self.min_namenodes = min_namenodes
         self.max_namenodes = max_namenodes
         self.high_load = high_load
@@ -240,11 +245,20 @@ class ElasticNamenodePool:
     def _pick_victim(self) -> Optional[Namenode]:
         """Highest-id alive non-leader — late joiners retire first, and
         the leader never retires itself (its housekeeping must run the
-        same tick to reclaim the victim's leases)."""
+        same tick to reclaim the victim's leases). With a breaker board
+        attached, an OPEN-breaker namenode is preferred: shrinking the
+        fleet should shed its gray-slow member, not a healthy one."""
         leader = self.cluster.election.leader()
         cands = [nn for nn in self.cluster.alive_namenodes()
                  if nn.nn_id != leader]
-        return max(cands, key=lambda nn: nn.nn_id) if cands else None
+        if not cands:
+            return None
+        if self.breakers is not None:
+            tripped = [nn for nn in cands
+                       if self.breakers.is_open(nn.nn_id)]
+            if tripped:
+                return max(tripped, key=lambda nn: nn.nn_id)
+        return max(cands, key=lambda nn: nn.nn_id)
 
     def _record(self, action: str, nn_id: int, reason: str,
                 moved: int) -> ScaleEvent:

@@ -260,6 +260,30 @@ def make_phased_trace(ns: SyntheticNamespace, phase_ops: Sequence[int], *,
     return trace, boundaries
 
 
+def make_zipf_tenant_trace(ns: SyntheticNamespace, n_ops: int, *,
+                           n_tenants: int = 8,
+                           s: float = 1.1,
+                           seed: int = 23,
+                           mix: Sequence[Tuple[str, float, float]]
+                           = SPOTIFY_TRACE_MIX) -> List[WorkloadOp]:
+    """Spotify-style trace with each op tagged by a Zipf(s)-weighted tenant
+    identity (``WorkloadOp.tenant``). Tenant ``t0`` is the hot client,
+    ``t{n-1}`` the coldest — at the paper-realistic skew s≈1.1, t0 issues
+    roughly 1/(1)^s : 1/(2)^s : ... of the traffic. The overload bench and
+    the admission-controller tests use this shape to show weighted fair
+    queueing keeps the hot tenant from starving the cold ones. Tenants are
+    billing identities only: lease-holding ops still run under the single
+    default ``client``, so clock advancement mid-replay cannot strand a
+    lease held by a tenant that never returns."""
+    rng = random.Random(seed ^ 0x7E4A47)
+    tenants = [f"t{k}" for k in range(max(1, n_tenants))]
+    weights = [1.0 / (k + 1) ** s for k in range(len(tenants))]
+    trace = make_spotify_trace(ns, n_ops, seed=seed, mix=mix)
+    for wop in trace:
+        wop.tenant = rng.choices(tenants, weights=weights, k=1)[0]
+    return trace
+
+
 def make_block_contention_trace(path: str, n_rounds: int, *,
                                 clients: Sequence[str] = ("c1", "c2"),
                                 block_size: int = 1 << 20

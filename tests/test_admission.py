@@ -1,0 +1,462 @@
+"""Overload-hardened request path (ISSUE 8).
+
+Contract, layer by layer:
+
+  1. **deadlines** ride :class:`WorkloadOp` on the election's logical
+     clock: namenodes shed expired work (``DeadlineExpired``) instead of
+     executing it, the planner never deals an op that cannot make its
+     deadline, and every committed :class:`OpResult` carries the
+     ``completed_at`` tick goodput is judged by;
+  2. **weighted fair queueing** at namenode admission sheds, under queue
+     pressure, hot-tenant reads first and lease-holding mutations never —
+     a Zipf-hot tenant cannot starve cold ones;
+  3. **retry budgets** bound fleet-wide retries to ~``refill_rate`` of
+     the call rate across ALL middleware sharing the bucket, and every
+     backoff sleep is injectable + equal-jittered (deterministic per
+     seed);
+  4. **circuit breakers** (closed → open → half-open probes) trip on
+     transport-class failures only and steer the planner, the client
+     selector, and the elastic pool's victim choice;
+  5. **soft-limit lease takeover**: between the soft and hard lease
+     limits a new writer may force recovery while the leader's sweep
+     still waits for the hard limit;
+  6. the gray-failure **overload bench** (one DELAY-slow namenode, Zipf
+     tenants): protection must beat the naive pipeline on goodput and
+     per-tenant p99 with ZERO completions past deadline, and recovery
+     must land on the sequential oracle's namespace.
+"""
+import random
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from repro.core import (AdmissionController, BreakerBoard, CircuitBreaker,
+                        DFSClient, DeadlineExpired, ElasticNamenodePool,
+                        FileNotFound, LeaseConflict, NetworkPartition,
+                        PlannedRequestPipeline, RetryBudget, WorkloadOp,
+                        stamp_deadlines)
+from repro.core.middleware import CallContext, compose, failover, txn_retry
+from repro.core.namenode import Client
+from repro.core.store import LockTimeout
+from repro.core.workload import (NamespaceSpec, SyntheticNamespace,
+                                 make_zipf_tenant_trace)
+
+
+# ---------------------------------------------------------------------------
+# 1. deadline propagation on the election clock
+# ---------------------------------------------------------------------------
+
+def test_stamp_deadlines_and_zipf_tenants():
+    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=8, files_per_dir=3)
+    trace = make_zipf_tenant_trace(ns, 300, n_tenants=4, seed=3)
+    stamp_deadlines(trace, now=5, budget=10, per_op=0.5)
+    assert trace[0].deadline == 15
+    assert trace[-1].deadline == 15 + int(299 * 0.5)
+    assert all(a.deadline <= b.deadline
+               for a, b in zip(trace, trace[1:]))
+    counts = {}
+    for w in trace:
+        counts[w.tenant] = counts.get(w.tenant, 0) + 1
+    assert set(counts) == {"t0", "t1", "t2", "t3"}
+    # Zipf s=1.1: t0 is the hot tenant, t3 the coldest
+    assert counts["t0"] > counts["t3"]
+
+
+def test_invoke_sheds_expired_op(make_cluster):
+    store, cluster = make_cluster(1, dirs=("/w",), files=("/w/f",))
+    adm = AdmissionController(cluster.election).install(cluster)
+    nn = cluster.namenodes[0]
+    res = nn.invoke(WorkloadOp("read", "/w/f",
+                               deadline=cluster.election.now + 2))
+    assert res.completed_at == cluster.election.now
+    for _ in range(3):
+        cluster.tick()
+    with pytest.raises(DeadlineExpired):
+        nn.invoke(WorkloadOp("read", "/w/f",
+                             deadline=cluster.election.now - 1))
+    rep = adm.report()
+    assert rep["admitted"] == 1 and rep["shed_deadline"] == 1
+    adm.uninstall()
+    assert nn.admission is None
+    # uninstalled: deadlines are inert again (recovery re-drive path)
+    nn.invoke(WorkloadOp("read", "/w/f",
+                         deadline=cluster.election.now - 1))
+
+
+def test_batch_sheds_expired_and_stamps_completed_at(make_cluster):
+    store, cluster = make_cluster(1, dirs=("/w",), files=("/w/f",))
+    AdmissionController(cluster.election).install(cluster)
+    nn = cluster.namenodes[0]
+    now = cluster.election.now
+    wops = [WorkloadOp("read", "/w/f", deadline=now - 1),
+            WorkloadOp("read", "/w/f", deadline=now + 5),
+            WorkloadOp("mkdirs", "/w/d", deadline=now + 5),
+            WorkloadOp("read", "/w/f")]           # deadline-free
+    outs = nn.execute_batch(wops)
+    assert not outs[0].ok and outs[0].error == "DeadlineExpired"
+    assert outs[0].batched
+    for oc, wop in zip(outs[1:], wops[1:]):
+        assert oc.ok
+        assert oc.result.completed_at == cluster.election.now
+        assert (wop.deadline is None
+                or oc.result.completed_at <= wop.deadline)
+
+
+def test_planner_sheds_expired_before_dealing(make_cluster):
+    """Client-side deadline awareness: an op that can no longer make its
+    deadline is never dealt at all — no round trip, no namenode work."""
+    store, cluster, ns = make_cluster(2, namespace=True)
+    trace = make_zipf_tenant_trace(ns, 40, n_tenants=2, seed=3)
+    now = cluster.election.now
+    stamp_deadlines(trace, now=now, budget=1000)
+    for w in trace[:7]:
+        w.deadline = now - 1                      # expired at submission
+    served_before = sum(nn.ops_served for nn in cluster.namenodes)
+    pipe = PlannedRequestPipeline(cluster, batch_size=4, window=8,
+                                  adaptive=False)
+    stats = pipe.run(trace)
+    shed = [oc for oc in stats.outcomes
+            if not oc.ok and oc.error == "DeadlineExpired"]
+    assert len(shed) == 7
+    assert pipe.plan_report.deadline_shed == 7
+    served = sum(nn.ops_served for nn in cluster.namenodes) - served_before
+    assert served == len(trace) - 7               # shed ops cost nothing
+
+
+# ---------------------------------------------------------------------------
+# 2. weighted fair queueing + load shedding
+# ---------------------------------------------------------------------------
+
+def _warm(adm, tenant, n, op="read", path="/w/f"):
+    """Admit ``n`` pressure-free ops so ``tenant`` accumulates vtime."""
+    adm.observe_queue(0)
+    adm.admit_batch([WorkloadOp(op, path, tenant=tenant)
+                     for _ in range(n)])
+
+
+def test_pressure_sheds_hot_tenant_reads_first(make_cluster):
+    store, cluster = make_cluster(1)
+    adm = AdmissionController(cluster.election, queue_capacity=4)
+    _warm(adm, "hot", 9)
+    _warm(adm, "cold", 1)
+    # moderate pressure (not severe): ONLY over-share reads are sheddable
+    adm.observe_queue(6)
+    batch = ([WorkloadOp("read", "/w/f", tenant="hot")] * 4
+             + [WorkloadOp("mkdirs", "/w/d", tenant="hot")]
+             + [WorkloadOp("read", "/w/f", tenant="cold")] * 2)
+    decisions = adm.admit_batch(batch)
+    # max_shed = int((6-4)/6 * 7) = 2 — hot reads only, cold untouched
+    assert decisions[:4].count("OverloadShed") == 2
+    assert decisions[4] is None                   # mutation: not severe
+    assert decisions[5:] == [None, None]          # cold tenant never shed
+    assert adm.shed_pressure == 2
+
+
+def test_severe_pressure_sheds_non_lease_mutations_too(make_cluster):
+    store, cluster = make_cluster(1)
+    adm = AdmissionController(cluster.election, queue_capacity=4,
+                              severe_factor=2.0)
+    _warm(adm, "hot", 9)
+    _warm(adm, "cold", 1)
+    adm.observe_queue(100)                        # severe: 100 > 2*4
+    batch = ([WorkloadOp("read", "/w/f", tenant="hot")] * 2
+             + [WorkloadOp("mkdirs", "/w/d", tenant="hot")] * 2
+             + [WorkloadOp("create", "/w/n", tenant="hot",
+                           args={"client": "c1"})] * 2
+             + [WorkloadOp("read", "/w/f", tenant="cold")])
+    decisions = adm.admit_batch(batch)
+    assert decisions[:2] == ["OverloadShed"] * 2  # hot reads first
+    assert decisions[2:4] == ["OverloadShed"] * 2  # then hot mutations
+    # lease-holding mutations are NEVER pressure-shed
+    assert decisions[4:6] == [None, None]
+    assert decisions[6] is None                   # cold tenant never shed
+
+
+def test_hottest_tenant_sheds_before_warm_tenant(make_cluster):
+    store, cluster = make_cluster(1)
+    adm = AdmissionController(cluster.election, queue_capacity=4)
+    _warm(adm, "hottest", 12)
+    _warm(adm, "warm", 8)
+    _warm(adm, "cold", 1)
+    adm.observe_queue(7)          # max_shed = int(3/7 * 3) = 1
+    decisions = adm.admit_batch([
+        WorkloadOp("read", "/w/f", tenant="warm"),
+        WorkloadOp("read", "/w/f", tenant="hottest"),
+        WorkloadOp("read", "/w/f", tenant="cold")])
+    assert decisions == [None, "OverloadShed", None]
+
+
+def test_zipf_skew_cannot_starve_cold_tenants(make_cluster):
+    """The headline WFQ property: replay a Zipf s=1.1 tenant mix through
+    admission under sustained pressure — the hot tenant absorbs the
+    sheds, tenants at/below fair share are admitted untouched."""
+    store, cluster = make_cluster(1)
+    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=8, files_per_dir=3)
+    trace = make_zipf_tenant_trace(ns, 400, n_tenants=5, seed=11)
+    adm = AdmissionController(cluster.election, queue_capacity=8)
+    _warm(adm, "t0", 12)          # the hot tenant is already over share
+    adm.observe_queue(40)
+    for lo in range(0, len(trace), 16):
+        adm.admit_batch(trace[lo:lo + 16])
+    rep = adm.report()
+    t = rep["tenants"]
+    assert rep["shed_pressure"] > 0
+    # admitted work equalizes across tenants despite a ~5x arrival skew:
+    admitted = [t[f"t{k}"]["admitted"] for k in range(5)]
+    assert min(admitted) > 0.8 * max(admitted)
+    # ...while the shed burden lands on the hot tenants, monotonically
+    sheds = [t[f"t{k}"]["shed"] for k in range(5)]
+    assert sheds == sorted(sheds, reverse=True)
+    assert sheds[0] > 10 * max(1, sheds[-1])      # t0 absorbs the pain
+    # per-client and per-partition telemetry feed the bench report
+    assert sum(rep["clients"].values()) == rep["admitted"]
+    assert rep["hot_partitions"]
+
+
+# ---------------------------------------------------------------------------
+# 3. retry budgets + jittered, injectable backoff
+# ---------------------------------------------------------------------------
+
+def test_retry_budget_bucket_math():
+    rb = RetryBudget(capacity=2.0, refill_rate=0.5)
+    assert rb.try_spend() and rb.try_spend()
+    assert not rb.try_spend()
+    assert rb.denied == 1
+    rb.note_call()
+    rb.note_call()                # two calls deposit 1.0 token
+    assert rb.try_spend()
+    assert (rb.calls, rb.spent) == (2, 3)
+    for _ in range(100):
+        rb.note_call()            # deposits cap at capacity
+    assert rb.tokens <= rb.capacity
+
+
+def test_budget_caps_failover_retries():
+    rb = RetryBudget(capacity=2.0, refill_rate=0.0)
+    calls = [0]
+
+    def terminal(ctx):
+        calls[0] += 1
+        raise NetworkPartition("unreachable")
+
+    h = compose([failover(attempts=8, budget=rb)], terminal)
+    with pytest.raises(NetworkPartition):
+        h(CallContext(op="read"))
+    assert calls[0] == 3          # first attempt + 2 budgeted retries
+    assert (rb.spent, rb.denied) == (2, 1)
+
+
+def test_budget_is_shared_across_middleware_layers():
+    """One bucket, many retry loops: failover and txn_retry draw from the
+    same tokens, so their attempt counters cannot multiply."""
+    rb = RetryBudget(capacity=2.0, refill_rate=0.0)
+    calls = [0]
+
+    def terminal(ctx):
+        calls[0] += 1
+        raise LockTimeout("contended")
+
+    h = compose([failover(attempts=8, budget=rb),
+                 txn_retry(retries=5, backoff=0, budget=rb)], terminal)
+    with pytest.raises(LockTimeout):
+        h(CallContext(op="read"))
+    assert calls[0] == 3
+    assert (rb.spent, rb.denied) == (2, 1)
+
+
+def test_equal_jitter_is_bounded_and_deterministic():
+    def run(seed):
+        sleeps = []
+
+        def terminal(ctx):
+            raise NetworkPartition("unreachable")
+
+        h = compose([failover(attempts=4, backoff=0.01,
+                              jitter=random.Random(seed),
+                              sleep=sleeps.append)], terminal)
+        with pytest.raises(NetworkPartition):
+            h(CallContext(op="read"))
+        return sleeps
+
+    a = run(7)
+    assert len(a) == 3            # no sleep after the final attempt
+    for k, s in enumerate(a):
+        base = 0.01 * (2 ** k)    # equal jitter: [base/2, base)
+        assert 0.5 * base <= s < base
+    assert run(7) == a            # same seed, same replay
+    assert run(8) != a
+
+
+def test_txn_retry_backoff_uses_injected_sleep():
+    sleeps = []
+
+    def terminal(ctx):
+        raise LockTimeout("contended")
+
+    h = compose([txn_retry(retries=2, backoff=0.005,
+                           sleep=sleeps.append)], terminal)
+    with pytest.raises(LockTimeout):
+        h(CallContext(op="read"))
+    assert sleeps == [0.005, 0.01]    # exponential, no jitter when unset
+
+
+def test_dfs_client_wires_budget_and_deposits_per_call(make_cluster):
+    store, cluster = make_cluster(1, dirs=("/w",))
+    rb = RetryBudget()
+    dfs = DFSClient(cluster, retry_budget=rb, sleep=lambda s: None)
+    dfs.mkdirs("/w/x")
+    dfs.stat("/w/x")
+    assert rb.calls == 2 and rb.spent == 0
+
+
+# ---------------------------------------------------------------------------
+# 4. circuit breakers: state machine + routing integration
+# ---------------------------------------------------------------------------
+
+def test_circuit_breaker_state_machine():
+    clock = [0]
+    br = CircuitBreaker(failure_threshold=2, reset_after=5,
+                        now=lambda: clock[0])
+    assert br.routable() and br.state == "closed"
+    br.record_failure()
+    assert br.state == "closed"   # below threshold
+    br.record_failure()
+    assert br.state == "open" and br.trips == 1
+    assert br.is_open and not br.routable()
+    clock[0] = 5                  # reset_after elapsed on the clock
+    assert not br.is_open and br.state == "half_open"
+    assert br.routable()          # consumes the single probe slot
+    assert not br.routable()      # probe budget spent
+    br.record_failure()           # probe failed: reopen, fresh timer
+    assert br.state == "open" and br.trips == 2
+    clock[0] = 10
+    assert br.routable()          # half-open again
+    br.record_success()
+    assert br.state == "closed" and br.routable()
+
+
+def test_breaker_board_aggregates_per_namenode(make_cluster):
+    store, cluster = make_cluster(2)
+    board = BreakerBoard(cluster.election, failure_threshold=1)
+    board.record(1, ok=False)
+    assert board.is_open(1) and not board.is_open(0)
+    assert board.open_ids() == [1]
+    assert board.states() == {0: "closed", 1: "open"}
+    assert board.trips == 1
+    board.record(1, ok=True)
+    assert board.open_ids() == []
+
+
+def test_genuine_fs_outcomes_never_trip_breaker(make_cluster):
+    store, cluster = make_cluster(1)
+    board = BreakerBoard(cluster.election, failure_threshold=1)
+    dfs = DFSClient(cluster, breakers=board)
+    with pytest.raises(FileNotFound):
+        dfs.stat("/nope")
+    with pytest.raises(FileNotFound):
+        dfs.stat("/still/nope")
+    assert board.trips == 0 and board.states() == {0: "closed"}
+
+
+def test_planner_deals_around_open_breaker(make_cluster):
+    store, cluster, ns = make_cluster(3, namespace=True)
+    board = BreakerBoard(cluster.election, failure_threshold=1)
+    board.record(1, ok=False)                      # NN 1: tripped
+    trace = make_zipf_tenant_trace(ns, 48, n_tenants=2, seed=5)
+    pipe = PlannedRequestPipeline(cluster, batch_size=4, window=16,
+                                  adaptive=False, breakers=board)
+    stats = pipe.run(trace)
+    assert cluster.namenodes[1].batches_executed == 0
+    assert cluster.namenodes[0].batches_executed > 0
+    assert cluster.namenodes[2].batches_executed > 0
+    assert pipe.plan_report.breaker_rerouted > 0
+    assert stats.ok == len(trace)
+
+
+def test_client_pick_avoids_open_breaker(make_cluster):
+    store, cluster = make_cluster(3)
+    board = BreakerBoard(cluster.election, failure_threshold=1)
+    board.record(0, ok=False)
+    cli = Client(cluster, policy="random", seed=1, board=board)
+    assert all(cli._pick().nn_id != 0 for _ in range(20))
+    # whole fleet tripped: degrade to plain liveness, never strand a call
+    board.record(1, ok=False)
+    board.record(2, ok=False)
+    assert cli._pick() is not None
+
+
+def test_pool_scale_in_prefers_tripped_namenode(make_cluster):
+    store, cluster = make_cluster(3)
+    board = BreakerBoard(cluster.election, failure_threshold=1)
+    pool = ElasticNamenodePool(cluster, min_namenodes=1, breakers=board)
+    board.record(1, ok=False)
+    ev = pool.scale_in("test")
+    assert ev.nn_id == 1          # without the breaker it would retire 2
+    assert not cluster.namenodes[1].alive
+
+
+# ---------------------------------------------------------------------------
+# 5. soft-limit lease takeover (HDFS soft/hard lease split)
+# ---------------------------------------------------------------------------
+
+def test_soft_limit_defaults_and_clamping(make_cluster):
+    store, cluster = make_cluster(1)
+    ops = cluster.namenodes[0].ops
+    assert ops.lease_soft_limit == ops.lease_limit     # default: no window
+    store, cluster = make_cluster(1, lease_limit=4, lease_soft_limit=99)
+    assert cluster.namenodes[0].ops.lease_soft_limit == 4
+
+
+def test_soft_limit_takeover_window(make_cluster):
+    """soft < age <= hard: a NEW writer may force recovery or append-
+    takeover, while the leader's sweep still waits for the hard limit."""
+    store, cluster = make_cluster(1, dirs=("/w",), lease_limit=6,
+                                  lease_soft_limit=2)
+    nn = cluster.namenodes[0]
+    nn.ops.create("/w/f", client="c1")
+    nn.ops.create("/w/g", client="c1")
+    for _ in range(2):
+        cluster.tick()
+    # within the soft limit the holder is fully protected
+    with pytest.raises(LeaseConflict):
+        nn.ops.recover_lease("/w/f", client="c2")
+    with pytest.raises(LeaseConflict):
+        nn.ops.append_file("/w/g", client="c2")
+    for _ in range(2):
+        cluster.tick()            # age 4: soft(2) < 4 <= hard(6)
+    # the leader's sweep does NOT reclaim inside the hard limit...
+    assert cluster.recover_leases() == 0
+    assert store.table("lease").get(("c1",)) is not None
+    # ...but a new writer's takeover ops may
+    assert nn.ops.recover_lease("/w/f", client="c2").value is True
+    fid = nn.ops.append_file("/w/g", client="c2").value
+    assert fid > 0
+    assert store.table("lease").get(("c2",)) is not None
+    # append takeover re-leased /w/g to the new writer
+    [row] = store.table("inode").scan_all(lambda r: r["name"] == "g")
+    assert row["client"] == "c2" and row["under_construction"]
+
+
+# ---------------------------------------------------------------------------
+# 6. the gray-failure overload bench (miniature acceptance run)
+# ---------------------------------------------------------------------------
+
+def test_overload_bench_acceptance():
+    """ISSUE 8 acceptance: skewed trace + one DELAY-slow namenode. The
+    protected run beats the naive one on goodput and worst-tenant p99,
+    completes NOTHING past its deadline, and recovery converges on the
+    sequential oracle's namespace."""
+    from benchmarks.trace_replay import overload_report
+    r = overload_report(n_ops=320, batch_size=8, n_tenants=4)
+    u, p = r["unprotected"], r["protected"]
+    assert u["late_completions"] > 0              # the naive run suffers
+    assert p["late_completions"] == 0             # exact, not statistical
+    assert p["goodput_frac"] > u["goodput_frac"]
+    assert (p["worst_tenant_p99_ticks"] < u["worst_tenant_p99_ticks"])
+    assert r["breaker_trips"] >= 1
+    assert r["planner_breaker_rerouted"] > 0
+    assert r["admission"]["shed_deadline"] > 0
+    assert r["state_matches_sequential"] is True

@@ -32,7 +32,7 @@ from repro.core import (ChaosPlan, DFSClient, Fault, FaultInjector,
                         NetworkPartition, RecoveryInvariants, StoreError,
                         WorkloadOp, namespace_snapshot,
                         replay_with_recovery)
-from repro.core.chaos import CRASH, PARTITION, RETRYABLE_ERRORS
+from repro.core.chaos import CRASH, DELAY, PARTITION, RETRYABLE_ERRORS
 from repro.core.dfs_client import error_for
 from repro.core.middleware import (CallContext, compose, failover,
                                    txn_retry)
@@ -267,9 +267,13 @@ def test_network_partition_taxonomy():
     (FaultSite.RPC, PARTITION),
     (FaultSite.BATCH_EXCHANGE, CRASH),
     (FaultSite.BATCH_EXCHANGE, PARTITION),
+    (FaultSite.BATCH_EXCHANGE, DELAY),
     (FaultSite.GROUP_TXN_PRE_LOCK, CRASH),
     (FaultSite.GROUP_TXN_POST_LOCK, CRASH),
+    (FaultSite.GROUP_TXN_POST_LOCK, DELAY),
     (FaultSite.SUBTREE_CHUNK, CRASH),
+    (FaultSite.SUBTREE_CHUNK, DELAY),
+    (FaultSite.RPC, DELAY),
 ], ids=lambda v: getattr(v, "value", v))
 def test_fixed_seed_site_regression(make_cluster, oracle_replay, site,
                                     kind):
@@ -285,6 +289,68 @@ def test_fixed_seed_site_regression(make_cluster, oracle_replay, site,
     inj = FaultInjector(
         ChaosPlan((Fault(site, at=2, kind=kind, heal_after=2),)), cluster)
     rep = replay_with_recovery(cluster, trace, injector=inj, batch_size=8)
+    _assert_converged(store, cluster, rep, oracle)
+
+
+# ---------------------------------------------------------------------------
+# 4b. DELAY: gray failure — slow, not dead (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+def test_delay_fault_legality():
+    """DELAY lives on the request path: a slow heartbeat is just a missed
+    one (the election covers that), so HEARTBEAT refuses the kind; delays
+    must heal and must burn at least one tick."""
+    with pytest.raises(AssertionError):
+        Fault(FaultSite.HEARTBEAT, kind=DELAY)
+    with pytest.raises(AssertionError):
+        Fault(FaultSite.RPC, kind=DELAY, heal_after=0)
+    with pytest.raises(AssertionError):
+        Fault(FaultSite.RPC, kind=DELAY, delay_ticks=0)
+    for site in FaultSite:
+        if site is not FaultSite.HEARTBEAT:
+            Fault(site, kind=DELAY)
+
+
+def test_delay_fault_burns_clock_but_victim_survives(make_cluster):
+    """The gray-failure contract: a DELAY exchange raises nothing and the
+    victim keeps heartbeating — only the SHARED logical clock ages
+    (delay_ticks per slowed exchange), exactly what deadline shedding and
+    breaker timers key off."""
+    store, cluster = make_cluster(3, dirs=("/w",), files=("/w/f",))
+    victim = cluster.namenodes[1]
+    inj = FaultInjector(ChaosPlan((Fault(
+        FaultSite.BATCH_EXCHANGE, at=1, victim=1, kind=DELAY,
+        heal_after=2, delay_ticks=3),)), cluster)
+    t0 = cluster.election.now
+    with inj:
+        for _ in range(5):
+            outs = victim.execute_batch([WorkloadOp("read", "/w/f")] * 2)
+            assert all(oc.ok for oc in outs)
+    # exchange 0 clean (at=1); exchanges 1..3 burn 3 ticks each (match,
+    # then heal_after=2 slowed exchanges, the last of which heals)
+    assert cluster.election.now - t0 == 9
+    assert all(nn.alive for nn in cluster.namenodes)
+    assert cluster.election.leader() is not None
+    assert [e.action for e in inj.events] == [
+        "slowed", "delayed", "delay-healed"]
+    assert [e.kind for e in inj.injected] == [DELAY]
+
+
+def test_delay_composes_with_planned_pipeline(make_cluster, oracle_replay):
+    """A gray-slow namenode under the PLANNED pipeline (ISSUE 8): the
+    write-heavy trace converges to the fault-free oracle with conserved
+    costs even though the shared clock aged mid-replay."""
+    trace = _write_heavy_trace(160)
+    oracle, _ = oracle_replay(trace, namespace=True)
+    store, cluster, _ = make_cluster(3, namespace=True)
+    inj = FaultInjector(ChaosPlan((
+        Fault(FaultSite.BATCH_EXCHANGE, at=2, victim=1, kind=DELAY,
+              heal_after=4, delay_ticks=2),
+        Fault(FaultSite.RPC, at=6, kind=DELAY, heal_after=2),
+    )), cluster)
+    rep = replay_with_recovery(cluster, trace, injector=inj, batch_size=8,
+                               planned=True)
+    assert any(e.kind == DELAY for e in inj.injected)
     _assert_converged(store, cluster, rep, oracle)
 
 
@@ -457,7 +523,10 @@ def test_retryable_error_taxonomy_is_exact():
     already-deleted file would diverge from the oracle)."""
     assert RETRYABLE_ERRORS == {"StoreError", "NetworkPartition",
                                 "LockTimeout", "TransactionAborted",
-                                "SubtreeLockedError"}
+                                "SubtreeLockedError",
+                                # shed ops are valid work whose timing or
+                                # admission budget ran out — re-drivable
+                                "DeadlineExpired", "OverloadShed"}
     for genuine in ("FileNotFound", "FileAlreadyExists", "LeaseConflict",
                     "FSError"):
         assert genuine not in RETRYABLE_ERRORS
@@ -593,5 +662,22 @@ if HAVE_HYPOTHESIS:
         inj = FaultInjector(plan, cluster)
         rep = replay_with_recovery(cluster, _PROP_TRACE, injector=inj,
                                    batch_size=6)
+        assert rep.failed == 0
+        _assert_converged(store, cluster, rep, oracle)
+
+    @given(plan=fault_schedules(n_namenodes=3, max_at=12, max_faults=2,
+                                kinds=(CRASH, PARTITION, DELAY)))
+    def test_random_schedules_with_delay_converge_planned(plan):
+        """ISSUE 8: the full kind alphabet — crash, partition AND
+        gray-failure delay — composed with the PLANNED pipeline. The
+        clock may age arbitrarily mid-replay; recovery must still land
+        on the oracle namespace with conserved costs and no orphans."""
+        oracle = _prop_oracle()
+        store, cluster = _fresh(3)
+        for nn in cluster.namenodes:
+            nn.subtree.batch_size = 4
+        inj = FaultInjector(plan, cluster)
+        rep = replay_with_recovery(cluster, _PROP_TRACE, injector=inj,
+                                   batch_size=6, planned=True)
         assert rep.failed == 0
         _assert_converged(store, cluster, rep, oracle)
