@@ -2,7 +2,7 @@
 PY        ?= python
 PYTHONPATH := src
 
-.PHONY: test pytest chaos elastic overload lint smoke bench bench-all bench-quick docs-lint
+.PHONY: test pytest chaos elastic overload columnar lint smoke bench bench-all bench-quick docs-lint
 
 test: lint smoke           ## default flow: lint + example smoke + tier-1 suite
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -x -q
@@ -18,6 +18,9 @@ elastic:                 ## elastic namenode pool suite (docs/ELASTICITY.md)
 
 overload:                ## overload-hardened request path suite (docs/ROBUSTNESS.md)
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest tests/test_admission.py -q
+
+columnar:                ## columnar engine differential + kernel suites (docs/ARCHITECTURE.md)
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest tests/test_columnar_store.py tests/test_columnar_kernels.py tests/test_columnar_properties.py tests/test_scan_scaling.py -q
 
 lint:                    ## pyflakes if installed, else the AST fallback
 	PYTHONPATH=$(PYTHONPATH) $(PY) scripts/lint.py

@@ -584,6 +584,110 @@ def overload_report(*, batch_size: int = 16, n_ops: int = 600,
     }
 
 
+def columnar_report(*, batch_size: int = 16, n_ops: int = 600,
+                    n_namenodes: int = 4, n_dirs: int = 20) -> Dict:
+    """Differential columnar-engine bench (docs/ARCHITECTURE.md, columnar
+    section): replay the Spotify mix AND the write-heavy block mix
+    through the planned pipeline twice on identical setups — once on the
+    dict-backed ``MetadataStore`` oracle, once on the struct-of-arrays
+    ``ColumnarMetadataStore`` — then assert the two final states are
+    byte-identical (``dump_state`` equality, the oracle lock) and report
+    the fused-kernel economics: ONE hintchain launch resolves a whole
+    planner window's hint chains and ONE pkval launch validates its
+    client-resolved PKs, so launches must be orders of magnitude rarer
+    than ops."""
+    from repro.core import PlannedRequestPipeline
+    from repro.core.columnar import ColumnarMetadataStore
+
+    def build(store_cls):
+        store = store_cls(n_datanodes=4)
+        format_fs(store)
+        cluster = NamenodeCluster(store, n_namenodes)
+        ns = SyntheticNamespace(NamespaceSpec(), n_dirs=n_dirs,
+                                files_per_dir=4)
+        materialize_namespace(cluster.namenodes[0], ns)
+        return store, cluster
+
+    window = batch_size * 8
+    modes: Dict[str, Dict] = {}
+    agg = {"hintchain_launches": 0, "pkval_launches": 0, "pkval_probes": 0,
+           "pkval_demotions": 0}
+    total_ops = 0
+    wall_dict = wall_col = 0.0
+    state_all = True
+    for mode, mix_kw in (("spotify", {}),
+                         ("write_heavy", {"mix": WRITE_HEAVY_MIX})):
+        ns = SyntheticNamespace(NamespaceSpec(), n_dirs=n_dirs,
+                                files_per_dir=4)
+        trace = make_spotify_trace(ns, n_ops, seed=5, **mix_kw)
+        runs: Dict[str, Dict] = {}
+        for backend, cls in (("dict", MetadataStore),
+                             ("columnar", ColumnarMetadataStore)):
+            store, cluster = build(cls)
+            pipe = PlannedRequestPipeline(cluster, batch_size=batch_size,
+                                          window=window)
+            t0 = time.time()
+            stats = pipe.run(list(trace))
+            wall = time.time() - t0
+            rep = pipe.plan_report
+            runs[backend] = {
+                "store": store,
+                "wall": wall,
+                "windows": rep.windows,
+                "ok": stats.ok,
+                "failed": stats.failed,
+                "hintchain_launches": rep.hintchain_launches,
+                "pkval_launches": rep.pkval_launches
+                + sum(nn.pkval_launches for nn in cluster.namenodes),
+                "pkval_probes": rep.pkval_probes
+                + sum(nn.pkval_probes for nn in cluster.namenodes),
+                "pkval_demotions": rep.pkval_demotions
+                + sum(nn.pkval_demotions for nn in cluster.namenodes),
+            }
+        d, c = runs["dict"], runs["columnar"]
+        # the oracle lock: bit-identical rows, PKs and costs aside from
+        # nothing — the columnar engine is a LAYOUT, not a behaviour
+        state_equal = (d["store"].dump_state() == c["store"].dump_state())
+        state_all = state_all and state_equal
+        windows = max(1, c["windows"])
+        modes[mode] = {
+            "ops": len(trace),
+            "ok": c["ok"],
+            "failed": c["failed"],
+            "windows": c["windows"],
+            "hintchain_launches": c["hintchain_launches"],
+            "pkval_launches": c["pkval_launches"],
+            "pkval_probes": c["pkval_probes"],
+            "pkval_demotions": c["pkval_demotions"],
+            "window_ms_dict": round(1e3 * d["wall"]
+                                    / max(1, d["windows"]), 2),
+            "window_ms_columnar": round(1e3 * c["wall"] / windows, 2),
+            "state_matches_oracle": state_equal,
+        }
+        for k in agg:
+            agg[k] += modes[mode][k]
+        total_ops += len(trace)
+        wall_dict += d["wall"]
+        wall_col += c["wall"]
+    fused = agg["hintchain_launches"] + agg["pkval_launches"]
+    return {
+        "batch_size": batch_size,
+        "window": window,
+        "n_namenodes": n_namenodes,
+        "ops": total_ops,
+        "modes": modes,
+        "hintchain_launches": agg["hintchain_launches"],
+        "pkval_launches": agg["pkval_launches"],
+        "pkval_probes": agg["pkval_probes"],
+        "pkval_demotions": agg["pkval_demotions"],
+        "fused_launches": fused,
+        "launches_per_op": round(fused / max(1, total_ops), 4),
+        "wall_s_dict": round(wall_dict, 2),
+        "wall_s_columnar": round(wall_col, 2),
+        "state_matches_oracle": state_all,
+    }
+
+
 def run_replay(*, quick: bool = False, namenode_counts=(1, 4, 16),
                batch_size: int = 16, trace_ops: int = 5000,
                seed: int = 11) -> Dict:
@@ -630,6 +734,8 @@ def run_replay(*, quick: bool = False, namenode_counts=(1, 4, 16),
                                    phase_ops=300 if quick else 600)
     overload = overload_report(batch_size=batch_size,
                                n_ops=300 if quick else 600)
+    columnar = columnar_report(batch_size=batch_size,
+                               n_ops=300 if quick else 600)
     return {
         "benchmark": "trace_replay_throughput",
         "paper_figure": "Fig 7 (throughput vs number of namenodes)",
@@ -653,6 +759,7 @@ def run_replay(*, quick: bool = False, namenode_counts=(1, 4, 16),
         "failover": failover,
         "elasticity": elasticity,
         "overload": overload,
+        "columnar": columnar,
     }
 
 
@@ -705,6 +812,12 @@ def bench_trace_replay(quick: bool = False) -> List[Row]:
                  f"{ov['protected']['late_completions']}, "
                  f"{ov['breaker_trips']} breaker trips (state match: "
                  f"{ov['state_matches_sequential']})"))
+    co = report["columnar"]
+    rows.append(("trace_replay.columnar", 0.0,
+                 f"columnar engine: {co['fused_launches']} fused launches "
+                 f"for {co['ops']} ops ({co['launches_per_op']}/op), "
+                 f"{co['pkval_probes']} PKs validated, state match: "
+                 f"{co['state_matches_oracle']}"))
     el = report["elasticity"]
     rows.append(("trace_replay.elasticity", 0.0,
                  f"scale-out {el['n_namenodes_base']}->"
@@ -789,6 +902,14 @@ def main() -> None:
           f"{ov['protected']['worst_tenant_p99_ticks']} ticks, "
           f"{ov['breaker_trips']} breaker trips, "
           f"state_matches_sequential={ov['state_matches_sequential']}")
+    co = report["columnar"]
+    print(f"columnar: {co['hintchain_launches']} hintchain + "
+          f"{co['pkval_launches']} pkval launches over {co['ops']} ops "
+          f"({co['launches_per_op']} launches/op), "
+          f"{co['pkval_probes']} PK probes ({co['pkval_demotions']} "
+          f"demoted), wall {co['wall_s_dict']} s dict -> "
+          f"{co['wall_s_columnar']} s columnar, "
+          f"state_matches_oracle={co['state_matches_oracle']}")
     print(f"wrote {args.out}")
 
 

@@ -33,7 +33,12 @@ Checks:
     and docs rely on (protected vs unprotected goodput and p99, breaker
     trips, admission telemetry, oracle equality) and its headline
     acceptance criteria hold: zero protected late completions, protected
-    goodput strictly above unprotected.
+    goodput strictly above unprotected;
+  * the artifact's `columnar` section (struct-of-arrays engine
+    differential bench, docs/ARCHITECTURE.md's columnar-engine section)
+    carries the full metric set, shows the oracle lock holding
+    (`state_matches_oracle` true) and genuinely fused kernel launches
+    (launch count strictly below op count).
 """
 from __future__ import annotations
 
@@ -381,6 +386,66 @@ def check_overload_schema(artifact: Path) -> list:
     return errors
 
 
+#: metric keys the `columnar` section of BENCH_throughput.json must carry
+#: (consumed by docs/ARCHITECTURE.md's columnar-engine section and the
+#: differential suite in tests/test_columnar_store.py)
+COLUMNAR_KEYS = frozenset({
+    "batch_size", "window", "n_namenodes", "ops", "modes",
+    "hintchain_launches", "pkval_launches", "pkval_probes",
+    "pkval_demotions", "fused_launches", "launches_per_op",
+    "wall_s_dict", "wall_s_columnar", "state_matches_oracle",
+})
+
+#: per-mode metric keys of the `modes.spotify` / `modes.write_heavy`
+#: sub-sections
+COLUMNAR_MODE_KEYS = frozenset({
+    "ops", "ok", "failed", "windows", "hintchain_launches",
+    "pkval_launches", "pkval_probes", "pkval_demotions",
+    "window_ms_dict", "window_ms_columnar", "state_matches_oracle",
+})
+
+
+def check_columnar_schema(artifact: Path) -> list:
+    """The bench artifact's columnar-engine section must exist, carry
+    every documented metric key, and satisfy the oracle lock the engine
+    is sold on: byte-identical final state and FUSED kernel launches
+    (launch count orders of magnitude below op count)."""
+    if not artifact.exists():
+        return []                 # already reported by the schema check
+    try:
+        report = json.loads(artifact.read_text())
+    except Exception:
+        return []                 # already reported by the schema check
+    co = report.get("columnar")
+    if not isinstance(co, dict):
+        return [f"{artifact.name}: no `columnar` section (regenerate "
+                f"with `make bench`)"]
+    errors = []
+    for k in sorted(COLUMNAR_KEYS - set(co)):
+        errors.append(f"{artifact.name}: columnar section missing "
+                      f"metric `{k}`")
+    for mode, sub in (co.get("modes") or {}).items():
+        if not isinstance(sub, dict):
+            errors.append(f"{artifact.name}: columnar.modes.{mode} is "
+                          f"not a metrics object")
+            continue
+        for k in sorted(COLUMNAR_MODE_KEYS - set(sub)):
+            errors.append(f"{artifact.name}: columnar.modes.{mode} "
+                          f"missing metric `{k}`")
+    if co.get("state_matches_oracle") is not True:
+        errors.append(f"{artifact.name}: columnar replay diverged from "
+                      f"the dict-store oracle (state_matches_oracle "
+                      f"!= true)")
+    if not co.get("fused_launches"):
+        errors.append(f"{artifact.name}: columnar section recorded no "
+                      f"fused kernel launches — the gates never opened")
+    elif not co.get("fused_launches", 0) < co.get("ops", 0):
+        errors.append(f"{artifact.name}: columnar launches "
+                      f"({co.get('fused_launches')}) not below op count "
+                      f"({co.get('ops')}) — batching is not fused")
+    return errors
+
+
 def main() -> int:
     errors = []
     for rel in DOCS:
@@ -390,6 +455,7 @@ def main() -> int:
     errors.extend(check_failover_schema(ROOT / "BENCH_throughput.json"))
     errors.extend(check_elasticity_schema(ROOT / "BENCH_throughput.json"))
     errors.extend(check_overload_schema(ROOT / "BENCH_throughput.json"))
+    errors.extend(check_columnar_schema(ROOT / "BENCH_throughput.json"))
     if errors:
         print("docs-lint: FAIL")
         for e in errors:

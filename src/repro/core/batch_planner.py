@@ -56,13 +56,14 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
+from .columnar import lower_trace_fused, validate_window_pks
 from .hint_cache import InodeHintCache, absorb_response
 from .namenode import (NamenodeCluster, OpOutcome, PipelineStats, PlanHint,
                        RequestPipeline)
 from .ops_registry import REGISTRY, WorkloadOp
 from .store import StoreError
 from .tables import split_path
-from .workload import ColumnarTrace, lower_trace
+from .workload import ColumnarTrace
 
 __all__ = ["BatchPlanner", "HintResolver", "MultiCacheResolver",
            "PlannedBatch", "PlannedRequestPipeline", "PlanReport",
@@ -238,6 +239,10 @@ class PlanReport:
     windows: int = 0
     batches: int = 0
     kernel_launches: int = 0    # fused phash_chain calls that succeeded
+    hintchain_launches: int = 0  # fused hint-chain resolution launches
+    pkval_launches: int = 0     # fused grouped-PK validation launches
+    pkval_probes: int = 0       # composite-PK probes validated in them
+    pkval_demotions: int = 0    # resolved ops demoted by stale chains
     partitions_seen: Set[int] = field(default_factory=set)
     predicted_local: int = 0
     predicted_total: int = 0
@@ -522,7 +527,28 @@ class BatchPlanner:
             self.report.window_sizes.append(hi - lo)
             self._refresh_client_telemetry()
             return batches
-        ct = lower_trace([wops[i] for i in window], resolver)
+        # fused hint-chain resolution: one hintchain launch walks every
+        # op's cached parent chain (bit-equivalent to the Python loop,
+        # which small windows and non-HintResolver resolvers fall back to)
+        ct, used_hintchain = lower_trace_fused(
+            [wops[i] for i in window], resolver)
+        if used_hintchain:
+            self.report.hintchain_launches += 1
+        # grouped-batch PK validation: one pkval launch checks every
+        # client-resolved chain against the columnar store's hash index;
+        # stale chains are demoted BEFORE the conflict/pinning pass so
+        # they ride the exact sequential path (dict backend: no-op)
+        validated = validate_window_pks(self.cluster.store, ct)
+        if validated is not None:
+            demoted, n_probes, used_pkval = validated
+            self.report.pkval_probes += n_probes
+            if used_pkval:
+                self.report.pkval_launches += 1
+            for k in demoted:
+                self.report.pkval_demotions += 1
+                ct.resolved[k] = False
+                ct.pks[k] = None
+                ct.target_ids[k] = None
         # _sigs: the kernel's path-equality probe, no consumer here yet
         comp_parts, hint_parts, _sigs, used_kernel = _chain_partitions(
             ct, n_partitions)

@@ -95,20 +95,24 @@ _phash_probe = _KernelProbe()
 
 
 def _with_phash_kernel(kernel_fn: Any, fallback_fn: Any, *, n_keys: int,
-                       min_batch: int = PHASH_MIN_BATCH
+                       min_batch: int = PHASH_MIN_BATCH,
+                       probe: Optional[_KernelProbe] = None
                        ) -> Tuple[Any, bool]:
     """Run a phash kernel under the shared availability probe: size-gated
     (below ``min_batch`` the scalar/numpy path wins on dispatch overhead),
     per-call fallback, bounded re-probe. The SINGLE implementation of the
     fallback policy for namenode-side grouping and the client-side batch
-    planner — returns (result, used_kernel)."""
-    if n_keys >= max(2, min_batch) and _phash_probe.usable():
+    planner — returns (result, used_kernel). Other kernel families (pkval,
+    hintchain) pass their own ``probe`` so one family's failure never
+    latches another's fallback."""
+    gate = probe if probe is not None else _phash_probe
+    if n_keys >= max(2, min_batch) and gate.usable():
         try:
             out = kernel_fn()
         except Exception:
-            _phash_probe.failed()
+            gate.failed()
         else:
-            _phash_probe.succeeded()
+            gate.succeeded()
             return out, True
     return fallback_fn(), False
 
@@ -186,6 +190,11 @@ class Namenode:
         self.batches_executed = 0
         self.batched_ops = 0
         self.batched_write_ops = 0   # mutations served by grouped txns
+        # fused PK-validation telemetry (columnar backend only): grouped
+        # read runs prevalidate their hint chains in one pkval launch
+        self.pkval_launches = 0
+        self.pkval_probes = 0
+        self.pkval_demotions = 0
         # prebuilt default retry chain — the batch hot path must not
         # recompose middleware per op. txn_retry sits inside: a lock
         # timeout under concurrent workers aborted atomically (§7.5), so
@@ -465,6 +474,7 @@ class Namenode:
             else:
                 pks, tid = resolved
                 hits.append((idx, comps, pks, tid))
+        hits = self._prevalidate_hits(wops, hits, results)
         if not hits:
             return
         parts = _partitions_for([h[3] for h in hits],
@@ -475,6 +485,39 @@ class Namenode:
             groups.setdefault(p, []).append(h)
         for _, group in sorted(groups.items()):
             self._read_group_txn(op, wops, group, results)
+
+    def _prevalidate_hits(self, wops: Sequence[WorkloadOp],
+                          hits: List[Tuple[int, List[str],
+                                           List[Tuple[int, str]], int]],
+                          results: List[Optional[OpOutcome]]
+                          ) -> List[Tuple[int, List[str],
+                                          List[Tuple[int, str]], int]]:
+        """Grouped-batch PK validation of a read run's hint chains: ONE
+        fused pkval launch against the columnar store's hash index, stale
+        chains demoted to the exact sequential path BEFORE they waste a
+        grouped round trip. A no-op on the dict backend (no hash index)
+        and below the kernel's batch gate — purely advisory either way,
+        since in-transaction validation still guards every grouped read."""
+        if not hits:
+            return hits
+        from .columnar import prevalidate_chains
+        out = prevalidate_chains(
+            self.ops.store, [(h[2], h[3]) for h in hits])
+        if out is None:
+            return hits
+        ok_flags, probes, used = out
+        if probes:
+            self.pkval_probes += probes
+            if used:
+                self.pkval_launches += 1
+        kept = []
+        for h, ok in zip(hits, ok_flags):
+            if ok:
+                kept.append(h)
+            else:
+                self.pkval_demotions += 1
+                results[h[0]] = self._safe_exec(wops[h[0]])
+        return kept
 
     def _commit_group(self, txn: Transaction, order: Sequence[int],
                       values: Dict[int, Any], op_costs: Dict[int, OpCost],

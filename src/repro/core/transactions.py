@@ -50,6 +50,22 @@ class Transaction:
         # oversized lease-ordered block-write batch) would otherwise go
         # quadratic in scans over dirty keys
         self._dirty_order: Dict[str, List[Tuple[Any, ...]]] = {}
+        # (table, indexed col) -> value -> insertion-ordered dirty PKs with
+        # that value: the overlay's candidate set for ppis/index_scan. The
+        # full _dirty_order walk made a grouped transaction interleaving
+        # indexed scans with writes (G add_blocks over G distinct files,
+        # each _file_scan probing `block` by inode_id) quadratic in G —
+        # every scan walked EVERY dirty row of the table just to discard
+        # the non-matching ones. Mirrors Table.idx, scoped to pending rows.
+        self._dirty_idx: Dict[Tuple[str, str],
+                              Dict[Any, List[Tuple[Any, ...]]]] = {}
+        # last indexed values per dirty key, so re-writes can unindex
+        self._dirty_vals: Dict[Tuple[str, Tuple[Any, ...]],
+                               Dict[str, Any]] = {}
+        #: overlay candidates examined across all scans this transaction —
+        #: the counter the scan-scaling guard test asserts on (10x dirty
+        #: rows must mean ~10x overlay work, not ~100x)
+        self.overlay_scanned = 0
         self._done = False
         # --- distribution awareness (DAT) --------------------------------
         self.coordinator_group: Optional[int] = None
@@ -168,7 +184,8 @@ class Transaction:
         self.cost.ppis += 1
         self._charge_rt([part])
         return self._absorb_scan(tname, t, rows, lock, projection,
-                                 match=lambda r: r.get(index_col) == value)
+                                 match=lambda r: r.get(index_col) == value,
+                                 index_key=(index_col, value))
 
     def index_scan(self, tname: str, index_col: str, value: Any,
                    lock: str = READ_COMMITTED) -> List[Dict[str, Any]]:
@@ -178,7 +195,8 @@ class Transaction:
         self.cost.is_scans += 1
         self._charge_rt(range(t.n_partitions))
         return self._absorb_scan(tname, t, rows, lock, None,
-                                 match=lambda r: r.get(index_col) == value)
+                                 match=lambda r: r.get(index_col) == value,
+                                 index_key=(index_col, value))
 
     def full_scan(self, tname: str, pred: Callable[[Dict[str, Any]], bool]
                   ) -> List[Dict[str, Any]]:
@@ -208,7 +226,8 @@ class Transaction:
 
     def _absorb_scan(self, tname: str, t: Table, rows, lock, projection,
                      match: Optional[Callable[[Dict[str, Any]], bool]]
-                     = None):
+                     = None,
+                     index_key: Optional[Tuple[str, Any]] = None):
         out = []
         seen: Set[Tuple[Any, ...]] = set()
         for row in rows:
@@ -234,7 +253,20 @@ class Transaction:
         # one file in the same group must each see the other's block row
         # exactly as committed sequential transactions would.
         if match is not None and self.dirty:
-            for pk in self._dirty_order.get(tname, ()):
+            # indexed scans walk only the dirty rows that CAN match (the
+            # per-(table, col, value) candidate list); predicate scans
+            # still walk the table's whole dirty set. Candidates are
+            # re-checked against `match` either way, so a stale index
+            # entry can only cost a wasted probe, never a wrong row.
+            if index_key is not None \
+                    and index_key[0] in t.schema.indexes:
+                col, value = index_key
+                candidates: Iterable[Tuple[Any, ...]] = \
+                    self._dirty_idx.get((tname, col), {}).get(value, ())
+            else:
+                candidates = self._dirty_order.get(tname, ())
+            for pk in candidates:
+                self.overlay_scanned += 1
                 if pk in seen:
                     continue
                 v = self.cache[(tname, pk)]
@@ -255,6 +287,35 @@ class Transaction:
             self.dirty.add(key)
             self._dirty_order.setdefault(tname, []).append(pk)
 
+    def _reindex_dirty(self, tname: str, t: Table, pk: Tuple[Any, ...],
+                       row: Optional[Dict[str, Any]]) -> None:
+        """Keep the dirty-row secondary index in step with the txn cache
+        (``row=None`` on delete): unhook the key from its previous indexed
+        values, hook it under the new ones."""
+        if not t.schema.indexes:
+            return
+        key = (tname, pk)
+        old = self._dirty_vals.get(key)
+        new = ({c: row.get(c) for c in t.schema.indexes}
+               if row is not None else None)
+        for c in t.schema.indexes:
+            ov = old.get(c) if old is not None else None
+            nv = new.get(c) if new is not None else None
+            if old is not None and (new is None or ov != nv):
+                lst = self._dirty_idx.get((tname, c), {}).get(ov)
+                if lst is not None:
+                    try:
+                        lst.remove(pk)
+                    except ValueError:
+                        pass
+            if new is not None and (old is None or ov != nv):
+                self._dirty_idx.setdefault((tname, c), {}) \
+                    .setdefault(nv, []).append(pk)
+        if new is None:
+            self._dirty_vals.pop(key, None)
+        else:
+            self._dirty_vals[key] = new
+
     def write(self, tname: str, row: Dict[str, Any]) -> None:
         """Insert/update a row in the txn cache (flushed at commit). The row
         lock must already be held exclusively if the row pre-existed."""
@@ -263,11 +324,13 @@ class Transaction:
         self.store.locks.acquire(self.txn_id, tname, pk, EXCLUSIVE)
         self.cache[(tname, pk)] = row
         self._mark_dirty(tname, pk)
+        self._reindex_dirty(tname, t, pk, row)
 
     def delete(self, tname: str, pk: Tuple[Any, ...]) -> None:
         self.store.locks.acquire(self.txn_id, tname, pk, EXCLUSIVE)
         self.cache[(tname, pk)] = _TOMBSTONE
         self._mark_dirty(tname, pk)
+        self._reindex_dirty(tname, self.store.table(tname), pk, None)
 
     # ------------------------------------------------------------------
     # UPDATE phase

@@ -1,0 +1,96 @@
+"""Grouped-batch PK validation (HopsFS §5.1 batched PK reads) — Pallas.
+
+The columnar inode table (``repro.core.columnar``) maintains an
+open-addressing hash index over its composite PK ``(parent_id,
+name_hash32(name))``.  This kernel probes that index for a whole planner
+window's ``(parent_id, name)`` chain in ONE launch: every probe walks the
+same linear-probe sequence the host-side :class:`~repro.core.columnar.
+HashIndex` inserts along (load factor <= 0.5, bounded probe length), so a
+window of several hundred path components validates against the store in
+one fused pass instead of per-row dict gets.
+
+Sentinels share the host encoding: slot parent ``-1`` = empty (ends the
+probe chain), ``-2`` = tombstone (probe continues), value ``-3`` = a
+32-bit name-hash collision (two live names, one bucket) — collided keys
+report "cannot validate" rather than a wrong id.  Probe rows with parent
+``< 0`` are padding and always miss.
+
+Grid: 1-D over probe blocks; the index arrays are broadcast whole to every
+block (they are the shared read-only side).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..phash.kernel import GOLDEN, GOLDEN2
+
+#: linear-probe bound shared with the host-side HashIndex insert path —
+#: the host GROWS the table rather than place a key further than this,
+#: so a kernel miss after MAX_PROBE steps is a real miss
+MAX_PROBE = 8
+
+
+def _bucket_hash(par, nam):
+    """uint32 bucket mix over the composite key — one multiply per half,
+    xor-folded, same avalanche finish as the scalar store hash."""
+    h = ((par.astype(jnp.uint32) * jnp.uint32(GOLDEN))
+         ^ (nam.astype(jnp.uint32) * jnp.uint32(GOLDEN2)))
+    h = (h ^ (h >> jnp.uint32(16))).astype(jnp.uint32)
+    return h
+
+
+def _pkval_kernel(tp_ref, tn_ref, tv_ref, par_ref, nam_ref, out_ref, *,
+                  cap: int, max_probe: int):
+    tp = tp_ref[...]                       # [cap] int32 parent / sentinel
+    tn = tn_ref[...]                       # [cap] uint32 name hash
+    tv = tv_ref[...]                       # [cap] int32 child id / -3
+    par = par_ref[...]                     # [bn] int32 probe parent
+    nam = nam_ref[...]                     # [bn] uint32 probe name hash
+    slot = _bucket_hash(par, nam) & jnp.uint32(cap - 1)
+
+    # rolled probe loop (NOT a static unroll): the XLA graph stays O(1)
+    # in max_probe, keeping compile time flat — an unrolled chain of
+    # gathers made even interpret-mode compiles pathologically slow
+    def _step(step, carry):
+        out, alive = carry
+        j = ((slot + step.astype(jnp.uint32)) & jnp.uint32(cap - 1)) \
+            .astype(jnp.int32)
+        ep = jnp.take(tp, j)
+        en = jnp.take(tn, j)
+        ev = jnp.take(tv, j)
+        hit = alive & (ep >= 0) & (ep == par) & (en == nam)
+        out = jnp.where(hit, ev, out)
+        alive = alive & ~hit & (ep != jnp.int32(-1))
+        return out, alive
+
+    out = jnp.full(par.shape, -1, jnp.int32)
+    alive = par >= 0
+    out, _ = jax.lax.fori_loop(0, max_probe, _step, (out, alive))
+    out_ref[...] = out
+
+
+def pkval(tp: jax.Array, tn: jax.Array, tv: jax.Array, parents: jax.Array,
+          name_hashes: jax.Array, *, block_n: int = 1024,
+          max_probe: int = MAX_PROBE, interpret: bool = True) -> jax.Array:
+    """index (tp/tn/tv [C]) x probes (parents/name_hashes [N]) ->
+    resolved ids [N] int32 (-1 = no such row, -3 = hash-collided bucket)."""
+    (N,) = parents.shape
+    (C,) = tp.shape
+    bn = min(block_n, N)
+    kernel = functools.partial(_pkval_kernel, cap=C, max_probe=max_probe)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // bn,),
+        in_specs=[pl.BlockSpec((C,), lambda i: (0,)),
+                  pl.BlockSpec((C,), lambda i: (0,)),
+                  pl.BlockSpec((C,), lambda i: (0,)),
+                  pl.BlockSpec((bn,), lambda i: (i,)),
+                  pl.BlockSpec((bn,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.int32),
+        interpret=interpret,
+    )(tp, tn, tv, parents, name_hashes)

@@ -1,0 +1,42 @@
+"""Numpy oracle for the grouped PK-validation kernel (also its fallback)."""
+import numpy as np
+
+from .kernel import MAX_PROBE
+
+GOLDEN = 0x9E3779B1
+GOLDEN2 = 0x85EBCA6B
+
+
+def bucket_hash_ref(par, nam):
+    """Host mirror of the kernel's uint32 bucket mix."""
+    par = np.asarray(par).astype(np.uint32)
+    nam = np.asarray(nam).astype(np.uint32)
+    with np.errstate(over="ignore"):
+        h = ((par * np.uint32(GOLDEN)) ^ (nam * np.uint32(GOLDEN2))) \
+            .astype(np.uint32)
+        h = (h ^ (h >> np.uint32(16))).astype(np.uint32)
+    return h
+
+
+def pkval_ref(tp, tn, tv, parents, name_hashes, *,
+              max_probe: int = MAX_PROBE):
+    """Vectorized linear-probe lookup, bit-identical to the kernel:
+    ids [N] int32, -1 = miss, -3 = collided bucket."""
+    tp = np.asarray(tp).astype(np.int32)
+    tn = np.asarray(tn).astype(np.uint32)
+    tv = np.asarray(tv).astype(np.int32)
+    par = np.asarray(parents).astype(np.int32)
+    nam = np.asarray(name_hashes).astype(np.uint32)
+    cap = tp.shape[0]
+    slot = bucket_hash_ref(par, nam) & np.uint32(cap - 1)
+    out = np.full(par.shape, -1, np.int32)
+    alive = par >= 0
+    with np.errstate(over="ignore"):
+        for step in range(max_probe):
+            j = ((slot + np.uint32(step)) & np.uint32(cap - 1)) \
+                .astype(np.int64)
+            ep, en, ev = tp[j], tn[j], tv[j]
+            hit = alive & (ep >= 0) & (ep == par) & (en == nam)
+            out = np.where(hit, ev, out)
+            alive = alive & ~hit & (ep != np.int32(-1))
+    return out

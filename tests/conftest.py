@@ -66,6 +66,51 @@ def make_cluster():
 
 
 @pytest.fixture
+def differential_replay(make_cluster):
+    """Dict-vs-columnar oracle lock: replay the same trace on a fresh
+    dict-backed cluster and a fresh columnar-backed cluster built
+    identically, and return both ``(store, cluster, stats)`` triples.
+
+    ``pipeline`` picks the execution path: ``"sequential"`` (batch=1),
+    ``"reactive"`` (FIFO batches) or ``"planned"`` (closed-loop batch
+    planner, where the fused kernels may engage). The caller asserts what
+    the mode guarantees — ``dump_state`` byte-equality always holds; op-
+    for-op cost equality additionally holds whenever both backends walk
+    the identical code path (no pkval demotions)."""
+    from repro.core import PlannedRequestPipeline
+    from repro.core.columnar import ColumnarMetadataStore
+
+    def replay(wops, *, n_namenodes=1, pipeline="sequential",
+               batch_size=8, namespace=False, n_dirs=16, files_per_dir=4,
+               window=None, **cluster_kw):
+        out = []
+        for store_cls in (MetadataStore, ColumnarMetadataStore):
+            store = store_cls(n_datanodes=4)
+            format_fs(store)
+            cluster = NamenodeCluster(store, n_namenodes, **cluster_kw)
+            if namespace:
+                ns = SyntheticNamespace(NamespaceSpec(), n_dirs=n_dirs,
+                                        files_per_dir=files_per_dir)
+                materialize_namespace(cluster.namenodes[0], ns)
+            if pipeline == "sequential":
+                stats = RequestPipeline(cluster, batch_size=1).run(
+                    list(wops))
+            elif pipeline == "reactive":
+                stats = RequestPipeline(cluster, batch_size=batch_size) \
+                    .run(list(wops))
+            elif pipeline == "planned":
+                pipe = PlannedRequestPipeline(
+                    cluster, batch_size=batch_size,
+                    window=window or batch_size * 8)
+                stats = pipe.run(list(wops))
+            else:
+                raise ValueError(pipeline)
+            out.append((store, cluster, stats))
+        return out[0], out[1]
+    return replay
+
+
+@pytest.fixture
 def oracle_replay(make_cluster):
     """Fault-free sequential oracle: replay a trace on a fresh single
     namenode, one op per exchange, and return ``(snapshot, outcomes)``.

@@ -1,0 +1,340 @@
+"""Differential harness locking the columnar engine to the dict oracle.
+
+The struct-of-arrays backend (``repro.core.columnar``) is pure layout:
+every replay that runs on the dict-backed ``MetadataStore`` must leave a
+``ColumnarMetadataStore`` in a byte-identical state (``dump_state``
+equality), with identical OpCost accounting wherever both backends walk
+the same code path, and conserved accounting always.  Three layers:
+
+  1. table-interface parity — ``ColumnarTable`` mirrors ``Table`` row op
+     by row op (updates, deletes, partition-key relocation, scans, parts
+     views, secondary indexes);
+  2. ``HashIndex`` — the kernel-facing open-addressing index agrees with
+     the pkval numpy oracle probe-for-probe, survives growth/tombstone
+     churn, and poisons crc-collided buckets with AMBIG;
+  3. replay differentials — sequential / reactive / planned pipelines on
+     the Spotify and write-heavy mixes, with and without the fused
+     kernels engaged (gates monkeypatched down), plus namenode-side
+     pkval demotion of genuinely stale hint chains.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (MetadataStore, NamenodeCluster, OpCost,
+                        PlannedRequestPipeline, RequestPipeline,
+                        WorkloadOp, format_fs, materialize_namespace,
+                        namespace_snapshot)
+import repro.core.columnar as columnar
+from repro.core.columnar import (AMBIG, ColumnarMetadataStore,
+                                 ColumnarTable, EMPTY, HashIndex,
+                                 MAX_PROBE)
+from repro.core.store import Table
+from repro.core.tables import BLOCK, INODE, make_block, make_inode
+from repro.core.workload import (SyntheticNamespace, NamespaceSpec,
+                                 WRITE_HEAVY_MIX, make_spotify_trace,
+                                 name_hash32)
+
+N_PARTS = 16
+
+
+def _trace(n_ops=300, *, mix=None, seed=5, n_dirs=16):
+    ns = SyntheticNamespace(NamespaceSpec(), n_dirs=n_dirs,
+                            files_per_dir=4)
+    kw = {"mix": mix} if mix is not None else {}
+    return make_spotify_trace(ns, n_ops, seed=seed, **kw)
+
+
+def _conserved(stats):
+    per_nn = OpCost()
+    for c in stats.per_nn_cost.values():
+        per_nn.merge(c)
+    per_op = OpCost()
+    for o in stats.outcomes:
+        if o.ok:
+            per_op.merge(o.result.cost)
+    assert per_nn.as_dict() == stats.total_cost.as_dict() \
+        == per_op.as_dict()
+
+
+# ---------------------------------------------------------------------------
+# 1. table-interface parity
+# ---------------------------------------------------------------------------
+
+def _mirror_check(dt: Table, ct: ColumnarTable):
+    assert dt.n_rows == ct.n_rows
+    assert dt.parts == ct.parts
+    assert dt.idx == ct.idx
+    for part in dt.parts:
+        for pk in part:
+            assert dt.get(pk) == ct.get(pk)
+            assert dt.partition_of_pk(pk) == ct.partition_of_pk(pk)
+
+
+def test_inode_table_parity_under_churn():
+    rng = np.random.default_rng(7)
+    dt, ct = Table(INODE, N_PARTS), ColumnarTable(INODE, N_PARTS)
+    live = []
+    for step in range(400):
+        r = rng.random()
+        if r < 0.55 or not live:
+            iid = 100 + step
+            row = make_inode(iid, int(rng.integers(1, 40)),
+                             f"n{step % 37}", bool(rng.random() < 0.3))
+            dt.put(dict(row))
+            ct.put(dict(row))
+            pk = (row["parent_id"], row["name"])
+            # (parent, name) can repeat across steps — put overwrites, so
+            # live must stay duplicate-free or a delete strands a stale pk
+            if pk not in live:
+                live.append(pk)
+        elif r < 0.8:
+            pk = live[int(rng.integers(len(live)))]
+            old = dt.get(pk)
+            if old is not None:
+                upd = dict(old)
+                upd["size"] = int(rng.integers(1 << 20))
+                upd["under_construction"] = bool(rng.random() < 0.5)
+                dt.put(dict(upd))
+                ct.put(dict(upd))
+        else:
+            pk = live.pop(int(rng.integers(len(live))))
+            assert dt.delete(pk) == ct.delete(pk)
+    _mirror_check(dt, ct)
+    # scans agree (scan_index returns whatever set order — compare sorted)
+    for parent in range(1, 40):
+        a = sorted(dt.scan_index("parent_id", parent),
+                   key=lambda r: r["name"])
+        b = sorted(ct.scan_index("parent_id", parent),
+                   key=lambda r: r["name"])
+        assert a == b
+    for p in range(N_PARTS):
+        assert dt.scan_partition(p, lambda r: True) \
+            == ct.scan_partition(p, lambda r: True)
+    assert dt.scan_all(lambda r: r["size"] > 0) \
+        == ct.scan_all(lambda r: r["size"] > 0)
+    # the kernel-facing index resolves every live row
+    for pk in live:
+        row = dt.get(pk)
+        got = ct.hindex.get(pk[0], name_hash32(pk[1]))
+        assert got == row["id"] or got == AMBIG
+
+
+def test_block_table_partition_key_relocation():
+    dt, ct = Table(BLOCK, N_PARTS), ColumnarTable(BLOCK, N_PARTS)
+    for b in range(40):
+        row = make_block(1000 + b, 10 + (b % 4), b)
+        dt.put(dict(row))
+        ct.put(dict(row))
+    # concat-style re-owning: the partition key (inode_id) changes, which
+    # must move the row between shards without duplicating the PK
+    for b in range(0, 40, 3):
+        row = dict(dt.get((1000 + b,)))
+        row["inode_id"] = 99
+        dt.put(dict(row))
+        ct.put(dict(row))
+    _mirror_check(dt, ct)
+    assert dt.n_rows == ct.n_rows == 40
+    assert sorted(r["block_id"] for r in ct.scan_index("inode_id", 99)) \
+        == sorted(r["block_id"] for r in dt.scan_index("inode_id", 99))
+    # part_hint probes miss on the wrong shard, like the dict store
+    pk = (1000,)
+    right = ct.partition_of_pk(pk)
+    assert ct.get(pk, part_hint=right) is not None
+    assert ct.get(pk, part_hint=(right + 1) % N_PARTS) is None
+
+
+def test_materialized_rows_are_pure_python():
+    ct = ColumnarTable(INODE, N_PARTS)
+    ct.put(make_inode(2, 1, "a", False, size=7))
+    row = ct.get((1, "a"))
+    for v in row.values():
+        assert not isinstance(v, np.generic), (row, type(v))
+    # dump_state sorts by repr(pk): tuples must hold plain ints/strs
+    assert repr((1, "a")) == repr(tuple(ct.parts[
+        ct.partition_of_pk((1, "a"))].keys())[0])
+
+
+# ---------------------------------------------------------------------------
+# 2. HashIndex (kernel-facing open addressing)
+# ---------------------------------------------------------------------------
+
+def test_hashindex_growth_tombstones_and_reuse():
+    idx = HashIndex(cap=64)
+    keys = [(p, name_hash32(f"k{p}")) for p in range(1, 400)]
+    for p, h in keys:
+        idx.set(p, h, p * 2)
+    assert idx.cap & (idx.cap - 1) == 0 and idx.cap > 64
+    for p, h in keys:
+        assert idx.get(p, h) == p * 2
+    for p, h in keys[::2]:
+        assert idx.remove(p, h)
+    for p, h in keys[::2]:
+        assert idx.get(p, h) == EMPTY
+    for p, h in keys[1::2]:
+        assert idx.get(p, h) == p * 2          # survivors probe past tombs
+    for p, h in keys[::2]:
+        idx.set(p, h, p * 3)                   # tombstone slots reused
+    for p, h in keys[::2]:
+        assert idx.get(p, h) == p * 3
+
+
+def test_hashindex_agrees_with_pkval_oracle():
+    from repro.kernels.pkval.ref import pkval_ref
+    idx = HashIndex()
+    rng = np.random.default_rng(3)
+    keys = [(int(rng.integers(1, 10_000)), name_hash32(f"f{i}"))
+            for i in range(500)]
+    for i, (p, h) in enumerate(keys):
+        idx.set(p, h, i + 2)
+    misses = [(int(rng.integers(10_001, 20_000)), name_hash32(f"m{i}"))
+              for i in range(100)]
+    probes = keys + misses
+    out = pkval_ref(*idx.arrays(),
+                    np.array([p for p, _ in probes], np.int32),
+                    np.array([h for _, h in probes], np.uint32))
+    for i, (p, h) in enumerate(probes):
+        assert int(out[i]) == idx.get(p, h)
+
+
+def test_hashindex_ambig_poisoning(monkeypatch):
+    # force 32-bit name-hash collisions with a deliberately coarse hash
+    monkeypatch.setattr(columnar, "name_hash32", lambda s: len(s) % 4)
+    idx = HashIndex.from_entries([(1, "aa", 10), (1, "bb", 11),
+                                  (1, "x", 12)])
+    assert idx.get(1, 2) == AMBIG              # "aa"/"bb" collide
+    assert idx.get(1, 1) == 12                 # "x" unambiguous
+    # table maintenance keeps poisoning exact under delete churn
+    ct = ColumnarTable(INODE, N_PARTS)
+    ct.put(make_inode(5, 1, "aa", False))
+    ct.put(make_inode(6, 1, "bb", False))
+    assert ct.hindex.get(1, 2) == AMBIG
+    ct.delete((1, "bb"))
+    assert ct.hindex.get(1, 2) == 5            # back to unambiguous
+    ct.delete((1, "aa"))
+    assert ct.hindex.get(1, 2) == EMPTY
+
+
+def test_sentinels_match_kernel_package():
+    from repro.kernels.pkval import kernel as pk
+    assert MAX_PROBE == pk.MAX_PROBE
+    assert columnar._GOLDEN == pk.GOLDEN
+    assert columnar._GOLDEN2 == pk.GOLDEN2
+
+
+# ---------------------------------------------------------------------------
+# 3. replay differentials (the oracle lock)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mix_name,mix", [("spotify", None),
+                                          ("write_heavy",
+                                           WRITE_HEAVY_MIX)])
+def test_sequential_replay_byte_equal(differential_replay, mix_name, mix):
+    wops = _trace(300, mix=mix)
+    (sd, cd, st_d), (sc, cc, st_c) = differential_replay(
+        wops, namespace=True, pipeline="sequential")
+    assert sd.dump_state() == sc.dump_state()
+    # identical code path => op-for-op identical cost accounting
+    assert st_d.total_cost.as_dict() == st_c.total_cost.as_dict()
+    for a, b in zip(st_d.outcomes, st_c.outcomes):
+        assert a.ok == b.ok
+        if a.ok:
+            assert a.result.cost.as_dict() == b.result.cost.as_dict()
+    _conserved(st_c)
+
+
+def test_reactive_replay_byte_equal(differential_replay):
+    wops = _trace(300)
+    (sd, _, st_d), (sc, _, st_c) = differential_replay(
+        wops, n_namenodes=2, namespace=True, pipeline="reactive")
+    assert sd.dump_state() == sc.dump_state()
+    assert st_d.total_cost.as_dict() == st_c.total_cost.as_dict()
+    _conserved(st_c)
+
+
+@pytest.mark.parametrize("mix_name,mix", [("spotify", None),
+                                          ("write_heavy",
+                                           WRITE_HEAVY_MIX)])
+def test_planned_replay_byte_equal(differential_replay, mix_name, mix):
+    wops = _trace(300, mix=mix)
+    (sd, _, st_d), (sc, _, st_c) = differential_replay(
+        wops, n_namenodes=2, namespace=True, pipeline="planned")
+    assert sd.dump_state() == sc.dump_state()
+    assert namespace_snapshot(sd) == namespace_snapshot(sc)
+    _conserved(st_d)
+    _conserved(st_c)
+
+
+def test_planned_replay_with_kernels_engaged(monkeypatch):
+    """Drop both fused-kernel gates to the floor so every window launches,
+    and re-assert the oracle lock: the kernels are advisory, so final
+    state stays byte-identical while launches actually happen."""
+    monkeypatch.setattr(columnar, "HINTCHAIN_MIN_BATCH", 2)
+    monkeypatch.setattr(columnar, "PKVAL_MIN_BATCH", 2)
+    wops = _trace(240)
+    states, reports = {}, {}
+    for name, cls in (("dict", MetadataStore),
+                      ("columnar", ColumnarMetadataStore)):
+        store = cls(n_datanodes=4)
+        format_fs(store)
+        cluster = NamenodeCluster(store, 2)
+        ns = SyntheticNamespace(NamespaceSpec(), n_dirs=16,
+                                files_per_dir=4)
+        materialize_namespace(cluster.namenodes[0], ns)
+        pipe = PlannedRequestPipeline(cluster, batch_size=8, window=64)
+        stats = pipe.run(list(wops))
+        _conserved(stats)
+        states[name] = store.dump_state()
+        reports[name] = pipe.plan_report
+    assert states["dict"] == states["columnar"]
+    # hint-chain fusion is resolver-side: both backends launch it
+    assert reports["dict"].hintchain_launches > 0
+    assert reports["columnar"].hintchain_launches > 0
+    # PK validation needs the columnar hash index: dict backend skips it
+    assert reports["dict"].pkval_probes == 0
+    assert reports["columnar"].pkval_probes > 0
+    assert reports["columnar"].pkval_launches > 0
+
+
+def test_namenode_prevalidation_demotes_stale_chains(monkeypatch):
+    """A hint chain the cache still believes but the store no longer
+    backs must be demoted by the fused pkval prevalidation — and the op
+    still gets the exact sequential path's answer."""
+    monkeypatch.setattr(columnar, "PKVAL_MIN_BATCH", 2)
+    store = ColumnarMetadataStore(n_datanodes=4)
+    format_fs(store)
+    cluster = NamenodeCluster(store, 1)
+    nn = cluster.namenodes[0]
+    nn.ops.mkdirs("/d")
+    nn.ops.create("/d/f")
+    nn.ops.create("/d/g")
+    # warm the namenode hint cache through real reads
+    reads = [WorkloadOp("read", "/d/f"), WorkloadOp("read", "/d/g")]
+    nn.execute_batch(reads)
+    # yank the rows out from under the cache (no invalidation piggyback)
+    t = store.table("inode")
+    fid = t.get((next(r["id"] for r in t.scan_index("parent_id", 1)
+                      if r["name"] == "d"), "f"))
+    assert fid is not None
+    assert t.delete((fid["parent_id"], "f"))
+    before = nn.pkval_demotions
+    outcomes = nn.execute_batch(reads * 2)
+    assert nn.pkval_demotions > before
+    assert nn.pkval_launches >= 1
+    # the stale-path reads fail exactly like a sequential miss would;
+    # the intact chain still succeeds
+    by_path = {}
+    for wop, oc in zip(reads * 2, outcomes):
+        by_path.setdefault(wop.path, []).append(oc)
+    assert all(not oc.ok for oc in by_path["/d/f"])
+    assert all(oc.ok for oc in by_path["/d/g"])
+
+
+def test_store_construction_parity():
+    sd = MetadataStore(n_datanodes=4)
+    sc = ColumnarMetadataStore(n_datanodes=4)
+    format_fs(sd)
+    format_fs(sc)
+    assert sd.dump_state() == sc.dump_state()
+    assert sd.memory_bytes() == sc.memory_bytes()
+    for name in ColumnarMetadataStore.COLUMNAR_TABLES:
+        assert isinstance(sc.table(name), ColumnarTable)

@@ -1,0 +1,99 @@
+"""Scan-scaling guard for the transaction read-your-writes overlay.
+
+A grouped write transaction that interleaves indexed scans with writes —
+the shape of G add_blocks over G distinct files, each ``_file_scan``
+probing ``block`` by ``inode_id`` — used to go QUADRATIC in G: every
+``ppis``/``index_scan`` walked the transaction's entire dirty set just to
+discard the rows whose indexed value didn't match.  The
+``Transaction._dirty_idx`` candidate index scopes the overlay walk to the
+pending rows that CAN match; ``Transaction.overlay_scanned`` counts the
+candidates actually examined, and this guard asserts 10x the dirty rows
+costs ~10x the overlay work — not ~100x.
+"""
+from repro.core import MetadataStore, format_fs
+from repro.core.tables import make_block
+from repro.core.transactions import Transaction
+
+
+def _interleaved_workload(n):
+    """One txn: for each of n distinct inodes, insert a block row then
+    ppis-scan the block table for that inode (read-your-writes shape).
+    Returns the transaction with its overlay counter populated."""
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    txn = Transaction(store, partition_hint=("block", 1))
+    for i in range(n):
+        inode_id = 1000 + i
+        txn.write("block", make_block(5000 + i, inode_id, 0))
+        rows = txn.ppis("block", "inode_id", inode_id)
+        assert [r["block_id"] for r in rows] == [5000 + i]
+    scanned = txn.overlay_scanned
+    txn.abort()
+    return scanned
+
+
+def test_indexed_overlay_scan_work_is_linear():
+    n = 40
+    small = _interleaved_workload(n)
+    big = _interleaved_workload(10 * n)
+    # each scan should examine O(1) candidates (exactly the one pending
+    # row for that inode), so work is ~N, never ~N^2/2
+    assert small <= 3 * n, small
+    assert big <= 3 * (10 * n), big
+    # the scaling assertion proper: 10x rows => ~10x overlay work. The
+    # old full-dirty-set walk gives big/small ≈ 100.
+    assert big <= 30 * max(1, small), (small, big)
+
+
+def test_unindexed_predicate_scan_still_sees_all_dirty_rows():
+    """full_scan has no index key — it must keep walking the whole dirty
+    set (correctness over speed for arbitrary predicates)."""
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    txn = Transaction(store, partition_hint=("block", 1))
+    for i in range(20):
+        txn.write("block", make_block(6000 + i, 2000 + i, 0))
+    rows = txn.full_scan("block", lambda r: r["inode_id"] >= 2010)
+    assert sorted(r["block_id"] for r in rows) == \
+        [6000 + i for i in range(10, 20)]
+    assert txn.overlay_scanned >= 20      # predicate path: all dirty rows
+    txn.abort()
+
+
+def test_overlay_index_tracks_rewrites_and_deletes():
+    """Read-your-writes correctness through the candidate index: value
+    rewrites move a pending row between candidate lists, deletes drop it,
+    and a stale candidate can never surface a wrong row."""
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    txn = Transaction(store, partition_hint=("block", 1))
+    txn.write("block", make_block(7000, 3000, 0))
+    assert [r["block_id"] for r in txn.ppis("block", "inode_id", 3000)] \
+        == [7000]
+    # rewrite under a new indexed value: old list must no longer yield it
+    txn.write("block", make_block(7000, 3001, 0))
+    assert txn.ppis("block", "inode_id", 3000) == []
+    assert [r["block_id"] for r in txn.ppis("block", "inode_id", 3001)] \
+        == [7000]
+    # delete: gone from every candidate list
+    txn.delete("block", (7000,))
+    assert txn.ppis("block", "inode_id", 3001) == []
+    txn.abort()
+
+
+def test_overlay_merges_with_committed_rows():
+    """The indexed overlay adds pending rows ON TOP of committed ones —
+    a scan mid-transaction sees both, without duplicates."""
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    store.table("block").put(make_block(8000, 4000, 0))
+    txn = Transaction(store, partition_hint=("block", 1))
+    txn.write("block", make_block(8001, 4000, 1))
+    rows = txn.ppis("block", "inode_id", 4000)
+    assert sorted(r["block_id"] for r in rows) == [8000, 8001]
+    # updating the COMMITTED row through the txn must not duplicate it
+    txn.write("block", make_block(8000, 4000, 0, size=5))
+    rows = txn.ppis("block", "inode_id", 4000)
+    assert sorted(r["block_id"] for r in rows) == [8000, 8001]
+    assert [r for r in rows if r["block_id"] == 8000][0]["size"] == 5
+    txn.abort()
