@@ -2,7 +2,7 @@
 PY        ?= python
 PYTHONPATH := src
 
-.PHONY: test pytest chaos elastic overload columnar lint smoke bench bench-all bench-quick docs-lint
+.PHONY: test pytest chaos elastic overload columnar bigdir lint smoke bench bench-all bench-quick docs-lint
 
 test: lint smoke           ## default flow: lint + example smoke + tier-1 suite
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -x -q
@@ -21,6 +21,10 @@ overload:                ## overload-hardened request path suite (docs/ROBUSTNES
 
 columnar:                ## columnar engine differential + kernel suites (docs/ARCHITECTURE.md)
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest tests/test_columnar_store.py tests/test_columnar_kernels.py tests/test_columnar_properties.py tests/test_scan_scaling.py -q
+
+bigdir:                  ## incremental subtree protocol suites + quick big_dir bench
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest tests/test_subtree.py tests/test_subtree_properties.py tests/test_subtree_scaling.py -q
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.trace_replay --quick --only big_dir --out /tmp/bigdir_bench.json
 
 lint:                    ## pyflakes if installed, else the AST fallback
 	PYTHONPATH=$(PYTHONPATH) $(PY) scripts/lint.py

@@ -611,7 +611,8 @@ def columnar_report(*, batch_size: int = 16, n_ops: int = 600,
     window = batch_size * 8
     modes: Dict[str, Dict] = {}
     agg = {"hintchain_launches": 0, "pkval_launches": 0, "pkval_probes": 0,
-           "pkval_demotions": 0}
+           "pkval_demotions": 0, "treeagg_launches": 0,
+           "treeagg_demotions": 0}
     total_ops = 0
     wall_dict = wall_col = 0.0
     state_all = True
@@ -643,6 +644,10 @@ def columnar_report(*, batch_size: int = 16, n_ops: int = 600,
                 + sum(nn.pkval_probes for nn in cluster.namenodes),
                 "pkval_demotions": rep.pkval_demotions
                 + sum(nn.pkval_demotions for nn in cluster.namenodes),
+                "treeagg_launches": sum(nn.treeagg_launches
+                                        for nn in cluster.namenodes),
+                "treeagg_demotions": sum(nn.treeagg_demotions
+                                         for nn in cluster.namenodes),
             }
         d, c = runs["dict"], runs["columnar"]
         # the oracle lock: bit-identical rows, PKs and costs aside from
@@ -659,6 +664,8 @@ def columnar_report(*, batch_size: int = 16, n_ops: int = 600,
             "pkval_launches": c["pkval_launches"],
             "pkval_probes": c["pkval_probes"],
             "pkval_demotions": c["pkval_demotions"],
+            "treeagg_launches": c["treeagg_launches"],
+            "treeagg_demotions": c["treeagg_demotions"],
             "window_ms_dict": round(1e3 * d["wall"]
                                     / max(1, d["windows"]), 2),
             "window_ms_columnar": round(1e3 * c["wall"] / windows, 2),
@@ -680,11 +687,155 @@ def columnar_report(*, batch_size: int = 16, n_ops: int = 600,
         "pkval_launches": agg["pkval_launches"],
         "pkval_probes": agg["pkval_probes"],
         "pkval_demotions": agg["pkval_demotions"],
+        "treeagg_launches": agg["treeagg_launches"],
+        "treeagg_demotions": agg["treeagg_demotions"],
         "fused_launches": fused,
         "launches_per_op": round(fused / max(1, total_ops), 4),
         "wall_s_dict": round(wall_dict, 2),
         "wall_s_columnar": round(wall_col, 2),
         "state_matches_oracle": state_all,
+    }
+
+
+def big_dir_report(*, n_children: int = 100_000, n_ops: int = 400,
+                   batch_size: int = 1000, seed: int = 23) -> Dict:
+    """Million-entry-directory bench (paper §6: subtree ops as "many small
+    parallel transactions" that do NOT stall the cluster).
+
+    One flat directory of ``n_children`` files is deleted through the
+    incremental subtree protocol while a BIG_DIR_MIX side trace keeps
+    running — the delete's pace hook replays one adjacent op between
+    every chunk commit, so the reported paced p50/p99 are latencies
+    *measured while the subtree op holds its lock*, compared against the
+    identical mix with no subtree op running.  Run on both backends: the
+    dict oracle and the columnar store (whose du aggregation + phase-2
+    wave advisory launch the fused treeagg kernel), with ``dump_state``
+    byte-equality across backends AND incremental-vs-legacy as the locks.
+    """
+    from repro.core import materialize_big_dir
+    from repro.core.columnar import ColumnarMetadataStore
+    from repro.core.ops_registry import WorkloadOp
+    from repro.core.workload import BIG_DIR_MIX, make_big_dir_namespace
+
+    def build(store_cls, n_kids):
+        store = store_cls(n_datanodes=4)
+        format_fs(store)
+        cluster = NamenodeCluster(store, 1)
+        nn = cluster.namenodes[0]
+        ns, big, _ = make_big_dir_namespace(n_kids)
+        materialize_namespace(nn, ns)
+        materialize_big_dir(nn, big, n_kids)
+        nn.subtree.batch_size = batch_size
+        return store, nn, ns, big
+
+    def pct(lat, q):
+        if not lat:
+            return 0.0
+        s = sorted(lat)
+        return round(s[min(len(s) - 1, int(q * len(s)))] * 1e3, 3)
+
+    def run_op(nn, wop, lat):
+        t0 = time.perf_counter()
+        try:
+            nn.invoke(wop)
+            ok = True
+        except Exception:
+            ok = False
+        lat.append(time.perf_counter() - t0)
+        return ok
+
+    runs: Dict[str, Dict] = {}
+    for backend, cls in (("dict", MetadataStore),
+                         ("columnar", ColumnarMetadataStore)):
+        store, nn, ns, big = build(cls, n_children)
+        # identical traces on both backends: same ns plan, same seeds
+        base_trace = make_spotify_trace(ns, n_ops, seed=seed,
+                                        mix=BIG_DIR_MIX)
+        paced_trace = make_spotify_trace(ns, n_ops, seed=seed + 1,
+                                         mix=BIG_DIR_MIX)
+        base_lat: List[float] = []
+        for wop in base_trace:
+            run_op(nn, wop, base_lat)
+        paced_lat: List[float] = []
+        it = iter(paced_trace)
+        paces = [0]
+        busy = [False]       # re-entrancy guard: a paced op must never
+                             # drive the pace hook again
+
+        def pace():
+            if busy[0]:
+                return
+            wop = next(it, None)
+            if wop is None:
+                return
+            busy[0] = True
+            try:
+                paces[0] += 1
+                run_op(nn, wop, paced_lat)
+            finally:
+                busy[0] = False
+
+        nn.subtree.pace = pace
+        t0 = time.time()
+        res = nn.invoke(WorkloadOp("delete_subtree", big, on_dir=True))
+        wall = time.time() - t0
+        nn.subtree.pace = None
+        for wop in it:       # drain: both backends run the full trace
+            run_op(nn, wop, paced_lat)
+        runs[backend] = {
+            "store": store,
+            "wall": wall,
+            "deleted": res.value["deleted"],
+            "stats": dict(nn.subtree.last_stats),
+            "paces": paces[0],
+            "base_p50": pct(base_lat, 0.50), "base_p99": pct(base_lat, 0.99),
+            "paced_p50": pct(paced_lat, 0.50),
+            "paced_p99": pct(paced_lat, 0.99),
+            "treeagg_launches": nn.treeagg_launches,
+            "treeagg_demotions": nn.treeagg_demotions,
+        }
+    d, c = runs["dict"], runs["columnar"]
+    state_equal = d["store"].dump_state() == c["store"].dump_state()
+
+    # incremental vs legacy differential: same (smaller) build + trace on
+    # two dict stores, only the phase-2/3 machinery differs
+    n_small = max(1000, n_children // 10)
+    dumps = []
+    for incremental in (True, False):
+        store, nn, ns, big = build(MetadataStore, n_small)
+        nn.subtree.incremental = incremental
+        for wop in make_spotify_trace(ns, min(n_ops, 100), seed=seed + 2,
+                                      mix=BIG_DIR_MIX):
+            try:
+                nn.invoke(wop)
+            except Exception:
+                pass
+        nn.invoke(WorkloadOp("delete_subtree", big, on_dir=True))
+        dumps.append(store.dump_state())
+    inc_equal = dumps[0] == dumps[1]
+
+    st = c["stats"]
+    return {
+        "n_children": n_children,
+        "total_inodes": n_children + 1,
+        "batch_size": batch_size,
+        "deleted": c["deleted"],
+        "chunks": st["chunks"],
+        "waves": st["waves"],
+        "peak_frontier": st["peak_frontier"],
+        "subtree_wall_s_dict": round(d["wall"], 2),
+        "subtree_wall_s_columnar": round(c["wall"], 2),
+        "adjacent_ops": n_ops,
+        "pace_invocations": c["paces"],
+        "baseline_p50_ms": c["base_p50"],
+        "baseline_p99_ms": c["base_p99"],
+        "paced_p50_ms": c["paced_p50"],
+        "paced_p99_ms": c["paced_p99"],
+        "p99_ratio": round(c["paced_p99"] / max(c["base_p99"], 1e-9), 2),
+        "treeagg_launches": c["treeagg_launches"],
+        "treeagg_demotions": c["treeagg_demotions"],
+        "state_matches_oracle": state_equal,
+        "incremental_matches_legacy": inc_equal,
     }
 
 
@@ -736,6 +887,8 @@ def run_replay(*, quick: bool = False, namenode_counts=(1, 4, 16),
                                n_ops=300 if quick else 600)
     columnar = columnar_report(batch_size=batch_size,
                                n_ops=300 if quick else 600)
+    big_dir = big_dir_report(n_children=4000 if quick else 100_000,
+                             n_ops=150 if quick else 400)
     return {
         "benchmark": "trace_replay_throughput",
         "paper_figure": "Fig 7 (throughput vs number of namenodes)",
@@ -760,6 +913,7 @@ def run_replay(*, quick: bool = False, namenode_counts=(1, 4, 16),
         "elasticity": elasticity,
         "overload": overload,
         "columnar": columnar,
+        "big_dir": big_dir,
     }
 
 
@@ -778,6 +932,12 @@ def bench_trace_replay(quick: bool = False) -> List[Row]:
                  f"{f['round_trip_savings_pct']}% fewer DB round trips "
                  f"at batch={f['batch_size']} "
                  f"(state match: {f['state_matches_sequential']})"))
+    bd = report["big_dir"]
+    rows.append(("trace_replay.big_dir", 0.0,
+                 f"paced delete of {bd['total_inodes']:,} inodes: "
+                 f"adjacent p99 x{bd['p99_ratio']}, "
+                 f"{bd['treeagg_launches']} treeagg launches "
+                 f"(oracle match: {bd['state_matches_oracle']})"))
     rows.append(("trace_replay.planner_savings", 0.0,
                  f"planned {f['planned_vs_reactive_savings_pct']}% fewer "
                  f"RTs vs reactive; batched "
@@ -836,7 +996,21 @@ def main() -> None:
     ap.add_argument("--namenodes", default="1,4,16",
                     help="comma-separated namenode counts")
     ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--only", choices=("big_dir",),
+                    help="run a single report section (CI uses this to "
+                         "regenerate one section without touching the "
+                         "committed artifact)")
     args = ap.parse_args()
+
+    if args.only == "big_dir":
+        t0 = time.time()
+        bd = big_dir_report(n_children=4000 if args.quick else 100_000,
+                            n_ops=150 if args.quick else 400)
+        bd["wall_s"] = round(time.time() - t0, 1)
+        args.out.write_text(json.dumps({"big_dir": bd}, indent=2) + "\n")
+        _print_big_dir(bd)
+        print(f"wrote {args.out}")
+        return
 
     counts = tuple(int(x) for x in args.namenodes.split(","))
     t0 = time.time()
@@ -910,7 +1084,20 @@ def main() -> None:
           f"demoted), wall {co['wall_s_dict']} s dict -> "
           f"{co['wall_s_columnar']} s columnar, "
           f"state_matches_oracle={co['state_matches_oracle']}")
+    _print_big_dir(report["big_dir"])
     print(f"wrote {args.out}")
+
+
+def _print_big_dir(bd: Dict) -> None:
+    print(f"big_dir: paced delete of {bd['total_inodes']:,} inodes in "
+          f"{bd['chunks']} chunks ({bd['waves']} waves, peak frontier "
+          f"{bd['peak_frontier']:,}), wall {bd['subtree_wall_s_dict']} s "
+          f"dict / {bd['subtree_wall_s_columnar']} s columnar; adjacent "
+          f"p99 {bd['baseline_p99_ms']} -> {bd['paced_p99_ms']} ms "
+          f"({bd['p99_ratio']}x), {bd['treeagg_launches']} treeagg "
+          f"launches ({bd['treeagg_demotions']} demoted), "
+          f"state_matches_oracle={bd['state_matches_oracle']}, "
+          f"incremental_matches_legacy={bd['incremental_matches_legacy']}")
 
 
 if __name__ == "__main__":

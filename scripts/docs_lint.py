@@ -38,7 +38,13 @@ Checks:
     differential bench, docs/ARCHITECTURE.md's columnar-engine section)
     carries the full metric set, shows the oracle lock holding
     (`state_matches_oracle` true) and genuinely fused kernel launches
-    (launch count strictly below op count).
+    (launch count strictly below op count);
+  * the artifact's `big_dir` section (§6 subtree protocol at 10^5-inode
+    scale, docs/ARCHITECTURE.md's million-entry-directories section)
+    carries the full metric set and its acceptance criteria hold:
+    adjacent-op p99 within 3x of the no-subtree baseline, dict/columnar
+    and incremental/legacy state equality, treeagg launches with zero
+    fallback demotions, and a genuinely paced delete.
 """
 from __future__ import annotations
 
@@ -446,6 +452,72 @@ def check_columnar_schema(artifact: Path) -> list:
     return errors
 
 
+#: metric keys the `big_dir` section of BENCH_throughput.json must carry
+#: (consumed by docs/ARCHITECTURE.md's million-entry-directories section
+#: and the subtree suites in tests/test_subtree_properties.py /
+#: tests/test_subtree_scaling.py)
+BIG_DIR_KEYS = frozenset({
+    "n_children", "total_inodes", "batch_size", "deleted", "chunks",
+    "waves", "peak_frontier", "subtree_wall_s_dict",
+    "subtree_wall_s_columnar", "adjacent_ops", "pace_invocations",
+    "baseline_p50_ms", "baseline_p99_ms", "paced_p50_ms", "paced_p99_ms",
+    "p99_ratio", "treeagg_launches", "treeagg_demotions",
+    "state_matches_oracle", "incremental_matches_legacy",
+})
+
+#: adjacent-op p99 while the paced delete runs may be at most this
+#: multiple of the no-subtree baseline (the "namespace stays live" bar)
+BIG_DIR_MAX_P99_RATIO = 3.0
+
+
+def check_big_dir_schema(artifact: Path) -> list:
+    """The bench artifact's big-directory section must exist, carry
+    every documented metric key, and satisfy the §6-at-scale acceptance
+    criteria: adjacent-op p99 within 3x of the no-subtree baseline,
+    both equality flags true, and the treeagg kernel gate genuinely
+    opened (launches >= 1 with zero fallback demotions)."""
+    if not artifact.exists():
+        return []                 # already reported by the schema check
+    try:
+        report = json.loads(artifact.read_text())
+    except Exception:
+        return []                 # already reported by the schema check
+    bd = report.get("big_dir")
+    if not isinstance(bd, dict):
+        return [f"{artifact.name}: no `big_dir` section (regenerate "
+                f"with `make bench`)"]
+    errors = []
+    for k in sorted(BIG_DIR_KEYS - set(bd)):
+        errors.append(f"{artifact.name}: big_dir section missing "
+                      f"metric `{k}`")
+    ratio = bd.get("p99_ratio")
+    if isinstance(ratio, (int, float)) \
+            and ratio > BIG_DIR_MAX_P99_RATIO:
+        errors.append(f"{artifact.name}: adjacent-op p99 degraded "
+                      f"{ratio}x during the paced delete (bar: "
+                      f"{BIG_DIR_MAX_P99_RATIO}x over the no-subtree "
+                      f"baseline)")
+    if bd.get("state_matches_oracle") is not True:
+        errors.append(f"{artifact.name}: big_dir replay diverged "
+                      f"between the dict and columnar backends "
+                      f"(state_matches_oracle != true)")
+    if bd.get("incremental_matches_legacy") is not True:
+        errors.append(f"{artifact.name}: incremental subtree engine "
+                      f"diverged from the legacy engine "
+                      f"(incremental_matches_legacy != true)")
+    if not bd.get("treeagg_launches"):
+        errors.append(f"{artifact.name}: big_dir section recorded no "
+                      f"treeagg launches — the kernel gate never opened")
+    if bd.get("treeagg_demotions"):
+        errors.append(f"{artifact.name}: big_dir run demoted "
+                      f"{bd.get('treeagg_demotions')} treeagg launches "
+                      f"to the fallback — the kernel is not healthy")
+    if not bd.get("pace_invocations"):
+        errors.append(f"{artifact.name}: big_dir delete never paced — "
+                      f"no adjacent ops interleaved between chunks")
+    return errors
+
+
 def main() -> int:
     errors = []
     for rel in DOCS:
@@ -456,6 +528,7 @@ def main() -> int:
     errors.extend(check_elasticity_schema(ROOT / "BENCH_throughput.json"))
     errors.extend(check_overload_schema(ROOT / "BENCH_throughput.json"))
     errors.extend(check_columnar_schema(ROOT / "BENCH_throughput.json"))
+    errors.extend(check_big_dir_schema(ROOT / "BENCH_throughput.json"))
     if errors:
         print("docs-lint: FAIL")
         for e in errors:

@@ -47,8 +47,8 @@ from .middleware import (CallContext, compose, failover,
                          membership_refresh, subtree_retry, txn_retry)
 from .namenode import (BATCHABLE_READ_OPS, Client, GROUP_MUTABLE_OPS,
                        Namenode, NamenodeCluster, OpOutcome, PipelineStats,
-                       PlanHint, RequestPipeline, materialize_namespace,
-                       namespace_snapshot)
+                       PlanHint, RequestPipeline, materialize_big_dir,
+                       materialize_namespace, namespace_snapshot)
 from .ops_registry import (ArgSpec, OpSpec, OpRegistry, REGISTRY, REQUIRED,
                            WorkloadOp, register_op)
 from .pool import ElasticNamenodePool, LoadSample, ScaleEvent
@@ -66,7 +66,7 @@ __all__ = [
     "GROUP_MUTABLE_OPS", "PlanHint", "BatchPlanner", "HintResolver",
     "MultiCacheResolver", "PlannedBatch", "PlannedRequestPipeline",
     "PlanReport", "WindowController",
-    "materialize_namespace", "namespace_snapshot",
+    "materialize_big_dir", "materialize_namespace", "namespace_snapshot",
     "REGISTRY", "OpRegistry", "OpSpec", "ArgSpec", "REQUIRED",
     "register_op", "WorkloadOp",
     "DFSClient", "FileStatus", "BlockLocation", "ContentSummary",

@@ -64,11 +64,15 @@ _GOLDEN2 = 0x85EBCA6B
 #: because these kernels replace *per-probe* Python work, not one hash)
 PKVAL_MIN_BATCH = 128
 HINTCHAIN_MIN_BATCH = 128
+#: treeagg gates on the inode table's SLOT count (the kernel sweeps every
+#: slot per launch), so tiny namespaces stay on the Python path entirely
+TREEAGG_MIN_BATCH = 128
 
 # per-family availability gates: a pkval failure must not latch the
 # hintchain (or phash) fallback, and vice versa
 _pkval_probe = _KernelProbe()
 _hintchain_probe = _KernelProbe()
+_treeagg_probe = _KernelProbe()
 
 _MISSING = object()          # column sentinel: row has no such key
 
@@ -228,7 +232,7 @@ class HashIndex:
 #: integer columns mirrored into flat numpy arrays per table (ids and
 #: parent pointers — what scans, joins and kernels actually consume)
 HOT_INT_COLS: Dict[str, Tuple[str, ...]] = {
-    "inode": ("id", "parent_id"),
+    "inode": ("id", "parent_id", "size", "is_dir"),
     "block": ("block_id", "inode_id"),
     "lease": (),
 }
@@ -839,3 +843,89 @@ def prevalidate_chains(store: MetadataStore,
     demoted, probes, used = _validate_chains(
         hindex, chains, min_batch=min_batch, interpret=interpret)
     return [k not in demoted for k in range(len(chains))], probes, used
+
+
+# ---------------------------------------------------------------------------
+# fused subtree wave expansion (treeagg kernel launch site)
+# ---------------------------------------------------------------------------
+
+
+class WaveExpansion:
+    """One BFS wave resolved in a single fused treeagg launch.
+
+    ``wave`` is the sorted unique member ids the per-member arrays are
+    aligned to; ``counts``/``dirs``/``sizes`` are int64 segment sums over
+    each member's direct children; ``child_ids``/``child_dir_ids`` the
+    children themselves (``child_dir_ids`` is the next frontier); ``used``
+    whether the Pallas kernel ran (False = numpy-oracle fallback, i.e. a
+    demotion above the gate)."""
+
+    __slots__ = ("wave", "counts", "dirs", "sizes", "child_ids",
+                 "child_dir_ids", "used")
+
+    def __init__(self, wave, counts, dirs, sizes, child_ids,
+                 child_dir_ids, used):
+        self.wave = wave
+        self.counts = counts
+        self.dirs = dirs
+        self.sizes = sizes
+        self.child_ids = child_ids
+        self.child_dir_ids = child_dir_ids
+        self.used = used
+
+    @property
+    def n_children(self) -> int:
+        return int(self.counts.sum())
+
+
+def expand_wave(store: MetadataStore, wave_ids: Iterable[int], *,
+                min_batch: Optional[int] = None,
+                interpret: bool = True) -> Optional["WaveExpansion"]:
+    """Resolve one subtree BFS wave — every member's direct children plus
+    the ``du``/``content_summary`` segment sums — in ONE fused launch over
+    the columnar inode table's hot columns.
+
+    Returns None on the dict backend or below the slot-count gate (small
+    tables then behave identically to the dict store, and whether the
+    fused path runs never depends on kernel availability — kernel and
+    numpy oracle produce bit-identical expansions above the gate).
+
+    Sizes are summed as int32 inside the launch and widened to int64 here;
+    the modeled file sizes stay far below the 2^31 partial-sum bound."""
+    if min_batch is None:
+        min_batch = TREEAGG_MIN_BATCH        # runtime lookup: patchable
+    try:
+        t = store.table("inode")
+    except Exception:
+        return None
+    if not isinstance(t, ColumnarTable) or "size" not in t._hot:
+        return None
+    par = t.hot_column("parent_id")
+    n_slots = int(par.shape[0])
+    if n_slots < max(2, min_batch):
+        return None
+    wave = np.unique(np.fromiter(wave_ids, dtype=np.int64))
+    if wave.size == 0:
+        return None
+    ids = t.hot_column("id")
+    isdir = np.maximum(t.hot_column("is_dir"), 0)   # cleared slots: -1 -> 0
+    size = np.maximum(t.hot_column("size"), 0)
+
+    def kern():
+        from ..kernels.treeagg.ops import treeagg_expand
+        return treeagg_expand(wave, par, isdir, size, interpret=interpret)
+
+    def fallb():
+        from ..kernels.treeagg.ref import treeagg_ref
+        return treeagg_ref(wave.astype(np.int32), par.astype(np.int32),
+                           isdir.astype(np.int32), size.astype(np.int32))
+
+    (seg, counts, dirs, sizes), used = _with_phash_kernel(
+        kern, fallb, n_keys=n_slots, min_batch=min_batch,
+        probe=_treeagg_probe)
+    hit = seg >= 0
+    child_ids = ids[hit]
+    child_dir_ids = child_ids[isdir[hit] == 1]
+    return WaveExpansion(wave, counts.astype(np.int64),
+                         dirs.astype(np.int64), sizes.astype(np.int64),
+                         child_ids, child_dir_ids, used)

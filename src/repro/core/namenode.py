@@ -195,12 +195,24 @@ class Namenode:
         self.pkval_launches = 0
         self.pkval_probes = 0
         self.pkval_demotions = 0
+        # fused subtree/aggregation telemetry lives on ops + subtree;
+        # see the treeagg_launches/treeagg_demotions properties below
         # prebuilt default retry chain — the batch hot path must not
         # recompose middleware per op. txn_retry sits inside: a lock
         # timeout under concurrent workers aborted atomically (§7.5), so
         # the op re-runs instead of surfacing a spurious failure
         self._safe_handler = compose([subtree_retry(), txn_retry()],
                                      lambda ctx: self.invoke(ctx.wop))
+
+    @property
+    def treeagg_launches(self) -> int:
+        """Fused treeagg launches across this NN's two launch sites: the
+        du/content aggregation (ops) and phase-2 wave advisory (subtree)."""
+        return self.ops.treeagg_launches + self.subtree.treeagg_launches
+
+    @property
+    def treeagg_demotions(self) -> int:
+        return self.ops.treeagg_demotions + self.subtree.treeagg_demotions
 
     def is_leader(self) -> bool:
         return self.election.leader() == self.nn_id
@@ -1327,3 +1339,26 @@ def materialize_namespace(nn: Namenode, ns) -> int:
         except FSError:
             pass
     return len(ns.dirs) + len(ns.files)
+
+
+def materialize_big_dir(nn: Namenode, path: str, n_children: int, *,
+                        file_prefix: str = "f") -> int:
+    """Bulk-load a flat directory of ``n_children`` file inodes (the
+    million-entry-directory scenario's fixture).
+
+    Test/bench scaffolding, not a modeled op: the directory itself is
+    created through the normal op path, but children are direct table
+    puts — no transactions, no mtime ticks — so loading the same plan
+    into two stores leaves them byte-identical.  Ids still come from the
+    namenode's allocator, keeping ``id_seq`` consistent for follow-on
+    ops.  Returns the directory's inode id."""
+    from .tables import make_inode
+    nn.ops.mkdirs(path)
+    t = nn.store.table("inode")
+    parent = ROOT_ID
+    for name in split_path(path):
+        parent = t.get((parent, name))["id"]
+    for i in range(n_children):
+        iid = nn.ops.inode_ids.next_id()
+        t.put(make_inode(iid, parent, f"{file_prefix}{i:06d}", False))
+    return parent

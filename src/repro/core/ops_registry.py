@@ -443,6 +443,7 @@ register_op("set_replication", "ops", "set_replication",
             group_mutable=True, group_apply=_apply_setattr("repl"),
             group_aux=_aux_setattr)
 register_op("content_summary", "ops", "content_summary", read_only=True)
+register_op("du", "ops", "du", read_only=True)
 register_op("set_quota", "ops", "set_quota",
             args=(("ns_quota", -1), ("ss_quota", -1)))
 register_op("truncate", "ops", "truncate", args=(("new_size", 0),),
@@ -570,6 +571,7 @@ MIX_BINDINGS: Dict[str, MixBuilder] = {
     "ls": _target_file_or_dir("ls"),
     "stat": _target_file_or_dir("stat"),
     "content_summary": _target_file_or_dir("content_summary"),
+    "du": _target_file_or_dir("du"),
 }
 
 

@@ -88,6 +88,27 @@ WRITE_HEAVY_MIX: List[Tuple[str, float, float]] = [
 ]
 
 
+# Adjacent-traffic mix for the big-directory scenario: what the cluster
+# keeps serving NEXT TO a paced delete-subtree.  Read-heavy like the
+# Spotify mix but with a visible deep-aggregation share (du +
+# content_summary — the ops the treeagg kernel fuses on the columnar
+# backend).  Deliberately NO subtree-mutating ops ("delete"/"rename" on
+# dirs): the pace hook replays these records from inside a running
+# subtree op, which must never nest another one.
+# Same (op, weight_pct, fraction_on_directories) schema as TABLE1_MIX.
+BIG_DIR_MIX: List[Tuple[str, float, float]] = [
+    ("read",            33.0, 0.0),
+    ("stat",            15.0, 0.25),
+    ("ls",              13.0, 0.9),
+    ("create",          12.0, 0.0),
+    ("du",               8.0, 0.7),
+    ("content_summary",  7.0, 0.7),
+    ("mkdirs",           5.0, 1.0),
+    ("set_permissions",  4.0, 0.0),
+    ("set_owner",        3.0, 0.0),
+]
+
+
 @dataclass
 class NamespaceSpec:
     """Spotify-like namespace shape (§7.4)."""
@@ -146,6 +167,21 @@ class SyntheticNamespace:
 
     def sample_dir(self, rng: random.Random) -> str:
         return rng.choice(self.dirs)
+
+
+def make_big_dir_namespace(n_children: int, *, n_side_dirs: int = 12,
+                           files_per_dir: int = 4, seed: int = 7,
+                           big_path: str = "/bigdir"
+                           ) -> Tuple[SyntheticNamespace, str, int]:
+    """Namespace plan for the big-directory scenario: a small *side*
+    namespace serving adjacent traffic, plus one flat directory of
+    ``n_children`` files that subtree ops target (materialize it with
+    ``namenode.materialize_big_dir``).  The big dir is NOT in the side
+    namespace's live path sets, so sampled adjacent ops never collide
+    with the subtree lock.  Returns ``(side_ns, big_path, n_children)``."""
+    ns = SyntheticNamespace(NamespaceSpec(seed=seed), n_dirs=n_side_dirs,
+                            files_per_dir=files_per_dir)
+    return ns, big_path, n_children
 
 
 class SpotifyWorkload:

@@ -1,0 +1,28 @@
+"""Numpy oracle for the treeagg kernel (also its fallback)."""
+import numpy as np
+
+
+def treeagg_ref(wave, par, isdir, size):
+    """Bit-identical host mirror of the fused wave-expansion kernel:
+    ``seg`` [C] int32 (wave index each slot is a child of, -1 = none) plus
+    per-wave-member int32 segment sums ``counts`` / ``dirs`` / ``sizes``.
+    ``wave`` must be sorted ascending (padding, if any, at the top)."""
+    wave = np.asarray(wave, dtype=np.int32)
+    par = np.asarray(par, dtype=np.int32)
+    isdir = np.asarray(isdir, dtype=np.int32)
+    size = np.asarray(size, dtype=np.int32)
+    w = wave.shape[0]
+    # lower-bound binary search, same as the kernel's rolled fori_loop
+    idx = np.searchsorted(wave, par).astype(np.int32)
+    found = (par >= 0) & (idx < w)
+    if w:
+        found &= wave[np.minimum(idx, w - 1)] == par
+    seg = np.where(found, idx, np.int32(-1)).astype(np.int32)
+    counts = np.zeros(w, np.int32)
+    dirs = np.zeros(w, np.int32)
+    sizes = np.zeros(w, np.int32)
+    with np.errstate(over="ignore"):
+        np.add.at(counts, idx[found], np.int32(1))
+        np.add.at(dirs, idx[found], isdir[found])
+        np.add.at(sizes, idx[found], size[found])
+    return seg, counts, dirs, sizes

@@ -174,6 +174,37 @@ def test_crash_between_subtree_chunks_survivor_reclaims(make_cluster):
     assert inv.lock_violations() == []
 
 
+def test_crash_midway_through_paced_big_dir_delete(make_cluster):
+    """Compose test for the incremental engine (ISSUE 10): the executing
+    namenode dies at a ``subtree_chunk`` boundary midway through a PACED
+    delete of a 10^4-inode directory.  The pace hook (the point where
+    adjacent ops interleave) must have run before the crash, the survivor
+    must reclaim the dead owner's stale flag and re-drive the delete to
+    completion, and the final namespace must equal a fresh cluster that
+    never held the big directory at all."""
+    from repro.core import materialize_big_dir
+    store, cluster = make_cluster(2, dirs=("/w",))
+    materialize_big_dir(cluster.namenodes[0], "/big", 10_000)
+    paces = [0]
+    for nn in cluster.namenodes:
+        nn.subtree.batch_size = 512
+        nn.subtree.pace = lambda: paces.__setitem__(0, paces[0] + 1)
+    inj = FaultInjector(
+        ChaosPlan((Fault(FaultSite.SUBTREE_CHUNK, at=6),)), cluster)
+    rep = replay_with_recovery(
+        cluster, [WorkloadOp("delete_subtree", "/big")], injector=inj,
+        batch_size=1)
+    assert [e.action for e in inj.injected] == ["killed"]
+    assert paces[0] >= 6                     # interleaving ran pre-crash
+    assert rep.ok == 1 and rep.recovery_rounds >= 1
+    assert store.table("inode").scan_index("name", "big") == []
+    inv = RecoveryInvariants(store, cluster)
+    assert inv.orphan_violations() == []
+    assert inv.lock_violations() == []
+    oracle_store, _ = make_cluster(1, dirs=("/w",))
+    assert namespace_snapshot(store) == namespace_snapshot(oracle_store)
+
+
 def test_heartbeat_fault_moves_leadership_and_lease_recovery(make_cluster):
     """Leader death detected through the election itself: the HEARTBEAT
     fault suppresses the victim's liveness proof (it dies instead of

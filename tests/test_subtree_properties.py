@@ -1,0 +1,260 @@
+"""Differential property suite for subtree operations (§6): ARBITRARY
+interleaved sequences of subtree ops (delete_subtree / rename_subtree /
+chmod_subtree / chown_subtree) and plain namespace ops (create / mkdirs /
+stat / ls / delete_file) leave every execution strategy equivalent.
+
+Two pairings are locked against each other:
+
+  1. dict vs columnar — the ``differential_replay`` conftest fixture
+     replays the same trace on both store backends; ``dump_state`` must
+     stay byte-equal and the total OpCost identical (the columnar treeagg
+     launch in subtree phase 2 is advisory and charges zero cost).
+  2. incremental vs legacy — the same trace replayed on two dict-backed
+     clusters, one with the streaming-wave subtree engine
+     (``SubtreeOps.incremental = True``, small ``wave_cap`` / chunk size
+     to force many waves and chunk commits) and one with the legacy
+     build-the-whole-tree engine. Namespaces and ``dump_state`` must be
+     byte-equal; chunk-count-dependent cost counters may differ, but each
+     run's OpCost must still conserve (per-op merge == pipeline total).
+
+Both pairings also assert zero orphan rows afterwards: no surviving
+``ongoing_subtree_ops`` row, no inode left with ``subtree_lock`` set, no
+block row referencing a missing inode, and no lease_path row surviving
+the leader scrub.
+
+Fixed-seed regressions run everywhere; the hypothesis property suite at
+the bottom engages only where hypothesis is installed, under the pinned
+derandomized "chaos" profile from conftest.
+"""
+import random
+
+import pytest
+
+from repro.core import (MetadataStore, NamenodeCluster, OpCost,
+                        RequestPipeline, WorkloadOp, format_fs,
+                        namespace_snapshot)
+
+# Small closed path universe with TWO levels of directories so subtree
+# ops regularly hit non-trivial trees, and collisions (delete of a miss,
+# rename onto a live target, chmod of a just-deleted root) stay frequent.
+ROOTS = [f"/s{i}" for i in range(3)]
+SUBS = [f"d{j}" for j in range(3)]
+NAMES = [f"f{k}" for k in range(4)]
+CLIENTS = ["c0", "c1"]
+
+
+def _op_from(rng):
+    root = rng.choice(ROOTS)
+    sub = f"{root}/{rng.choice(SUBS)}"
+    d = rng.choice((root, sub))
+    f = f"{d}/{rng.choice(NAMES)}"
+    kind = rng.randrange(10)
+    if kind == 0:
+        return WorkloadOp("mkdirs", sub)
+    if kind == 1:
+        return WorkloadOp("create", f,
+                          args={"client": rng.choice(CLIENTS)})
+    if kind == 2:
+        return WorkloadOp("delete_file", f)
+    if kind == 3:
+        return WorkloadOp("delete_subtree", d, on_dir=True)
+    if kind == 4:
+        dst_root = rng.choice(ROOTS)
+        return WorkloadOp("rename_subtree", d,
+                          f"{dst_root}/m{rng.randrange(3)}", on_dir=True)
+    if kind == 5:
+        return WorkloadOp("chmod_subtree", d,
+                          args={"perm": rng.choice((0o750, 0o700))},
+                          on_dir=True)
+    if kind == 6:
+        return WorkloadOp("chown_subtree", d,
+                          args={"owner": rng.choice(CLIENTS)},
+                          on_dir=True)
+    if kind == 7:
+        return WorkloadOp("stat", f)
+    if kind == 8:
+        return WorkloadOp("ls", d, on_dir=True)
+    return WorkloadOp("content_summary", d, on_dir=True)
+
+
+def _random_trace(seed, n_ops=40):
+    rng = random.Random(seed)
+    # always re-create the roots early so subtree ops have targets even
+    # after an early delete_subtree wipes one out
+    trace = [WorkloadOp("mkdirs", r) for r in ROOTS]
+    trace += [_op_from(rng) for _ in range(n_ops)]
+    return trace
+
+
+def _inode_ids(store):
+    ids = set()
+    for part in store.table("inode").parts:
+        for row in part.values():
+            ids.add(row["id"])
+    return ids
+
+
+def _subtree_orphans(store, cluster):
+    """(ongoing rows, locked inodes, orphan blocks, orphan lease_paths)."""
+    ids = _inode_ids(store)
+    ongoing = [r for part in store.table("ongoing_subtree_ops").parts
+               for r in part.values()]
+    locked = [r["id"] for part in store.table("inode").parts
+              for r in part.values() if r.get("subtree_lock")]
+    blocks = [r for part in store.table("block").parts
+              for r in part.values() if r["inode_id"] not in ids]
+    for _ in range(10):
+        if cluster.scrub_leases() == 0:
+            break
+    lps = [r for part in store.table("lease_path").parts
+           for r in part.values() if r["inode_id"] not in ids]
+    return ongoing, locked, blocks, lps
+
+
+def _assert_clean(store, cluster):
+    ongoing, locked, blocks, lps = _subtree_orphans(store, cluster)
+    assert ongoing == [], f"orphan ongoing_subtree_ops rows: {ongoing}"
+    assert locked == [], f"inodes left subtree-locked: {locked}"
+    assert blocks == [], f"orphan block rows: {blocks}"
+    assert lps == [], f"orphan lease_path rows survived scrub: {lps}"
+
+
+def _check_cost_conserved(stats):
+    per_nn = OpCost()
+    for c in stats.per_nn_cost.values():
+        per_nn.merge(c)
+    per_op = OpCost()
+    for o in stats.outcomes:
+        if o.ok:
+            per_op.merge(o.result.cost)
+    assert per_nn.as_dict() == stats.total_cost.as_dict() \
+        == per_op.as_dict()
+
+
+def _check_backends_equivalent(dres, cres):
+    (ds, dc, dstats), (cs, cc, cstats) = dres, cres
+    assert ds.dump_state() == cs.dump_state()
+    assert namespace_snapshot(ds) == namespace_snapshot(cs)
+    assert [o.ok for o in dstats.outcomes] == \
+        [o.ok for o in cstats.outcomes]
+    for stats in (dstats, cstats):
+        _check_cost_conserved(stats)
+    # the advisory treeagg launch charges zero cost, so totals stay equal
+    assert dstats.total_cost.as_dict() == cstats.total_cost.as_dict()
+    for store, cluster in ((ds, dc), (cs, cc)):
+        _assert_clean(store, cluster)
+    assert ds.dump_state() == cs.dump_state()
+
+
+def _replay_mode(wops, *, incremental, batch_size=3, wave_cap=4):
+    """Replay on a fresh dict-backed cluster with the subtree engine
+    forced to one mode. Tiny chunk / wave knobs make even these small
+    trees exercise multi-chunk commits and multi-slice waves."""
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    cluster = NamenodeCluster(store, 1)
+    for nn in cluster.namenodes:
+        nn.subtree.incremental = incremental
+        nn.subtree.batch_size = batch_size
+        nn.subtree.wave_cap = wave_cap
+    stats = RequestPipeline(cluster, batch_size=1).run(list(wops))
+    return store, cluster, stats
+
+
+def _check_modes_equivalent(wops):
+    inc = _replay_mode(wops, incremental=True)
+    leg = _replay_mode(wops, incremental=False)
+    (is_, ic, istats), (ls_, lc, lstats) = inc, leg
+    assert is_.dump_state() == ls_.dump_state()
+    assert namespace_snapshot(is_) == namespace_snapshot(ls_)
+    assert [o.ok for o in istats.outcomes] == \
+        [o.ok for o in lstats.outcomes]
+    for stats in (istats, lstats):
+        _check_cost_conserved(stats)
+    for store, cluster in ((is_, ic), (ls_, lc)):
+        _assert_clean(store, cluster)
+
+
+# ---------------------------------------------------------------------------
+# fixed-seed regressions (run everywhere, hypothesis or not)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_subtree_differential_fixed_seeds(differential_replay, seed):
+    d, c = differential_replay(_random_trace(seed),
+                               pipeline="sequential")
+    _check_backends_equivalent(d, c)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_incremental_vs_legacy_fixed_seeds(seed):
+    _check_modes_equivalent(_random_trace(seed))
+
+
+@pytest.mark.parametrize("seed", [300, 301])
+def test_subtree_differential_two_namenodes(differential_replay, seed):
+    d, c = differential_replay(_random_trace(seed, n_ops=60),
+                               pipeline="reactive", n_namenodes=2,
+                               batch_size=4)
+    _check_backends_equivalent(d, c)
+
+
+# ---------------------------------------------------------------------------
+# property suite (engages only where hypothesis is installed)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _root = st.sampled_from(ROOTS)
+    _dir = st.one_of(_root, st.builds(lambda r, s: f"{r}/{s}",
+                                      _root, st.sampled_from(SUBS)))
+    _file = st.builds(lambda d, n: f"{d}/{n}",
+                      _dir, st.sampled_from(NAMES))
+    _client = st.sampled_from(CLIENTS)
+
+    _op = st.one_of(
+        st.builds(lambda d: WorkloadOp("mkdirs", d), _dir),
+        st.builds(lambda f, c: WorkloadOp("create", f,
+                                          args={"client": c}),
+                  _file, _client),
+        st.builds(lambda f: WorkloadOp("delete_file", f), _file),
+        st.builds(lambda d: WorkloadOp("delete_subtree", d, on_dir=True),
+                  _dir),
+        st.builds(lambda s, r, i: WorkloadOp("rename_subtree", s,
+                                             f"{r}/m{i}", on_dir=True),
+                  _dir, _root, st.integers(min_value=0, max_value=2)),
+        st.builds(lambda d, p: WorkloadOp("chmod_subtree", d,
+                                          args={"perm": p}, on_dir=True),
+                  _dir, st.sampled_from((0o750, 0o700))),
+        st.builds(lambda d, c: WorkloadOp("chown_subtree", d,
+                                          args={"owner": c}, on_dir=True),
+                  _dir, _client),
+        st.builds(lambda f: WorkloadOp("stat", f), _file),
+        st.builds(lambda d: WorkloadOp("ls", d, on_dir=True), _dir),
+        st.builds(lambda d: WorkloadOp("content_summary", d, on_dir=True),
+                  _dir),
+    )
+    _trace = st.lists(_op, min_size=1, max_size=40).map(
+        lambda ops: [WorkloadOp("mkdirs", r) for r in ROOTS] + ops)
+
+    _SETTINGS = dict(
+        suppress_health_check=[HealthCheck.function_scoped_fixture,
+                               HealthCheck.too_slow],
+        deadline=None)
+
+    @given(wops=_trace)
+    @settings(**_SETTINGS)
+    def test_subtree_differential_property(differential_replay, wops):
+        d, c = differential_replay(wops, pipeline="sequential")
+        _check_backends_equivalent(d, c)
+
+    @given(wops=_trace)
+    @settings(max_examples=10, **_SETTINGS)
+    def test_incremental_vs_legacy_property(wops):
+        _check_modes_equivalent(wops)

@@ -1,0 +1,146 @@
+"""Scaling guards for the incremental subtree protocol (§6).
+
+Three regressions this suite pins down:
+
+  1. phase-2 work is LINEAR in subtree size — a 10x bigger directory
+     costs ~10x the scanned rows and ~10x the chunk commits, never
+     ~100x (the legacy engine re-walking state per wave would show up
+     here);
+  2. the streaming engine's peak resident frontier is bounded by level
+     width + chunk size on multi-level trees — NOT by subtree size, the
+     whole point of replacing materialize-the-whole-tree;
+  3. deep trees: the phase-1 overlap check is O(depth + active rows)
+     ``scan_index`` hops, not O(active x depth), and a depth-1100 chain
+     deletes fine on BOTH engines (the legacy post-order is iterative —
+     recursion would blow the 1000-frame default stack).
+"""
+import pytest
+
+from repro.core import (MetadataStore, NamenodeCluster, WorkloadOp,
+                        format_fs, materialize_big_dir)
+from repro.core.tables import ROOT_ID, make_inode
+
+
+def _cluster(n_namenodes=1):
+    store = MetadataStore(n_datanodes=4)
+    format_fs(store)
+    return store, NamenodeCluster(store, n_namenodes)
+
+
+def _flat_delete(n_children, *, batch_size=500):
+    """Delete a flat n-child directory; return the subtree stats."""
+    store, cluster = _cluster()
+    nn = cluster.namenodes[0]
+    materialize_big_dir(nn, "/big", n_children)
+    nn.subtree.batch_size = batch_size
+    res = nn.invoke(WorkloadOp("delete_subtree", "/big", on_dir=True))
+    assert res.value["deleted"] == n_children + 1
+    return dict(nn.subtree.last_stats)
+
+
+def _make_chain(nn, depth, *, name="c"):
+    """A depth-deep directory chain under /, via direct table puts.
+    Returns the inode id of the DEEPEST directory."""
+    t = nn.store.table("inode")
+    parent = ROOT_ID
+    for i in range(depth):
+        iid = nn.ops.inode_ids.next_id()
+        t.put(make_inode(iid, parent, f"{name}{i}", True))
+        parent = iid
+    return parent
+
+
+def test_phase2_work_linear_in_children():
+    n = 1000
+    small = _flat_delete(n)
+    big = _flat_delete(10 * n)
+    assert small["scanned"] == n
+    assert big["scanned"] == 10 * n
+    # chunk commits scale with inodes/batch, not inodes^2
+    assert big["chunks"] <= 11 * small["chunks"]
+    # flat dirs arrive in one scan, so the frontier IS the directory —
+    # linear in inode count, and exactly one wave each
+    assert big["peak_frontier"] <= 11 * small["peak_frontier"]
+    assert small["waves"] == big["waves"] == 1
+
+
+def test_streaming_frontier_bounded_by_level_not_subtree():
+    """100 dirs x 100 files: the whole tree is 10,101 inodes but the
+    streaming engine should never hold more than one wave of dirs plus
+    one chunk's worth of pending files resident."""
+    store, cluster = _cluster()
+    nn = cluster.namenodes[0]
+    sub = nn.subtree
+    sub.batch_size = 200
+    t = store.table("inode")
+    nn.ops.mkdirs("/big")
+    big_id = t.get((ROOT_ID, "big"))["id"]
+    total = 1
+    for d in range(100):
+        did = nn.ops.inode_ids.next_id()
+        t.put(make_inode(did, big_id, f"d{d:03d}", True))
+        total += 1
+        for f in range(100):
+            fid = nn.ops.inode_ids.next_id()
+            t.put(make_inode(fid, did, f"f{f:03d}", False))
+            total += 1
+    res = nn.invoke(WorkloadOp("delete_subtree", "/big", on_dir=True))
+    assert res.value["deleted"] == total == 10_101
+    st = sub.last_stats
+    # resident high-water mark: the 100-dir level + one dir's children +
+    # a chunk of pending files — an order of magnitude under the subtree
+    assert st["peak_frontier"] < total / 10, st["peak_frontier"]
+    assert st["scanned"] == total - 1
+
+
+def test_overlap_check_linear_on_deep_trees():
+    """k live subtree ops against a depth-d target must cost O(d + k)
+    ancestor hops, not O(k x d): the memoized walk learns each chain."""
+    store, cluster = _cluster(2)
+    nn, nn2 = cluster.namenodes
+    deep = _make_chain(nn, 1000)
+    # 40 active subtree ops owned by a LIVE peer namenode, each rooted
+    # at a node of a second deep chain — disjoint from the target, but
+    # every naive descendant test would walk ~1000 hops for each
+    other_top_rows = []
+    t = store.table("inode")
+    parent = ROOT_ID
+    for i in range(1000):
+        iid = nn.ops.inode_ids.next_id()
+        t.put(make_inode(iid, parent, f"o{i}", True))
+        parent = iid
+        if i >= 960:
+            other_top_rows.append(iid)
+    ongoing = store.table("ongoing_subtree_ops")
+    for iid in other_top_rows:
+        ongoing.put({"inode_id": iid, "namenode_id": nn2.ops.nn_id,
+                     "op": "subtree"})
+    nn.subtree.ancestor_scans = 0
+    deep_path = "/" + "/".join(f"c{i}" for i in range(1000))
+    res = nn.invoke(WorkloadOp("chmod_subtree", deep_path,
+                               args={"perm": 0o700}, on_dir=True))
+    assert res is not None
+    hops = nn.subtree.ancestor_scans
+    # one walk up the target chain (~1000) + one walk up the longest
+    # active chain (~1000, memoized for the other 39) + k memo lookups.
+    # The quadratic form is ~40 x 1000 = 40,000.
+    assert hops <= 4000, hops
+
+
+@pytest.mark.parametrize("incremental", [True, False])
+def test_deep_chain_delete_both_engines(incremental):
+    """depth-1100 > the default recursion limit: post-order must be
+    iterative, and the streaming engine must cap its waves."""
+    store, cluster = _cluster()
+    nn = cluster.namenodes[0]
+    _make_chain(nn, 1100)
+    nn.subtree.incremental = incremental
+    nn.subtree.batch_size = 64
+    res = nn.invoke(WorkloadOp("delete_subtree", "/c0", on_dir=True))
+    assert res.value["deleted"] == 1100
+    assert store.table("inode").get((ROOT_ID, "c0")) is None
+    st = nn.subtree.last_stats
+    if incremental:
+        assert st["waves"] >= 1
+    else:
+        assert st["waves"] == 1100
